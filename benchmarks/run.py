@@ -1,0 +1,286 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  fig2   SSM operator duration vs seqlen (paper Fig 2: the 2^n staircase)
+  fig5   training throughput: single-sequence vs padding vs pack (Fig 5)
+  fig6   per-operator speedup, padding vs pack at matched tokens (Fig 6)
+  disc   packing-policy padding rates + sort overhead (paper §5)
+  roof   roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
+
+Output: ``name,us_per_call,derived`` CSV rows (plus commented context lines).
+CPU timings are for *ratios* (the paper's A100 wall-clock is not reproducible
+here); the structural effects — padding-rate, token-density, step-count —
+are hardware-independent and checked against the paper's numbers.
+
+Run: PYTHONPATH=src python -m benchmarks.run [fig2 fig5 fig6 disc roof]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6        # us
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 — SSM operator profile vs seqlen
+# ---------------------------------------------------------------------------
+
+def fig2_ssm_operator_profile():
+    """Paper Fig 2: duration staircases between powers of two because the
+    kernel pads internally; throughput rises with n at seqlen=2^n. Our XLA
+    path pads to the scan chunk (256): the same staircase appears at chunk
+    granularity. Derived column: tokens/second."""
+    print("# fig2: selective_scan duration vs seqlen "
+          "(B=1, D=256, N=16, chunk=256)")
+    from repro.kernels.ops import selective_scan
+    rng = np.random.default_rng(0)
+    D, N = 256, 16
+    f = jax.jit(lambda u, dt, A, Bm, Cm, Dk: selective_scan(
+        u, dt, A, Bm, Cm, Dk, None, backend="xla", xla_chunk=256))
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(D, N)), jnp.float32))
+    Dk = jnp.ones((D,), jnp.float32)
+    for L in [192, 256, 320, 448, 512, 640, 768, 1024, 1280, 1536, 2048,
+              3072, 4096]:
+        u = jnp.asarray(rng.normal(size=(1, L, D)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, D)), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(1, L, N)), jnp.float32)
+        Cm = jnp.asarray(rng.normal(size=(1, L, N)), jnp.float32)
+        us = _timeit(f, u, dt, A, Bm, Cm, Dk)
+        _row(f"fig2/ssm_seqlen_{L}", us, f"{L / (us / 1e6):.0f} tok/s")
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 — training throughput: single vs padding vs pack
+# ---------------------------------------------------------------------------
+
+def _tiny_mamba(vocab=256, d_model=128, n_layers=4):
+    from repro.configs.base import get_config
+    cfg = get_config("mamba-110m")
+    return dataclasses.replace(cfg, vocab=vocab, d_model=d_model,
+                               n_layers=n_layers, dtype="float32",
+                               scan_chunk=128)
+
+
+def fig5_training_throughput(seq_len=512, n_stream=48):
+    """Paper Fig 5 protocol: same sequence stream through the three
+    regimes; throughput = corpus tokens / wall time. Paper (A100, bf16):
+    pack/single = 3.06× (1.4B), 5.05× (110m); pack always beats padding.
+    Derived: tok/s and speedup vs single-sequence."""
+    print(f"# fig5: training throughput, tiny-mamba, seq_len={seq_len}, "
+          f"{n_stream} sequences per batch")
+    from repro.core.packing import pack, pad_to_max
+    from repro.models.lm import build_model
+    from repro.optim.adamw import AdamW, constant_schedule
+    from repro.train.trainer import make_train_step
+    from repro.data.dataset import SyntheticCorpus, CorpusConfig
+
+    cfg = _tiny_mamba()
+    model = build_model(cfg)
+    opt = AdamW(constant_schedule(1e-3))
+    step = jax.jit(make_train_step(model, opt))
+    corpus = SyntheticCorpus(CorpusConfig(
+        vocab=cfg.vocab, seed=0, len_min=seq_len // 8, len_max=seq_len,
+        mu=float(np.log(seq_len / 3.0)), sigma=0.6))
+    seqs = corpus.batch_of_sequences(0, n_stream)
+    total_tokens = sum(len(s) for s in seqs)
+
+    def regime_batches(mode):
+        if mode == "pack":
+            pb = pack(seqs, seq_len)
+            return [{"tokens": pb.tokens, "positions": pb.positions,
+                     "segment_ids": pb.segment_ids}]
+        if mode == "pad":
+            pb = pad_to_max(seqs, seq_len)
+            return [{"tokens": pb.tokens, "positions": pb.positions,
+                     "segment_ids": pb.segment_ids}]
+        out = []
+        for s in seqs:                      # single: one sequence per step
+            cap = 1 << (len(s) - 1).bit_length()
+            pb = pad_to_max([s], cap)
+            out.append({"tokens": pb.tokens, "positions": pb.positions,
+                        "segment_ids": pb.segment_ids})
+        return out
+
+    results = {}
+    for mode in ("single", "pad", "pack"):
+        batches = regime_batches(mode)
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": opt.init(params)}
+        # warmup compile for every distinct shape
+        for b in {bb["tokens"].shape: bb for bb in batches}.values():
+            state, _ = step(state, b)
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        t0 = time.perf_counter()
+        for b in batches:
+            state, m = step(state, b)
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        dt = time.perf_counter() - t0
+        results[mode] = dt
+        _row(f"fig5/{mode}", dt * 1e6,
+             f"{total_tokens / dt:.0f} tok/s over {len(batches)} step(s)")
+    _row("fig5/speedup_pack_vs_single",
+         results["single"] / results["pack"] * 100,
+         f"{results['single'] / results['pack']:.2f}x (paper: 3.06x@1.4B "
+         f"5.05x@110m bf16)")
+    _row("fig5/speedup_pack_vs_pad", results["pad"] / results["pack"] * 100,
+         f"{results['pad'] / results['pack']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig 6 — kernel-level speedup, padding vs pack
+# ---------------------------------------------------------------------------
+
+def fig6_kernel_speedup(seq_len=512):
+    """Paper Fig 6: with padding as baseline, packing shrinks GEMM + SSM
+    time by the token-density ratio; conv1d (memory-bound) gains less.
+    We time each operator fwd+bwd at 'padding' shapes (many mostly-empty
+    rows) vs 'pack' shapes (few dense rows) for the SAME real tokens."""
+    print(f"# fig6: per-operator fwd+bwd time, padding vs pack "
+          f"(matched real tokens, seq_len={seq_len})")
+    from repro.core.packing import pack, pad_to_max
+    from repro.data.dataset import SyntheticCorpus, CorpusConfig
+    from repro.kernels.ops import selective_scan, conv1d_pack
+    rng = np.random.default_rng(0)
+    corpus = SyntheticCorpus(CorpusConfig(
+        vocab=256, seed=0, len_min=seq_len // 8, len_max=seq_len,
+        mu=float(np.log(seq_len / 3.0)), sigma=0.6))
+    seqs = corpus.batch_of_sequences(0, 24)
+    pb_pack = pack(seqs, seq_len)
+    pb_pad = pad_to_max(seqs, seq_len)
+    D, N, W = 256, 16, 4
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(D, N)), jnp.float32))
+    Dk = jnp.ones((D,), jnp.float32)
+    wconv = jnp.asarray(rng.normal(size=(W, D)), jnp.float32)
+    wproj = jnp.asarray(rng.normal(size=(D, 2 * D)) / 16, jnp.float32)
+
+    def mk(pb):
+        Bz, L = pb.tokens.shape
+        return dict(
+            x=jnp.asarray(rng.normal(size=(Bz, L, D)), jnp.float32),
+            dt=jnp.asarray(rng.uniform(0.1, 0.5, (Bz, L, D)), jnp.float32),
+            Bm=jnp.asarray(rng.normal(size=(Bz, L, N)), jnp.float32),
+            Cm=jnp.asarray(rng.normal(size=(Bz, L, N)), jnp.float32),
+            pos=pb.positions)
+
+    ssm = jax.jit(jax.grad(lambda x, d: (selective_scan(
+        x, d["dt"], A, d["Bm"], d["Cm"], Dk, d["pos"],
+        backend="xla", xla_chunk=128) ** 2).sum()))
+    conv = jax.jit(jax.grad(lambda x, d: (conv1d_pack(
+        x, wconv, None, d["pos"], backend="xla") ** 2).sum()))
+    gemm = jax.jit(jax.grad(lambda x: ((x @ wproj) ** 2).sum()))
+
+    speed = {}
+    for op_name, fn, needs in (("ssm", ssm, True), ("conv1d", conv, True),
+                               ("gemm", gemm, False)):
+        times = {}
+        for mode, pb in (("pad", pb_pad), ("pack", pb_pack)):
+            d = mk(pb)
+            args = (d["x"], d) if needs else (d["x"],)
+            times[mode] = _timeit(fn, *args)
+            _row(f"fig6/{op_name}_{mode}", times[mode],
+                 f"rows={pb.tokens.shape[0]}")
+        speed[op_name] = times["pad"] / times["pack"]
+        _row(f"fig6/{op_name}_speedup", speed[op_name] * 100,
+             f"{speed[op_name]:.2f}x (pad/pack)")
+    print(f"# fig6 note: paper fwd+bwd 3.91x overall; GEMM+SSM gain ~= "
+          f"token-density ratio, conv1d (memory-bound) gains less — here "
+          f"ssm {speed['ssm']:.2f}x gemm {speed['gemm']:.2f}x "
+          f"conv {speed['conv1d']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# §5 discussion — packing policies
+# ---------------------------------------------------------------------------
+
+def discussion_packing_policies():
+    """Paper §5: sequential 19.1% padding, local-greedy sorted 0.41% (plus
+    sort-time overhead); splitting (future work, implemented here) → ~0."""
+    print("# disc: packing policies on the paper's length distribution "
+          "(57..2048, mean~646), capacity 4096")
+    from repro.core.packing import padding_rate, pack_with_split
+    from repro.data.dataset import SyntheticCorpus
+    corpus = SyntheticCorpus()
+    lens = np.concatenate([corpus.lengths(s, 512)
+                           for s in range(8)]).tolist()
+    for policy in ("sequential", "first_fit", "sorted_greedy"):
+        t0 = time.perf_counter()
+        rate = padding_rate(lens, 4096, policy)
+        us = (time.perf_counter() - t0) * 1e6
+        ref = {"sequential": "paper 19.1%", "sorted_greedy": "paper 0.41%",
+               "first_fit": "n/a"}[policy]
+        _row(f"disc/{policy}", us, f"padding {rate * 100:.2f}% ({ref})")
+    seqs = corpus.batch_of_sequences(0, 512)
+    t0 = time.perf_counter()
+    sb = pack_with_split(seqs, 4096)
+    us = (time.perf_counter() - t0) * 1e6
+    _row("disc/split_pack", us,
+         f"padding {sb.padding_rate() * 100:.3f}% (paper future work -> 0)")
+    pad_rate = 1 - np.mean(lens) / 2048
+    _row("disc/pad_to_max_baseline", 0.0,
+         f"padding {pad_rate * 100:.1f}% (paper 66.3%)")
+
+
+# ---------------------------------------------------------------------------
+# Roofline table from dry-run artifacts
+# ---------------------------------------------------------------------------
+
+def roofline_table(out_dir="experiments/dryrun"):
+    print("# roof: per-cell roofline terms from the compiled dry-run "
+          "(v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI)")
+    if not os.path.isdir(out_dir):
+        print(f"# (no {out_dir}; run `python -m repro.launch.dryrun` first)")
+        return
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        rl = rec["roofline"]
+        t_bound = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        _row(f"roof/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+             t_bound * 1e6,
+             f"dom={rl['dominant']} comp={rl['t_compute_s'] * 1e3:.2f}ms "
+             f"mem={rl['t_memory_s'] * 1e3:.2f}ms "
+             f"coll={rl['t_collective_s'] * 1e3:.2f}ms "
+             f"frac={rl['roofline_fraction']:.3f}")
+
+
+ALL = {"fig2": fig2_ssm_operator_profile,
+       "fig5": fig5_training_throughput,
+       "fig6": fig6_kernel_speedup,
+       "disc": discussion_packing_policies,
+       "roof": roofline_table}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for k in which:
+        ALL[k]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Packing-policy comparison on the paper's length distribution (§5):
+padding rates, buffers used, sort overhead, and the split-packing
+(future-work) upper bound.
+
+    PYTHONPATH=src python examples/packing_strategies.py
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core.packing import (plan_packing, padding_rate, pack_with_split)
+from repro.data.dataset import SyntheticCorpus
+
+
+def main():
+    corpus = SyntheticCorpus()
+    lens = np.concatenate([corpus.lengths(s, 512)
+                           for s in range(8)]).tolist()
+    cap = 4096
+    total = sum(lens)
+    print(f"{len(lens)} sequences, {total} tokens, lengths "
+          f"[{min(lens)}, {max(lens)}] mean {np.mean(lens):.0f}, "
+          f"buffer capacity {cap}\n")
+    print(f"{'policy':<16}{'buffers':>8}{'padding':>10}{'plan time':>12}")
+    print("-" * 46)
+    for policy in ("sequential", "first_fit", "sorted_greedy"):
+        t0 = time.perf_counter()
+        plan = plan_packing(lens, cap, policy)
+        dt = time.perf_counter() - t0
+        rate = 1 - total / (len(plan) * cap)
+        note = {"sequential": "  <- paper default (19.1%)",
+                "sorted_greedy": "  <- paper local greedy (0.41%)",
+                "first_fit": ""}[policy]
+        print(f"{policy:<16}{len(plan):>8}{rate:>9.2%}{dt * 1e3:>10.1f}ms"
+              f"{note}")
+    seqs = corpus.batch_of_sequences(0, 512)
+    t0 = time.perf_counter()
+    sb = pack_with_split(seqs, cap)
+    dt = time.perf_counter() - t0
+    print(f"{'split (ours)':<16}{sb.tokens.shape[0]:>8}"
+          f"{sb.padding_rate():>9.2%}{dt * 1e3:>10.1f}ms"
+          f"  <- paper future work (-> 0%)")
+    print(f"\npad-to-max baseline would waste "
+          f"{1 - np.mean(lens) / 2048:.1%} (paper: 66.3%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: pack variable-length sequences, train a small Mamba, verify
+Packing–Unpacking Invariance end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config
+from repro.core.packing import pack, unpack
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.trainer import make_train_step
+
+
+def main():
+    # 1. a tiny Mamba (the paper's architecture family)
+    cfg = dataclasses.replace(get_config("mamba-110m"),
+                              d_model=128, n_layers=4, vocab=512,
+                              dtype="float32", scan_chunk=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # 2. pack variable-length sequences into one fixed buffer
+    rng = np.random.default_rng(0)
+    seqs = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+            for n in (57, 130, 75, 98, 160)]
+    pb = pack(seqs, capacity=256)
+    print(f"packed {len(seqs)} seqs (lens {[len(s) for s in seqs]}) into "
+          f"{pb.tokens.shape[0]} buffer(s) of 256; "
+          f"padding rate {pb.padding_rate():.1%}")
+
+    # 3. PUI check: packed forward == per-sequence forward
+    batch = {"tokens": pb.tokens, "positions": pb.positions,
+             "segment_ids": pb.segment_ids}
+    packed_logits = model.forward(params, batch)
+    per_seq = unpack(packed_logits, pb)
+    worst = 0.0
+    for s, lg in zip(seqs, per_seq):
+        single = {"tokens": jnp.asarray(s)[None],
+                  "positions": jnp.arange(len(s))[None],
+                  "segment_ids": jnp.ones((1, len(s)), jnp.int32)}
+        ref = model.forward(params, single)[0]
+        worst = max(worst, float(jnp.abs(ref - lg).max()))
+    print(f"PUI: max |packed - per-seq| logit diff = {worst:.2e}")
+
+    # 4. a few train steps on the packed batch
+    opt = AdamW(cosine_schedule(1e-3, warmup=2, total=20))
+    step = jax.jit(make_train_step(model, opt))
+    state = {"params": params, "opt": opt.init(params)}
+    for i in range(10):
+        state, metrics = step(state, batch)
+        if i % 3 == 0:
+            print(f"step {i}: loss {float(metrics['loss']):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

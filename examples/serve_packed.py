@@ -1,0 +1,83 @@
+"""Batched serving demo: prefill a batch of variable-length prompts
+(token-wise replay into per-layer caches), then greedy-decode continuations
+— with reset-based cache reuse across requests (the decode-side analogue of
+the paper's state isolation).
+
+    PYTHONPATH=src python examples/serve_packed.py
+"""
+import dataclasses
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config
+from repro.models.lm import build_model
+
+
+def main():
+    cfg = dataclasses.replace(get_config("mamba-110m"),
+                              d_model=128, n_layers=4, vocab=512,
+                              dtype="float32", scan_chunk=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    B, max_new = 4, 16
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (9, 17, 5, 12)]
+    max_prompt = max(len(p) for p in prompts)
+    # left-align prompts into a (B, max_prompt) grid; step the batch jointly
+    grid = np.zeros((B, max_prompt), np.int32)
+    for b, p in enumerate(prompts):
+        grid[b, :len(p)] = p
+    lens = jnp.asarray([len(p) for p in prompts])
+
+    step = jax.jit(model.decode_step)
+    cache = model.init_cache(B, max_prompt + max_new)
+
+    # --- prefill by replay: feed each prompt token; rows past their prompt
+    # length replay their last token but never advance their cursor (the
+    # cache write lands on the same slot, attention masks by cache_len).
+    last_logits = None
+    for t in range(max_prompt):
+        tok = jnp.asarray(grid[:, min(t, max_prompt - 1)][:, None])
+        cur = jnp.minimum(jnp.full((B,), t), lens - 1)
+        logits, cache = step(params, cache, tok, cur)
+        last_logits = logits
+
+    # --- greedy decode
+    outs = [[] for _ in range(B)]
+    tok = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+    for i in range(max_new):
+        for b in range(B):
+            outs[b].append(int(tok[b, 0]))
+        logits, cache = step(params, cache, tok, lens + i)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    for b, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"req{b}: prompt[{len(p)}] -> {o}")
+
+    # --- reset isolation: reuse row 0's cache for a fresh request; output
+    # must equal a fresh-cache run (PUI for serving)
+    new_prompt = prompts[2]
+    cache_fresh = model.init_cache(B, max_prompt + max_new)
+    seqs = {}
+    for name, c in (("reused", cache), ("fresh", cache_fresh)):
+        toks = []
+        cc = c
+        for t, tk in enumerate(new_prompt):
+            lg, cc = step(params, cc, jnp.full((B, 1), int(tk), jnp.int32),
+                          jnp.full((B,), t),
+                          jnp.asarray([t == 0] * B) if name == "reused"
+                          else None)
+        seqs[name] = int(jnp.argmax(lg[0]))
+    print(f"reset isolation: reused-cache next-token {seqs['reused']} == "
+          f"fresh-cache {seqs['fresh']}: {seqs['reused'] == seqs['fresh']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: PackMamba (variable-length sequence packing for Mamba training)
+as a production JAX/TPU framework. See README.md and DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""Architecture config registry. Import load_all() for side-effect
+registration of every assigned architecture + the paper's own Mamba sizes."""
+import importlib
+
+_MODULES = [
+    "recurrentgemma_2b", "stablelm_1_6b", "deepseek_coder_33b", "gemma_7b",
+    "deepseek_67b", "hubert_xlarge", "mixtral_8x22b", "moonshot_v1_16b_a3b",
+    "qwen2_vl_2b", "xlstm_125m",
+    "mamba_110m", "mamba_1_4b", "mamba_2_8b",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True
+
+
+def all_names():
+    load_all()
+    from repro.configs.base import REGISTRY
+    return sorted(REGISTRY)

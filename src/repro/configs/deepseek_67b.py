@@ -1,0 +1,17 @@
+"""deepseek-67b [dense] — llama-arch. 95L d_model=8192 64H (GQA kv=8)
+d_ff=22016 vocab=102400 [arXiv:2401.02954; hf]. Largest dense cell: the
+FSDP(data)×TP(model) sharding story is sized against this one."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=102400,
+    act="swiglu",
+    notes="pure full attention ⇒ long_500k cell skipped (quadratic).",
+))

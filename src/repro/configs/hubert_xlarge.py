@@ -1,0 +1,21 @@
+"""hubert-xlarge [audio] — encoder-only (w2v2 arch). 48L d_model=1280 16H
+(kv=16) d_ff=5120 vocab=504 [arXiv:2106.07447; unverified].
+
+The modality frontend (CNN feature extractor) is a STUB per assignment:
+input_specs() supplies precomputed frame embeddings (B, L, d_model).
+Encoder-only ⇒ bidirectional segment-masked attention, no decode shapes."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    act="geglu",
+    encoder_only=True,
+    notes="decode_32k / long_500k skipped: no autoregressive step exists.",
+))

@@ -1,0 +1,14 @@
+"""mamba-110m — the paper's smallest evaluation model (§4: 16 layers,
+d_model=1024). The PackMamba technique applies in full."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba-110m",
+    family="mamba",
+    n_layers=16,
+    d_model=1024,
+    n_heads=1, n_kv_heads=1,   # unused by mamba blocks
+    d_ff=0,
+    vocab=50280,
+    d_state=16, d_conv=4, expand=2,
+))

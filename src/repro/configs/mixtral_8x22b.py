@@ -1,0 +1,20 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA. 56L d_model=6144 48H (GQA kv=8)
+d_ff=16384 vocab=32768 [arXiv:2401.04088; hf]. Sliding window 4096 ⇒
+bounded decode cache ⇒ runs long_500k. Experts (8) < model-axis (16) ⇒
+sharding rules fall back to TP-inside-expert (see distributed/sharding.py)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=32768,
+    act="swiglu",
+    attn_window=4096,
+    n_experts=8,
+    top_k=2,
+))

@@ -1,0 +1,22 @@
+"""moonshot-v1-16b-a3b [moe] — Moonlight (kimi) 64e top-6. 48L d_model=2048
+16H (kv=16) d_ff=1408 (per expert) vocab=163840
+[hf:moonshotai/Moonlight-16B-A3B; hf]. DeepSeek-V3-style fine-grained
+experts with 2 shared experts (Moonlight convention); 64 experts shard
+cleanly over the 16-way model axis (EP)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    act="swiglu",
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    notes="pure full attention ⇒ long_500k cell skipped (quadratic).",
+))

@@ -1,0 +1,23 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution. 28L d_model=1536 12H
+(GQA kv=2) d_ff=8960 vocab=151936 [arXiv:2409.12191; hf].
+
+Backbone only per assignment: the ViT frontend is a STUB — input_specs()
+supplies precomputed patch embeddings injected at vision_positions. M-RoPE
+sections (temporal, height, width) split the rotary half-dim 16/24/24;
+under packing the 3-channel positions are per-sequence (PUI holds because
+positions are inputs)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    act="swiglu",
+    mrope_sections=(16, 24, 24),
+    notes="pure full attention ⇒ long_500k cell skipped (quadratic).",
+))

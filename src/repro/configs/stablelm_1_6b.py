@@ -1,0 +1,16 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H (MHA, kv=32) d_ff=5632
+vocab=100352 [hf:stabilityai/stablelm-2-1_6b; unverified]."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100352,
+    act="swiglu",
+    notes="pure full attention ⇒ long_500k cell skipped (quadratic).",
+))

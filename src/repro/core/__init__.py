@@ -1,0 +1,25 @@
+"""PackMamba core: packing + segment-aware sequence-wise operators.
+
+Public surface:
+  packing    — pack / unpack / pack_with_split / policies / padding_rate
+  scan       — segmented_scan (the Ā→0 reset algebra, 3 schedules)
+  ssm        — selective_scan (Mamba-1, XLA path) + decode step
+  conv       — conv1d_pack (Algorithm 1) + decode update
+  attention  — segment-masked attention (GQA/SWA/M-RoPE, online-softmax)
+  recurrence — RG-LRU, mLSTM, sLSTM with segment resets
+"""
+from repro.core.packing import (pack, unpack, pack_with_split, pad_to_max,
+                                plan_packing, padding_rate, PackedBatch)
+from repro.core.scan import segmented_scan, scan_step
+from repro.core.ssm import selective_scan, selective_scan_step
+from repro.core.conv import conv1d_pack, conv1d_pack_update
+from repro.core.attention import attention, decode_attention, rope, mrope
+from repro.core.recurrence import rglru, mlstm, slstm
+
+__all__ = [
+    "pack", "unpack", "pack_with_split", "pad_to_max", "plan_packing",
+    "padding_rate", "PackedBatch", "segmented_scan", "scan_step",
+    "selective_scan", "selective_scan_step", "conv1d_pack",
+    "conv1d_pack_update", "attention", "decode_attention", "rope", "mrope",
+    "rglru", "mlstm", "slstm",
+]

@@ -1,0 +1,204 @@
+"""Packed (segment-masked) attention — the transformer face of PackMamba.
+
+For attention-family architectures the paper's technique degenerates to the
+ByteTransformer precedent it cites: pack sequences back-to-back and replace
+the causal mask with ``causal ∧ same-segment`` (block-diagonal). This module
+provides:
+
+  * ``attention``       — GQA/MQA/MHA, causal or bidirectional, optional
+                          sliding window, segment mask; either materialized
+                          scores (short L) or an online-softmax scan over KV
+                          chunks (32k+ prefill: peak memory O(Lq·chunk), the
+                          Rabe–Staats/Flash recurrence).
+  * ``decode_attention`` — one query token against a (possibly sharded) KV
+                          cache with validity-length masking.
+  * ``rope`` / ``mrope`` — rotary embeddings over *intra-sequence* positions
+                          (using packed-buffer-global positions would violate
+                          PUI; tests check this), plus Qwen2-VL multi-section
+                          M-RoPE.
+
+Layouts: q (B, Lq, H, Dh); k, v (B, Lkv, Hkv, Dh) with H % Hkv == 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps online-softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, L, H, Dh); positions: (B, L) int — intra-sequence positions."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (Dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs    # (B, L, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray,
+          sections: Sequence[int], theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE. positions: (B, L, S) — one channel per section
+    (temporal / height / width); sections sum to Dh/2."""
+    Dh = x.shape[-1]
+    if sum(sections) != Dh // 2:
+        raise ValueError(f"M-RoPE sections {sections} must sum to {Dh // 2}")
+    freqs = rope_freqs(Dh, theta)                             # (Dh/2,)
+    # pick the position channel per rotary dim
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=Dh // 2)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                         # (B, L, S)
+        jnp.broadcast_to(sec_id, positions.shape[:2] + (Dh // 2,)), axis=-1)
+    ang = pos * freqs                                          # (B, L, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def _pair_mask(q_idx, kv_idx, seg_q, seg_kv, causal, window):
+    """Boolean (…, Lq, Lkv) allow-mask from index/segment tensors."""
+    m = jnp.ones(q_idx.shape[:-1] + (q_idx.shape[-1], kv_idx.shape[-1]),
+                 dtype=bool)
+    qi = q_idx[..., :, None]
+    ki = kv_idx[..., None, :]
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= (qi - ki) < window
+        if not causal:
+            m &= (ki - qi) < window
+    if seg_q is not None:
+        sq = seg_q[..., :, None]
+        sk = seg_kv[..., None, :]
+        m &= (sq == sk) & (sq != 0)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# core attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    """q: (B,Lq,Hkv,G,Dh); k: (B,T,Hkv,Dh) → (B,Hkv,G,Lq,T) f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              segment_ids_q: Optional[jnp.ndarray] = None,
+              segment_ids_kv: Optional[jnp.ndarray] = None,
+              causal: bool = True,
+              window: Optional[int] = None,
+              chunk_kv: Optional[int] = None,
+              scale: Optional[float] = None) -> jnp.ndarray:
+    """Segment-masked attention. Returns (B, Lq, H, Dh).
+
+    ``chunk_kv``: if set, run the online-softmax recurrence over KV chunks of
+    this size (required for 32k+ prefill where Lq·Lkv scores cannot be
+    materialized).
+    """
+    B, Lq, H, Dh = q.shape
+    _, Lkv, Hkv, _ = k.shape
+    if H % Hkv:
+        raise ValueError(f"H={H} not divisible by Hkv={Hkv}")
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Lq, Hkv, G, Dh)
+    q_idx = jnp.broadcast_to(jnp.arange(Lq), (B, Lq))
+    if segment_ids_q is None or segment_ids_kv is None:
+        segment_ids_q = segment_ids_kv = None
+    if chunk_kv is None or Lkv <= chunk_kv:
+        kv_idx = jnp.broadcast_to(jnp.arange(Lkv), (B, Lkv))
+        mask = _pair_mask(q_idx, kv_idx, segment_ids_q, segment_ids_kv,
+                          causal, window)                    # (B, Lq, Lkv)
+        s = _gqa_scores(qg, k, scale)                        # (B,Hkv,G,Lq,Lkv)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        # guard all-masked rows (padding queries)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask[:, None, None].any(-1, keepdims=True), p, 0.0)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o.reshape(B, Lq, H, Dh)
+
+    # ---- online-softmax over KV chunks (flash recurrence, pure XLA) ----
+    if Lkv % chunk_kv:
+        raise ValueError(f"Lkv={Lkv} not divisible by chunk_kv={chunk_kv}")
+    nk = Lkv // chunk_kv
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk_kv, Hkv, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk_kv, Hkv, Dh), 1, 0)
+    if segment_ids_kv is not None:
+        segc = jnp.moveaxis(segment_ids_kv.reshape(B, nk, chunk_kv), 1, 0)
+    else:
+        segc = jnp.zeros((nk, B, 0), jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, sb, c0 = inp                     # chunk kv, base index c0
+        kv_idx = c0 + jnp.broadcast_to(jnp.arange(chunk_kv), (B, chunk_kv))
+        use_seg = segment_ids_q is not None and segment_ids_kv is not None
+        mask = _pair_mask(q_idx, kv_idx,
+                          segment_ids_q if use_seg else None,
+                          sb if use_seg else None,
+                          causal, window)        # (B, Lq, chunk)
+        s = _gqa_scores(qg, kb, scale)           # (B,Hkv,G,Lq,chunk)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))        # (B,Hkv,G,Lq)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[:, None, None], p, 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(p.dtype))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Lq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Lq, Dh), jnp.float32)
+    bases = jnp.arange(nk) * chunk_kv
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, segc, bases))
+    o = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-20), 0.0)
+    o = jnp.moveaxis(o, -2, 1)                   # (B, Lq, Hkv, G, Dh)
+    return o.reshape(B, Lq, H, Dh).astype(q.dtype)
+
+
+def decode_attention(q_t: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token decode. q_t: (B, H, Dh); caches: (B, S, Hkv, Dh);
+    cache_len: (B,) number of valid cache entries (the new token's index).
+    Returns (B, H, Dh)."""
+    B, S, Hkv, Dh = k_cache.shape
+    H = q_t.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qg = q_t.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)[None, :]                              # (1, S)
+    valid = idx <= cache_len[:, None]
+    if window is not None:
+        valid &= (cache_len[:, None] - idx) < window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, H, Dh)

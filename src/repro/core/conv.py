@@ -1,0 +1,62 @@
+"""Segmented causal depthwise conv1d — the paper's conv1d_pack (Algorithm 1).
+
+Standard Mamba short conv: width-W (W=4) depthwise causal convolution along
+the sequence. In a packed buffer the window slides across sequence boundaries
+(the red line in paper Fig. 3b); Algorithm 1 truncates it: the tap that
+reaches back ``k`` positions contributes iff ``k <= position_indices[t]`` —
+i.e. the source token lies inside the same original sequence.
+
+Layout: x (B, L, D); weight (W, D); bias (D,). The op is expressed as W
+shifted masked adds, which XLA fuses into a single elementwise pass — and
+which is exactly the structure the Pallas kernel (kernels/conv1d_pack.py)
+tiles into VMEM.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d_pack(x: jnp.ndarray, weight: jnp.ndarray,
+                bias: Optional[jnp.ndarray],
+                positions: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Causal depthwise conv with boundary truncation.
+
+    x: (B, L, D); weight: (W, D); bias: (D,) or None;
+    positions: (B, L) int32 intra-sequence positions, or None (= one segment).
+    Returns (B, L, D).
+    """
+    B, L, D = x.shape
+    W = weight.shape[0]
+    y = x * weight[W - 1]                        # k = 0 tap (current token)
+    for k in range(1, W):                        # tap reaching back k positions
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :L]
+        if positions is not None:
+            valid = (positions >= k)[..., None]
+            shifted = jnp.where(valid, shifted, jnp.zeros_like(shifted))
+        y = y + shifted * weight[W - 1 - k]
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def conv1d_pack_update(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                       weight: jnp.ndarray, bias: Optional[jnp.ndarray],
+                       reset_t: Optional[jnp.ndarray] = None):
+    """Single decode step. conv_state: (B, W-1, D) trailing inputs.
+
+    reset_t: (B,) bool — start of a new sequence (clear the window).
+    Returns (y_t (B, D), new_state (B, W-1, D)).
+    """
+    Bsz, Wm1, D = conv_state.shape
+    W = Wm1 + 1
+    if reset_t is not None:
+        conv_state = jnp.where(reset_t[:, None, None],
+                               jnp.zeros_like(conv_state), conv_state)
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,D)
+    y_t = jnp.einsum("bwd,wd->bd", window, weight)
+    if bias is not None:
+        y_t = y_t + bias
+    return y_t, window[:, 1:]

@@ -1,0 +1,253 @@
+"""Sequence packing: the paper's pack()/unpack() and packing policies.
+
+A *packed batch* is a fixed-shape (B, L) buffer holding several variable-length
+sequences laid back-to-back, plus two side tensors generated at pack() time:
+
+  * ``positions``    (B, L) int32 — offset of each token inside its original
+    sequence. ``positions == 0`` marks a sequence start; this is the paper's
+    ``position_indices`` and is what the modified sequence-wise operators
+    consume (conv tap truncation, scan Ā→0 reset).
+  * ``segment_ids``  (B, L) int32 — 1-based id of the original sequence, 0 for
+    padding. Used for attention block-diagonal masks and loss masking.
+
+Packing policies (paper §5 + classics):
+  * ``sequential``  — paper's default: fill in arrival order, seal the buffer
+    when the next sequence does not fit (19.1% padding on InternLM lengths).
+  * ``sorted_greedy`` — paper's local-greedy: sort a window of sequences by
+    length descending, then first-fit (0.41% padding, extra sort cost).
+  * ``first_fit``   — first-fit over all open buffers (no sort).
+  * ``split``       — paper §5 *future work*, implemented here: a sequence may
+    be cut at a buffer boundary and continue in the next buffer with state
+    carried over (padding → 0). See ``pack_with_split``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    """One packed training batch. All arrays shaped (B, L) unless noted."""
+
+    tokens: jnp.ndarray        # int32 token ids (0 in padding)
+    positions: jnp.ndarray     # int32 intra-sequence positions (0 at starts & padding)
+    segment_ids: jnp.ndarray   # int32, 1-based per sequence, 0 = padding
+    # Bookkeeping for unpack():
+    seq_lens: Optional[List[List[int]]] = None   # per row: original lengths in order
+    seq_ids: Optional[List[List[int]]] = None    # per row: original corpus indices
+
+    @property
+    def shape(self):
+        return self.tokens.shape
+
+    def padding_rate(self) -> float:
+        return float(jnp.mean((self.segment_ids == 0).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# pack() / unpack()
+# ---------------------------------------------------------------------------
+
+def _plan_sequential(lengths: Sequence[int], capacity: int) -> List[List[int]]:
+    """Paper default: arrival order, seal buffer when next seq does not fit."""
+    rows: List[List[int]] = []
+    cur: List[int] = []
+    used = 0
+    for i, n in enumerate(lengths):
+        if n > capacity:
+            raise ValueError(f"sequence {i} length {n} exceeds capacity {capacity}")
+        if used + n > capacity:
+            rows.append(cur)
+            cur, used = [], 0
+        cur.append(i)
+        used += n
+    if cur:
+        rows.append(cur)
+    return rows
+
+
+def _plan_sorted_greedy(lengths: Sequence[int], capacity: int,
+                        window: int = 0) -> List[List[int]]:
+    """Paper §5 local greedy: sort (a window of) sequences desc, best-fit."""
+    order = list(range(len(lengths)))
+    if window and window < len(order):
+        # locality-preserving: sort inside consecutive windows only
+        chunks = [order[i:i + window] for i in range(0, len(order), window)]
+        order = [j for ch in chunks
+                 for j in sorted(ch, key=lambda k: -lengths[k])]
+    else:
+        order.sort(key=lambda k: -lengths[k])
+    return _plan_first_fit(lengths, capacity, order)
+
+
+def _plan_first_fit(lengths: Sequence[int], capacity: int,
+                    order: Optional[Sequence[int]] = None) -> List[List[int]]:
+    rows: List[List[int]] = []
+    space: List[int] = []
+    for i in (order if order is not None else range(len(lengths))):
+        n = lengths[i]
+        if n > capacity:
+            raise ValueError(f"sequence {i} length {n} exceeds capacity {capacity}")
+        for r, s in enumerate(space):
+            if s >= n:
+                rows[r].append(i)
+                space[r] -= n
+                break
+        else:
+            rows.append([i])
+            space.append(capacity - n)
+    return rows
+
+
+_POLICIES = {
+    "sequential": _plan_sequential,
+    "sorted_greedy": _plan_sorted_greedy,
+    "first_fit": _plan_first_fit,
+}
+
+
+def plan_packing(lengths: Sequence[int], capacity: int,
+                 policy: str = "sequential", **kw) -> List[List[int]]:
+    """Return list of rows; each row is a list of sequence indices."""
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown packing policy {policy!r}; have {list(_POLICIES)}")
+    return _POLICIES[policy](lengths, capacity, **kw)
+
+
+def pack(sequences: Sequence[np.ndarray], capacity: int,
+         policy: str = "sequential", num_rows: Optional[int] = None,
+         **kw) -> PackedBatch:
+    """Pack 1-D int token sequences into a (B, L=capacity) PackedBatch.
+
+    ``num_rows`` pads/limits the batch dimension to a fixed B (for static
+    shapes in jit); extra rows are all-padding.
+    """
+    lengths = [int(s.shape[0]) for s in sequences]
+    rows = plan_packing(lengths, capacity, policy, **kw)
+    B = num_rows if num_rows is not None else len(rows)
+    if len(rows) > B:
+        raise ValueError(f"packing plan needs {len(rows)} rows > num_rows={B}")
+    tokens = np.zeros((B, capacity), dtype=np.int32)
+    positions = np.zeros((B, capacity), dtype=np.int32)
+    segment_ids = np.zeros((B, capacity), dtype=np.int32)
+    seq_lens: List[List[int]] = [[] for _ in range(B)]
+    seq_ids: List[List[int]] = [[] for _ in range(B)]
+    for r, row in enumerate(rows):
+        off = 0
+        for seg, i in enumerate(row, start=1):
+            n = lengths[i]
+            tokens[r, off:off + n] = np.asarray(sequences[i], dtype=np.int32)
+            positions[r, off:off + n] = np.arange(n, dtype=np.int32)
+            segment_ids[r, off:off + n] = seg
+            seq_lens[r].append(n)
+            seq_ids[r].append(i)
+            off += n
+    return PackedBatch(jnp.asarray(tokens), jnp.asarray(positions),
+                       jnp.asarray(segment_ids), seq_lens, seq_ids)
+
+
+def unpack(batch_values: jnp.ndarray, packed: PackedBatch) -> List[np.ndarray]:
+    """Inverse of pack(): split a (B, L, ...) value tensor back into per-
+    original-sequence arrays, in original corpus order."""
+    if packed.seq_lens is None or packed.seq_ids is None:
+        raise ValueError("PackedBatch lacks unpack bookkeeping")
+    vals = np.asarray(batch_values)
+    pieces: dict[int, list] = {}
+    for r, (lens, ids) in enumerate(zip(packed.seq_lens, packed.seq_ids)):
+        off = 0
+        for n, i in zip(lens, ids):
+            # rows are visited in order, so split pieces concatenate in order
+            pieces.setdefault(i, []).append(vals[r, off:off + n])
+            off += n
+    return [np.concatenate(pieces[i], axis=0) for i in sorted(pieces)]
+
+
+# ---------------------------------------------------------------------------
+# pack_with_split — paper §5 future work (beyond-paper feature)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SplitPackedBatch(PackedBatch):
+    """Packing with boundary splitting: padding → 0 (modulo final buffer).
+
+    A sequence may be cut at a row boundary; ``carry_mask`` (B,) marks rows
+    whose *first* segment continues a sequence cut in the previous row — the
+    trainer threads recurrent state across those rows (state carry), which is
+    what the paper sketches for "parallel strategies for infinitely long
+    sequences".
+    """
+    carry_mask: Optional[jnp.ndarray] = None   # (B,) bool
+
+
+def pack_with_split(sequences: Sequence[np.ndarray], capacity: int,
+                    num_rows: Optional[int] = None) -> SplitPackedBatch:
+    stream = np.concatenate([np.asarray(s, np.int32) for s in sequences])
+    # per-token position + segment id over the flat stream
+    lengths = [int(s.shape[0]) for s in sequences]
+    pos = np.concatenate([np.arange(n, dtype=np.int32) for n in lengths])
+    seg = np.concatenate([np.full(n, i + 1, dtype=np.int32)
+                          for i, n in enumerate(lengths)])
+    total = stream.shape[0]
+    B = int(np.ceil(total / capacity)) if num_rows is None else num_rows
+    pad = B * capacity - total
+    if pad < 0:
+        raise ValueError(f"num_rows={num_rows} too small for {total} tokens")
+    stream = np.pad(stream, (0, pad))
+    pos = np.pad(pos, (0, pad))
+    seg = np.pad(seg, (0, pad))
+    tokens = stream.reshape(B, capacity)
+    positions = pos.reshape(B, capacity)
+    segment_ids = seg.reshape(B, capacity)
+    # Row r continues the previous row iff its first token is mid-sequence.
+    carry = (positions[:, 0] > 0) & (segment_ids[:, 0] > 0)
+    # positions stay *global within the original sequence* so operators know
+    # token 0 of a carried row is NOT a reset point.
+    seq_lens: List[List[int]] = []
+    seq_ids: List[List[int]] = []
+    for r in range(B):
+        row_ids, row_lens = [], []
+        for s in np.unique(segment_ids[r]):
+            if s == 0:
+                continue
+            row_ids.append(int(s) - 1)
+            row_lens.append(int((segment_ids[r] == s).sum()))
+        seq_lens.append(row_lens)
+        seq_ids.append(row_ids)
+    return SplitPackedBatch(jnp.asarray(tokens), jnp.asarray(positions),
+                            jnp.asarray(segment_ids), seq_lens, seq_ids,
+                            carry_mask=jnp.asarray(carry))
+
+
+# ---------------------------------------------------------------------------
+# padding-mode batch (the paper's baseline) + single-sequence mode
+# ---------------------------------------------------------------------------
+
+def pad_to_max(sequences: Sequence[np.ndarray], max_len: int) -> PackedBatch:
+    """Paper baseline 2: one sequence per row, zero-padded to max_len."""
+    B = len(sequences)
+    tokens = np.zeros((B, max_len), dtype=np.int32)
+    positions = np.zeros((B, max_len), dtype=np.int32)
+    segment_ids = np.zeros((B, max_len), dtype=np.int32)
+    seq_lens, seq_ids = [], []
+    for r, s in enumerate(sequences):
+        n = min(int(s.shape[0]), max_len)
+        tokens[r, :n] = np.asarray(s[:n], np.int32)
+        positions[r, :n] = np.arange(n, dtype=np.int32)
+        segment_ids[r, :n] = 1
+        seq_lens.append([n])
+        seq_ids.append([r])
+    return PackedBatch(jnp.asarray(tokens), jnp.asarray(positions),
+                       jnp.asarray(segment_ids), seq_lens, seq_ids)
+
+
+def padding_rate(lengths: Sequence[int], capacity: int,
+                 policy: str = "sequential", **kw) -> float:
+    """Fraction of buffer slots wasted by a packing plan (paper §5 metric)."""
+    rows = plan_packing(lengths, capacity, policy, **kw)
+    used = sum(lengths)
+    alloc = len(rows) * capacity
+    return 1.0 - used / alloc

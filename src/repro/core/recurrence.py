@@ -1,0 +1,283 @@
+"""Segmented recurrences beyond Mamba: RG-LRU (RecurrentGemma), mLSTM and
+sLSTM (xLSTM). All share the PackMamba boundary rule — the multiplicative
+term of the recurrence is forced to zero at ``position_indices == 0`` — which
+core/scan.py implements once for every diagonal recurrence.
+
+* RG-LRU is literally a diagonal recurrence (state (D,)): a_t = exp(-c·softplus(Λ)·r_t),
+  h_t = a_t h_{t-1} + sqrt(1-a_t²)·(i_t ⊙ x_t). One segmented_scan call.
+* mLSTM has a matrix state C (dk×dv) per head with *scalar* per-head decay.
+  Materializing per-step outer products k vᵀ is O(L·dk·dv) — prohibitive —
+  so we use the chunkwise-parallel form (inter-chunk state + intra-chunk
+  masked attention matrix), the linear-attention analogue of the chunked
+  selective scan. Stabilized with the max-plus scan m_t = max(f̃_t+m_{t-1}, ĩ_t)
+  (itself an associative segmented scan in the (max,+) semiring).
+* sLSTM is *inherently sequential* (h_{t-1} feeds the gate preactivations
+  through recurrent weights) — lax.scan over time, with h/c/n zeroed at
+  segment starts. Documented in DESIGN.md as the one op where the paper's
+  parallel-scan machinery cannot apply; resets still give exact PUI.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import segmented_scan, scan_step
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
+          a_param: jnp.ndarray, positions: Optional[jnp.ndarray] = None,
+          h0: Optional[jnp.ndarray] = None, method: str = "chunked",
+          chunk: int = 256, compute_dtype=None
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, r_gate, i_gate: (B, L, D) (gates already sigmoided); a_param: (D,).
+
+    Returns (h (B, L, D), h_last (B, D))."""
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
+        jnp.float32
+    log_a = -RGLRU_C * jax.nn.softplus(a_param.astype(cdt)) * \
+        r_gate.astype(cdt)                                   # (B, L, D) ≤ 0
+    a = jnp.exp(log_a)
+    gated = i_gate.astype(cdt) * x.astype(cdt)
+    # NOTE (PUI): the sqrt(1-a²) input normalizer uses the *gate-computed* a
+    # — exactly what an unpacked sequence sees at its own step 0 with
+    # h_{-1}=0. The PackMamba reset only zeroes the multiplicative use of a
+    # inside the recurrence (segmented_scan applies it), never the b-term.
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * gated
+    reset = (positions == 0) if positions is not None else None
+    h, h_last = segmented_scan(a, b, reset=reset, h0=h0,
+                               method=method, chunk=chunk)
+    return h.astype(x.dtype), h_last
+
+
+def rglru_step(h: jnp.ndarray, x_t: jnp.ndarray, r_t: jnp.ndarray,
+               i_t: jnp.ndarray, a_param: jnp.ndarray,
+               reset_t: Optional[jnp.ndarray] = None):
+    """Decode step. h: (B, D) f32. Returns (y_t (B, D), h_new)."""
+    cdt = jnp.float32
+    log_a = -RGLRU_C * jax.nn.softplus(a_param.astype(cdt)) * r_t.astype(cdt)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * \
+        (i_t.astype(cdt) * x_t.astype(cdt))
+    a_rec = a if reset_t is None else \
+        jnp.where(reset_t[:, None], 0.0, a)     # reset kills recurrence only
+    h_new = a_rec * h + b
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) — chunkwise-parallel matrix-state recurrence
+# ---------------------------------------------------------------------------
+
+def _maxplus_scan(logf: jnp.ndarray, logi: jnp.ndarray) -> jnp.ndarray:
+    """m_t = max(logf_t + m_{t-1}, logi_t), m_{-1} = -inf  →  (B, L, H).
+
+    Associative combine on pairs (f, i): (f1,i1)⊕(f2,i2) = (f1+f2, max(i1+f2, i2)).
+    Segment resets are encoded upstream as logf = -inf."""
+    def comb(c1, c2):
+        f1, i1 = c1
+        f2, i2 = c2
+        return f1 + f2, jnp.maximum(i1 + f2, i2)
+    _, m = jax.lax.associative_scan(comb, (logf, logi), axis=1)
+    return m
+
+
+def mlstm(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          logf: jnp.ndarray, logi: jnp.ndarray,
+          positions: Optional[jnp.ndarray] = None,
+          chunk: int = 256,
+          state: Optional[Tuple] = None,
+          return_state: bool = False):
+    """Chunked mLSTM. q,k: (B,L,H,dk); v: (B,L,H,dv); logf,logi: (B,L,H).
+
+    logf is the *log* forget gate (≤0 for sigmoid, any real for exp gate);
+    logi the log input gate. Returns h̃ (B,L,H,dv) [, (C,n,m) final state].
+    """
+    B, L, H, dk = k.shape
+    dv = v.shape[-1]
+    cdt = jnp.float32
+    NEG = jnp.asarray(-1e30, cdt)
+    logf = logf.astype(cdt)
+    logi = logi.astype(cdt)
+    reset = (positions == 0) if positions is not None else None
+    if reset is not None:
+        logf = jnp.where(reset[..., None], NEG, logf)
+
+    # global stabilizer (cheap: scalar state per (B, H))
+    if state is not None:
+        C_in0, n_in0, m_in0 = state
+        # m_{-1} = m_in0: the composite over [0..t] is (F_t, I_t) with
+        # m_t = max(F_t + m_{-1}, I_t)
+        def comb(c1, c2):
+            f1, i1 = c1
+            f2, i2 = c2
+            return f1 + f2, jnp.maximum(i1 + f2, i2)
+        F, I = jax.lax.associative_scan(comb, (logf, logi), axis=1)
+        m = jnp.maximum(F + m_in0[:, None], I)
+    else:
+        C_in0 = jnp.zeros((B, H, dk, dv), cdt)
+        n_in0 = jnp.zeros((B, H, dk), cdt)
+        m_in0 = jnp.full((B, H), NEG, cdt)
+        m = _maxplus_scan(logf, logi)
+    m = jnp.maximum(m, -1e30)  # keep finite
+
+    # stabilized per-step gates
+    m_prev = jnp.concatenate([m_in0[:, None], m[:, :-1]], axis=1)
+    logfp = jnp.clip(logf + m_prev - m, -60.0, 0.0)   # log f' ≤ 0
+    logip = jnp.clip(logi - m, -60.0, 30.0)           # log i'
+    ip = jnp.exp(logip)
+
+    # chunking — pad with IDENTITY steps (f'=1, i'=0, no reset) so the
+    # chunk-end state (return_state) is exactly the state after step L-1
+    pad = (-L) % chunk
+    if pad:
+        padc = lambda t, fill=0.0: jnp.pad(
+            t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2),
+            constant_values=fill)
+        q, k, v = padc(q), padc(k), padc(v)
+        logfp, ip = padc(logfp), padc(ip, 0.0)
+        if reset is not None:
+            reset = jnp.pad(reset, [(0, 0), (0, pad)],
+                            constant_values=False)
+    Lp = q.shape[1]
+    nc = Lp // chunk
+    scale = dk ** -0.5
+    q = q.astype(cdt) * scale                       # fold the 1/√dk into q
+    rs = lambda t: jnp.moveaxis(
+        t.reshape((B, nc, chunk) + t.shape[2:]), 1, 0)
+    qc, kc, vc, fc, ic = map(rs, (q, k.astype(cdt), v.astype(cdt), logfp, ip))
+    rc = rs(reset) if reset is not None else jnp.zeros((nc, B, chunk), bool)
+
+    def body(carry, inp):
+        C_in, n_in = carry
+        qb, kb, vb, lfb, ib, rb = inp               # (B, chunk, ...)
+        cumF = jnp.cumsum(lfb, axis=1)              # (B, chunk, H) ≤ 0
+        # carry validity: no reset so far in this chunk (inclusive of t)
+        seg = jnp.cumsum(rb.astype(jnp.int32), axis=1)   # intra-chunk seg id
+        Pt = jnp.exp(cumF) * (seg == 0)[..., None]  # decay from chunk entry
+        # intra-chunk decay matrix D[t,s] = exp(cumF_t - cumF_s) for s ≤ t in
+        # the same segment; else 0. True diffs are ≤ 0 (f' ≤ 1); clamp before
+        # exp so masked entries cannot overflow to inf·0 = NaN.
+        diff = cumF[:, :, None] - cumF[:, None]     # (B, t, s, H)
+        ok = (seg[:, :, None] == seg[:, None]) & \
+            (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None])
+        D = jnp.exp(jnp.minimum(diff, 0.0)) * ok[..., None]
+        w = jnp.einsum("bthd,bshd->btsh", qb, kb) * D * ib[:, None]
+        y_intra = jnp.einsum("btsh,bshd->bthd", w, vb)
+        # normalizer accumulates k WITHOUT q: n_t = Σ_s D[t,s]·i'_s·k_s
+        n_intra = jnp.einsum("btsh,bshd->bthd", D * ib[:, None], kb)
+        y_carry = jnp.einsum("bthd,bhde->bthe", qb, C_in) * Pt[..., None]
+        n_carry = jnp.einsum("bhd,bth->bthd", n_in, Pt)
+        y = y_intra + y_carry
+        n = n_intra + n_carry
+        # state update to end of chunk
+        PT = Pt[:, -1]                               # (B, H)
+        decay_to_end = jnp.exp(jnp.minimum(cumF[:, -1:] - cumF, 0.0)) * \
+            (seg == seg[:, -1:])[..., None]          # (B, chunk, H)
+        wk = decay_to_end * ib                       # (B, chunk, H)
+        C_out = C_in * PT[..., None, None] + jnp.einsum(
+            "bthd,bthe->bhde", kb * wk[..., None], vb)
+        n_out = n_in * PT[..., None] + jnp.einsum(
+            "bthd,bth->bhd", kb, wk)
+        return (C_out, n_out), (y, n)
+
+    (C_f, n_f), (ys, ns) = jax.lax.scan(
+        body, (C_in0, n_in0), (qc, kc, vc, fc, ic, rc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Lp, H, dv)[:, :L]
+    n = jnp.moveaxis(ns, 0, 1).reshape(B, Lp, H, dk)[:, :L]
+    qn = jnp.einsum("blhd,blhd->blh", n, q[:, :L])
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-jnp.clip(m, -30.0, 30.0)))
+    out = (y / jnp.maximum(den, 1e-20)[..., None]).astype(v.dtype)
+    if return_state:
+        return out, (C_f, n_f, m[:, -1])
+    return out
+
+
+def mlstm_step(state: Tuple, q_t, k_t, v_t, logf_t, logi_t,
+               reset_t: Optional[jnp.ndarray] = None):
+    """Decode step. state=(C (B,H,dk,dv), n (B,H,dk), m (B,H));
+    q_t,k_t: (B,H,dk); v_t: (B,H,dv); gates (B,H)."""
+    C, n, m = state
+    cdt = jnp.float32
+    logf_t = logf_t.astype(cdt)
+    logi_t = logi_t.astype(cdt)
+    if reset_t is not None:
+        logf_t = jnp.where(reset_t[:, None], -1e30, logf_t)
+    m_new = jnp.maximum(logf_t + m, logi_t)
+    fp = jnp.exp(jnp.clip(logf_t + m - m_new, -60.0, 0.0))
+    ip = jnp.exp(jnp.clip(logi_t - m_new, -60.0, 30.0))
+    C_new = C * fp[..., None, None] + ip[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k_t.astype(cdt), v_t.astype(cdt))
+    n_new = n * fp[..., None] + ip[..., None] * k_t.astype(cdt)
+    scale = k_t.shape[-1] ** -0.5
+    y = jnp.einsum("bhd,bhde->bhe", q_t.astype(cdt) * scale, C_new)
+    qn = jnp.einsum("bhd,bhd->bh", n_new, q_t.astype(cdt) * scale)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-jnp.clip(m_new, -30.0, 30.0)))
+    y = (y / jnp.maximum(den, 1e-20)[..., None]).astype(v_t.dtype)
+    return y, (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM) — sequential scalar-memory recurrence
+# ---------------------------------------------------------------------------
+
+def slstm(x_preact: jnp.ndarray, R: jnp.ndarray,
+          positions: Optional[jnp.ndarray] = None,
+          state: Optional[Tuple] = None, return_state: bool = False,
+          valid: Optional[jnp.ndarray] = None):
+    """Sequential sLSTM. x_preact: (B, L, 4, H, dh) input-driven
+    preactivations for gates (i, f, z, o); R: (4, H, dh, dh) per-head
+    recurrent weights applied to h_{t-1}.
+
+    Cannot be parallelized across time (true nonlinearity between steps) —
+    runs as lax.scan; segment resets zero (h, c, n) and m at starts.
+    ``valid`` (B, L): state is frozen across invalid (padding) steps —
+    used by prefill to stop right-padding from corrupting the handed-off
+    state. Returns h (B, L, H, dh) [, final (c, n, m, h)]."""
+    B, L, _, H, dh = x_preact.shape
+    cdt = jnp.float32
+    if state is None:
+        z0 = jnp.zeros((B, H, dh), cdt)
+        state = (z0, z0, jnp.full((B, H, dh), -1e30, cdt), z0)
+    reset = (positions == 0) if positions is not None else \
+        jnp.zeros((B, L), bool)
+    ok = valid if valid is not None else jnp.ones((B, L), bool)
+
+    def step(carry, inp):
+        c, n, m, h = carry
+        xp, r_t, v_t = inp                            # (B,4,H,dh), (B,), (B,)
+        keep = (~r_t).astype(cdt)[:, None, None]
+        c1, n1, h1 = c * keep, n * keep, h * keep
+        m1 = jnp.where(r_t[:, None, None], -1e30, m)
+        rec = jnp.einsum("bhd,ghde->bghe", h1, R)     # (B,4,H,dh)
+        pre = xp.astype(cdt) + rec
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        logi = it
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m1, logi)
+        fp = jnp.exp(jnp.clip(logf + m1 - m_new, -60.0, 0.0))
+        ip = jnp.exp(jnp.clip(logi - m_new, -60.0, 30.0))
+        c_new = fp * c1 + ip * jnp.tanh(zt)
+        n_new = fp * n1 + ip
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        vm = v_t[:, None, None]
+        out = (jnp.where(vm, c_new, c), jnp.where(vm, n_new, n),
+               jnp.where(vm, m_new, m), jnp.where(vm, h_new, h))
+        return out, h_new
+
+    xT = jnp.moveaxis(x_preact, 1, 0)
+    rT = jnp.moveaxis(reset, 1, 0)
+    vT = jnp.moveaxis(ok, 1, 0)
+    final, hs = jax.lax.scan(step, state, (xT, rT, vT))
+    h = jnp.moveaxis(hs, 0, 1).astype(x_preact.dtype)
+    if return_state:
+        return h, final
+    return h

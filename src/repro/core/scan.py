@@ -1,0 +1,164 @@
+"""Generic *segmented* diagonal linear recurrence.
+
+    h_t = a_t ⊙ h_{t-1} + b_t ,      y = all h_t            (inclusive scan)
+
+with the PackMamba reset rule: wherever ``reset[t]`` is set (a packed-sequence
+start, ``position_indices == 0``), force ``a_t → 0`` so no state crosses the
+boundary. The paper's §3.4 correctness argument is algebraic — the combine
+operator
+
+    (a₁, b₁) ⊕ (a₂, b₂) = (a₂·a₁, a₂·b₁ + b₂)
+
+is associative, and once some aₖ = 0 every composite multiplicative term that
+spans k is 0, so no additive term from before k survives — hence it holds for
+*any* schedule: the sequential scan, the Blelloch tree the paper modifies on
+GPU, XLA's associative_scan, and our chunked TPU scan. ``test_pui.py`` checks
+this property directly.
+
+This one primitive backs: Mamba-1 selective scan (state (D, N)), RG-LRU
+(state (D,)), and mLSTM (matrix state (H, dk, dv) with scalar per-head decay).
+
+Three schedules:
+  * ``sequential``   — lax.scan over time. Reference & decode-step building block.
+  * ``associative``  — jax.lax.associative_scan over the full L (materializes
+                       (B, L, *S) twice; fine for small state).
+  * ``chunked``      — DEFAULT. lax.scan over L/T chunks carrying h, with an
+                       intra-chunk associative scan. Peak memory O(B·T·S)
+                       instead of O(B·L·S) for the scan internals; this is
+                       the direct XLA analogue of the Pallas kernel's
+                       grid-sequential VMEM-resident carry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _bcast_reset(reset: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast (B, L) reset mask to the rank of ``like`` ((B, L, *S))."""
+    extra = like.ndim - reset.ndim
+    return reset.reshape(reset.shape + (1,) * extra)
+
+
+def apply_reset(a: jnp.ndarray, reset: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """PackMamba boundary rule: Ā→0 at sequence starts."""
+    if reset is None:
+        return a
+    return jnp.where(_bcast_reset(reset, a), jnp.zeros_like(a), a)
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a2 * a1, a2 * b1 + b2
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def scan_sequential(a: jnp.ndarray, b: jnp.ndarray,
+                    reset: Optional[jnp.ndarray] = None,
+                    h0: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Time axis = 1. Returns (h_all (B,L,*S), h_last (B,*S))."""
+    a = apply_reset(a, reset)
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[:1] + a.shape[2:], a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    # scan over time: move axis 1 to front
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def scan_associative(a: jnp.ndarray, b: jnp.ndarray,
+                     reset: Optional[jnp.ndarray] = None,
+                     h0: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = apply_reset(a, reset)
+    if h0 is not None:
+        # fold h0 in as an extra b-term on step 0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    A, B = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    del A
+    return B, B[:, -1]
+
+
+def scan_chunked(a: jnp.ndarray, b: jnp.ndarray,
+                 reset: Optional[jnp.ndarray] = None,
+                 h0: Optional[jnp.ndarray] = None,
+                 chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked scan: sequential across L/chunk, associative inside a chunk.
+
+    Inside a chunk the pair scan yields, per position t (chunk-local),
+    the composite (A_t, B_t) of steps [0..t]; then h_t = A_t·h_in + B_t.
+    """
+    a = apply_reset(a, reset)
+    Bsz, L = a.shape[0], a.shape[1]
+    if L % chunk != 0:
+        # fall back: pad time with identity steps (a=1... but a=1,b=0 keeps h)
+        pad = (-L) % chunk
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    Lp = a.shape[1]
+    nc = Lp // chunk
+    S = a.shape[2:]
+    a = a.reshape((Bsz, nc, chunk) + S)
+    b = b.reshape((Bsz, nc, chunk) + S)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz,) + S, a.dtype)
+
+    def step(h_in, ab):
+        ac, bc = ab                      # (B, chunk, *S)
+        A, Bc = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        h = A * h_in[:, None] + Bc       # (B, chunk, *S)
+        return h[:, -1], h
+
+    aC = jnp.moveaxis(a, 1, 0)           # (nc, B, chunk, *S)
+    bC = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(step, h0, (aC, bC))
+    h_all = jnp.moveaxis(hs, 0, 1).reshape((Bsz, Lp) + S)[:, :L]
+    return h_all, h_last
+
+
+_METHODS = {
+    "sequential": scan_sequential,
+    "associative": scan_associative,
+    "chunked": scan_chunked,
+}
+
+
+def segmented_scan(a: jnp.ndarray, b: jnp.ndarray,
+                   reset: Optional[jnp.ndarray] = None,
+                   h0: Optional[jnp.ndarray] = None,
+                   method: str = "chunked",
+                   chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch. a, b: (B, L, *S); reset: (B, L) bool; h0: (B, *S).
+
+    Returns (h_all (B, L, *S), h_last (B, *S)).
+    """
+    if a.shape != b.shape:
+        raise ValueError(f"a/b shape mismatch {a.shape} vs {b.shape}")
+    fn = _METHODS[method]
+    if method == "chunked":
+        return fn(a, b, reset, h0, chunk=chunk)
+    return fn(a, b, reset, h0)
+
+
+def scan_step(h: jnp.ndarray, a_t: jnp.ndarray, b_t: jnp.ndarray,
+              reset_t: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single decode step of the recurrence (used by serve paths)."""
+    if reset_t is not None:
+        a_t = jnp.where(_bcast_reset(reset_t, a_t), jnp.zeros_like(a_t), a_t)
+    return a_t * h + b_t

@@ -1,0 +1,123 @@
+"""Mamba-1 selective scan with PackMamba segment resets — XLA path.
+
+Discretization (paper eq. 2a/2b, Mamba's ZOH-for-A / Euler-for-B):
+
+    Ā[b,l,d,n] = exp(Δ[b,l,d] · A[d,n])          A = -exp(A_log)  (real < 0)
+    B̄x[b,l,d,n] = Δ[b,l,d] · B[b,l,n] · u[b,l,d]
+
+    h_t = Ā_t ⊙ h_{t-1} + B̄x_t                    (per (b, d, n))
+    y[b,l,d] = Σ_n C[b,l,n] · h[b,l,d,n] + D[d] · u[b,l,d]
+
+PackMamba (§3.4): wherever position_indices == 0, Ā → 0 — state reset at the
+start of each packed sequence. In serial form this equals Δ→∞ state
+forgetting that selective SSMs already support (paper eq. 2a remark); in
+parallel form the reset composes with the associative combine (see
+core/scan.py docstring).
+
+This module is the default (dry-run / roofline) path; the Pallas TPU kernel
+lives in kernels/selective_scan.py and matches this to numerical tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import segmented_scan, scan_step
+
+
+def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
+                   B: jnp.ndarray, C: jnp.ndarray,
+                   D: Optional[jnp.ndarray] = None,
+                   positions: Optional[jnp.ndarray] = None,
+                   h0: Optional[jnp.ndarray] = None,
+                   method: str = "chunked", chunk: int = 256,
+                   return_state: bool = False,
+                   compute_dtype=None):
+    """u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
+
+    positions: (B,L) int32 — PackMamba position indices (reset where == 0).
+    h0: (B, D, N) initial state (for split-pack state carry / decode chunking).
+    compute_dtype: recurrence dtype (default f32; bf16 halves scan traffic).
+    Returns y (B, L, D) [, h_last (B, D, N)].
+    """
+    Bsz, L, Dm = u.shape
+    N = A.shape[-1]
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
+        jnp.promote_types(u.dtype, jnp.float32)     # scan state dtype
+    if method == "fused_seq":
+        # §Perf iteration: fold y = C·h into a single sequential scan so the
+        # (B, L, D, N) decay/h trajectories are NEVER materialized — HBM
+        # traffic drops from O(L·D·N·log chunk) to O(L·D·N) carry round-trips
+        # + O(L·D) outputs. (The Pallas kernel is the real TPU answer; this
+        # is its closest pure-XLA analogue.)
+        return _fused_seq_scan(u, delta, A, B, C, D, positions, h0,
+                               return_state, cdt)
+    delta_f = delta.astype(cdt)
+    # decay a = exp(Δ·A): (B, L, D, N)
+    a = jnp.exp(delta_f[..., None] * A.astype(cdt))
+    # b-term = Δ·B·u: (B, L, D, N)
+    bterm = (delta_f * u.astype(cdt))[..., None] * B.astype(cdt)[:, :, None, :]
+    reset = (positions == 0) if positions is not None else None
+    h, h_last = segmented_scan(a, bterm, reset=reset, h0=h0,
+                               method=method, chunk=chunk)
+    y = jnp.einsum("bldn,bln->bld", h, C.astype(cdt))
+    if D is not None:
+        y = y + D.astype(cdt) * u.astype(cdt)
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, return_state, cdt):
+    Bsz, L, Dm = u.shape
+    N = A.shape[-1]
+    A32 = A.astype(cdt)
+    reset = (positions == 0) if positions is not None else \
+        jnp.zeros((Bsz, L), bool)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), cdt)
+
+    def step(h, xs):
+        u_t, d_t, B_t, C_t, r_t = xs
+        d32 = d_t.astype(cdt)
+        a_t = jnp.exp(d32[..., None] * A32)               # (B, Dm, N)
+        a_t = jnp.where(r_t[:, None, None], 0.0, a_t)
+        h = a_t * h + (d32 * u_t.astype(cdt))[..., None] * \
+            B_t.astype(cdt)[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(cdt))
+        return h, y_t
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0),
+          jnp.moveaxis(reset, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + D.astype(cdt) * u.astype(cdt)
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def selective_scan_step(h: jnp.ndarray, u_t: jnp.ndarray, delta_t: jnp.ndarray,
+                        A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray,
+                        D: Optional[jnp.ndarray] = None,
+                        reset_t: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step. h: (B, D, N); u_t, delta_t: (B, D); B_t, C_t: (B, N).
+
+    Returns (y_t (B, D), h_new (B, D, N)).
+    """
+    cdt = h.dtype
+    a_t = jnp.exp(delta_t.astype(cdt)[..., None] * A.astype(cdt))      # (B,D,N)
+    b_t = (delta_t.astype(cdt) * u_t.astype(cdt))[..., None] * \
+        B_t.astype(cdt)[:, None, :]
+    h_new = scan_step(h, a_t, b_t, reset_t)
+    y_t = jnp.einsum("bdn,bn->bd", h_new, C_t.astype(cdt))
+    if D is not None:
+        y_t = y_t + D.astype(cdt) * u_t.astype(cdt)
+    return y_t.astype(u_t.dtype), h_new

@@ -1,0 +1,160 @@
+"""jit'd public wrappers for the Pallas kernels: padding to tile multiples,
+layout transposes, custom_vjp wiring, and backend dispatch.
+
+``backend='xla'`` routes to the chunked pure-JAX implementations in
+repro.core (the dry-run / roofline path — SPMD-partitionable and visible to
+cost_analysis); ``backend='pallas'`` routes to the TPU kernels (validated in
+interpret mode on CPU; the path you flip on real v5e).
+
+Structure note: the custom_vjp is defined over *already padded, fully
+normalized* operands (no Nones, tile-multiple shapes); the public wrappers
+pad/transpose outside it, so cotangent padding/slicing falls out of autodiff
+instead of hand-written bookkeeping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv as core_conv
+from repro.core import ssm as core_ssm
+from repro.kernels import conv1d_pack as conv_k
+from repro.kernels import selective_scan as scan_k
+
+_F0 = jax.dtypes.float0
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _scan_padded(u, delta, At, B, C, Dp, pos, block_d, chunk):
+    y, _ = _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk)
+    return y
+
+
+def _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk):
+    y, ckpts = scan_k.selective_scan_fwd_pallas(
+        u, delta, At, B, C, Dp, pos, block_d=block_d, chunk=chunk)
+    return y, (u, delta, At, B, C, Dp, pos, ckpts)
+
+
+def _scan_bwd_rule(block_d, chunk, res, dy):
+    u, delta, At, B, C, Dp, pos, ckpts = res
+    du, ddelta, dB_p, dC_p, dA_p, dD_p = scan_k.selective_scan_bwd_pallas(
+        u, delta, At, B, C, Dp, pos, ckpts, dy, block_d=block_d, chunk=chunk)
+    return (du.astype(u.dtype), ddelta.astype(delta.dtype),
+            dA_p.sum(0).astype(At.dtype), dB_p.sum(1).astype(B.dtype),
+            dC_p.sum(1).astype(C.dtype), dD_p.sum(0).astype(Dp.dtype),
+            np.zeros(pos.shape, _F0))
+
+
+_scan_padded.defvjp(_scan_fwd_rule, _scan_bwd_rule)
+
+
+def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
+                   backend: str = "xla", block_d: int = scan_k.DEF_BLOCK_D,
+                   chunk: int = scan_k.DEF_CHUNK_T, xla_chunk: int = 256,
+                   xla_method: str = "chunked", xla_dtype=None):
+    """Fused segmented selective scan. See kernels/ref.py for semantics.
+
+    u, delta: (B, L, Dm) | A: (Dm, N) | B, C: (B, L, N) | D: (Dm,) |
+    positions: (B, L) i32 (reset where == 0) → y (B, L, Dm).
+    """
+    if backend == "xla":
+        return core_ssm.selective_scan(u, delta, A, B, C, D,
+                                       positions=positions,
+                                       method=xla_method, chunk=xla_chunk,
+                                       compute_dtype=xla_dtype)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    Bz, L, Dm = u.shape
+    bd = min(block_d, max(Dm, 8))
+    T = min(chunk, L)
+    # channel padding: A=0 ⇒ a=1 but b=0 keeps padded h = 0; y sliced off
+    up, dtp = _pad_to(u, 2, bd), _pad_to(delta, 2, bd)
+    At = _pad_to(A.T, 1, bd)
+    Dp = _pad_to((D if D is not None else jnp.zeros(Dm, u.dtype))[None, :],
+                 1, bd)
+    # L padding: pos=1 (no reset), delta=0 ⇒ a=1 carry; y sliced off
+    up, dtp = _pad_to(up, 1, T), _pad_to(dtp, 1, T)
+    Bp, Cp = _pad_to(B, 1, T), _pad_to(C, 1, T)
+    pos = positions if positions is not None else \
+        jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
+    posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
+    y = _scan_padded(up, dtp, At, Bp, Cp, Dp, posp, bd, T)
+    return y[:, :L, :Dm]
+
+
+# ---------------------------------------------------------------------------
+# conv1d pack
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _conv_padded(x, weight, bias, pos, block_d, chunk):
+    y, _ = _conv_fwd_rule(x, weight, bias, pos, block_d, chunk)
+    return y
+
+
+def _conv_fwd_rule(x, weight, bias, pos, block_d, chunk):
+    y = conv_k.conv1d_pack_fwd_pallas(x, weight, bias, pos,
+                                      block_d=block_d, chunk=chunk)
+    return y, (x, weight, bias, pos)
+
+
+def _conv_bwd_rule(block_d, chunk, res, dy):
+    x, weight, bias, pos = res
+    W = weight.shape[0]
+    dx = conv_k.conv1d_pack_bwd_dx_pallas(dy, weight, pos,
+                                          block_d=block_d, chunk=chunk)
+    # dweight / dbias: tiny O(W·D) reductions — XLA einsum (see kernel doc)
+    Lp = x.shape[1]
+    dy32, x32 = dy.astype(jnp.float32), x.astype(jnp.float32)
+    dws = []
+    for k in range(W):                    # weight row j = W-1-k ↔ back-off k
+        shifted = jnp.pad(x32, ((0, 0), (k, 0), (0, 0)))[:, :Lp]
+        masked = jnp.where((pos >= k)[..., None], shifted, 0.0)
+        dws.append(jnp.einsum("bld,bld->d", dy32, masked))
+    dw = jnp.stack(dws[::-1], axis=0).astype(weight.dtype)
+    dbias = dy32.sum((0, 1))[None, :].astype(bias.dtype)
+    return (dx.astype(x.dtype), dw, dbias, np.zeros(pos.shape, _F0))
+
+
+_conv_padded.defvjp(_conv_fwd_rule, _conv_bwd_rule)
+
+
+def conv1d_pack(x, weight, bias=None, positions=None, *,
+                backend: str = "xla", block_d: int = conv_k.DEF_BLOCK_D,
+                chunk: int = conv_k.DEF_CHUNK_T):
+    """Segmented causal depthwise conv. x (B,L,D) | weight (W,D) | bias (D,)."""
+    if backend == "xla":
+        return core_conv.conv1d_pack(x, weight, bias, positions)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    Bz, L, Dm = x.shape
+    bd = min(block_d, max(Dm, 8))
+    T = min(chunk, L)
+    xp = _pad_to(_pad_to(x, 2, bd), 1, T)
+    wp = _pad_to(weight, 1, bd)
+    bp = _pad_to((bias if bias is not None else
+                  jnp.zeros(Dm, x.dtype))[None, :], 1, bd)
+    pos = positions if positions is not None else \
+        jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
+    posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
+    y = _conv_padded(xp, wp, bp, posp, bd, T)
+    return y[:, :L, :Dm]

@@ -1,0 +1,164 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and extract memory/cost/collective analysis for the roofline report.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init); smoke tests and benches must NOT import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch xlstm-125m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_names
+from repro.configs.base import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, build_cell, cell_supported
+from repro.roofline.analysis import (Roofline, collective_bytes,
+                                     model_flops_per_step)
+
+ASSIGNED = [
+    "recurrentgemma-2b", "stablelm-1.6b", "deepseek-coder-33b", "gemma-7b",
+    "deepseek-67b", "hubert-xlarge", "mixtral-8x22b", "moonshot-v1-16b-a3b",
+    "qwen2-vl-2b", "xlstm-125m",
+]
+PAPER = ["mamba-110m", "mamba-1.4b", "mamba-2.8b"]
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             overrides=None) -> dict:
+    cfg = get_config(arch)
+    accum = 1
+    if overrides:
+        overrides = dict(overrides)
+        accum = overrides.pop("__accum__", 1)
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, why = cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "skip", "reason": why}
+    if not ok:
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        with mesh:
+            kw = {"accum": accum} if SHAPES[shape]["kind"] == "train" else {}
+            cell = build_cell(cfg, mesh, shape, **kw)
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # while-aware static analysis: cost_analysis counts scan bodies
+        # once, not × trip count (see roofline/hlo_static.py)
+        from repro.roofline.hlo_static import analyze as hlo_analyze
+        stat = hlo_analyze(hlo)
+        coll = dict(stat["collectives_by_op"], total=stat["collective_bytes"])
+        flops_dev = float(stat["flops"])
+        bytes_dev = float(stat["traffic_bytes"])
+        s = SHAPES[shape]
+        mf = model_flops_per_step(cfg, s["kind"], s["batch"], s["seq"])
+        rl = Roofline(flops=flops_dev * chips, hbm_bytes=bytes_dev * chips,
+                      coll_bytes=coll["total"] * chips, chips=chips,
+                      model_flops=mf)
+        mem_rec = {}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_rec[attr] = int(v)
+        rec.update(
+            status="ok",
+            fn=cell.meta["fn_name"],
+            chips=chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collectives={k: v for k, v in coll.items()},
+            traffic_by_op=stat["traffic_by_op"],
+            cost_analysis_raw={"flops": float(cost.get("flops", 0.0)),
+                               "bytes": float(cost.get("bytes accessed",
+                                                       0.0))},
+            memory=mem_rec,
+            roofline=rl.to_dict(),
+            hlo_lines=hlo.count("\n"),
+        )
+    except Exception as e:                     # noqa: BLE001 — sweep robust
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   elapsed_s=round(time.time() - t0, 1))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape}__{mesh_name}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs (+ paper mamba sizes)")
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or (ASSIGNED + (PAPER if args.paper else [])
+                          if args.all or args.arch is None else [])
+    if args.list:
+        for a in archs:
+            for s in args.shape:
+                ok, why = cell_supported(get_config(a), s)
+                print(f"{a:24s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in args.shape:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {a} {s} {mesh_name}")
+                    continue
+                rec = run_cell(a, s, mp, args.out)
+                if rec["status"] == "ok":
+                    rl = rec["roofline"]
+                    print(f"[ok] {a} {s} {mesh_name}: "
+                          f"compile {rec['compile_s']}s "
+                          f"dom={rl['dominant']} "
+                          f"frac={rl['roofline_fraction']:.3f} "
+                          f"mem={rec['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}GiB")
+                elif rec["status"] == "skip":
+                    print(f"[skip] {a} {s} {mesh_name}: {rec['reason']}")
+                else:
+                    print(f"[ERR] {a} {s} {mesh_name}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

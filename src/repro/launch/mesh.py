@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests keep their 1 CPU device; only
+launch/dryrun.py (which sets XLA_FLAGS first) materializes 512 devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever devices exist, as ("data", "model") — for sharding unit
+    tests run in subprocesses with --xla_force_host_platform_device_count."""
+    n = len(jax.devices())
+    if n % model_axis:
+        raise ValueError(f"{n} devices not divisible by model={model_axis}")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=_auto(2))

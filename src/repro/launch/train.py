@@ -1,0 +1,99 @@
+"""Production training launcher: sharded train step on the production mesh
+(or whatever devices exist), checkpoint/resume, SIGTERM-safe.
+
+On a real TPU pod slice this is the entry each host runs (jax.distributed
+initializes from the TPU environment; the mesh axes map onto the physical
+topology). On CPU it runs the same code path on a local mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba-110m \
+      --rows 8 --seq-len 4096 --steps 100 --ckpt-dir /tmp/ckpt
+  # dry-run the full production mesh instead of executing:
+  PYTHONPATH=src python -m repro.launch.train --arch mamba-2.8b --dry-run
+
+Recommended real-TPU XLA flags (latency-hiding overlap of the FSDP
+all-gathers / grad reduce-scatters with compute; bf16 collective payload):
+  --xla_tpu_enable_latency_hiding_scheduler=true
+  --xla_tpu_megacore_fusion_allow_ags=true
+  --xla_enable_async_collective_permute=true
+  --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+"""
+import argparse
+import dataclasses
+import os
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.data.dataset import SyntheticCorpus, CorpusConfig
+from repro.data.packing_loader import PackingLoader, LoaderConfig
+from repro.distributed import sharding as shd
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamW, AdamWConfig, cosine_schedule
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba-110m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--rows", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=4096)
+    ap.add_argument("--mode", default="pack",
+                    choices=["pack", "pad", "single"])
+    ap.add_argument("--policy", default="sequential")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="TP size on the local mesh")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile on the 16x16 production mesh")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch.dryrun import run_cell     # sets 512 devices? no —
+        # dryrun sets XLA_FLAGS at import; for a clean dry-run use the
+        # dedicated module entry instead:
+        raise SystemExit(
+            "use: python -m repro.launch.dryrun --arch "
+            f"{args.arch} --shape train_4k --mesh both")
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=0))
+    loader = PackingLoader(corpus, LoaderConfig(
+        rows=args.rows, seq_len=args.seq_len, mode=args.mode,
+        policy=args.policy))
+    opt = AdamW(cosine_schedule(args.lr, warmup=max(1, args.steps // 20),
+                                total=args.steps),
+                AdamWConfig(weight_decay=0.1, clip_norm=1.0))
+
+    n_dev = len(jax.devices())
+    step_fn = make_train_step(model, opt, accum=args.accum)
+    if n_dev > 1:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(model_axis=args.model_axis)
+        pspec = shd.param_pspecs(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), mesh)
+        ns = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        state_spec = ns({"params": pspec})
+        print(f"mesh {dict(mesh.shape)}; sharded train step")
+        # jit with param shardings; batch follows data axis
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+    trainer = Trainer(model, opt, loader, TrainerConfig(
+        steps=args.steps, accum=args.accum, log_every=10,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        ckpt_dir=args.ckpt_dir), step_fn=None if n_dev == 1 else step_fn,
+        jit=(n_dev == 1))
+    print(f"training {cfg.name}: {args.steps} steps, mode={args.mode}, "
+          f"rows={args.rows}x{args.seq_len}, devices={n_dev}")
+    state, hist = trainer.train(jax.random.PRNGKey(0))
+    print(f"done; final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,657 @@
+"""Composable blocks for every architecture family.
+
+Each block kind provides ``init_<kind>(key, cfg) -> params`` and
+``apply_<kind>(params, x, ctx, cfg) -> x`` (full-sequence, packed-aware) and
+``step_<kind>(params, x_t, cache, ctx, cfg) -> (x_t, cache)`` (single-token
+decode). ``ctx`` carries the packing side-tensors (positions, segment_ids)
+plus decode cursor.
+
+Param leaves use conventional names (embed, head, wq, wkv, wo, w_gate, w_up,
+w_down, experts_*, conv_w, A_log, …) that distributed/sharding.py
+pattern-matches into PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import (attention, decode_attention, rope, mrope)
+from repro.core.recurrence import (rglru, rglru_step, mlstm, mlstm_step,
+                                   slstm)
+from repro.core import ssm as core_ssm
+from repro.core.conv import conv1d_pack_update
+from repro.kernels import ops as kops
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through blocks."""
+    positions: Optional[jnp.ndarray] = None      # (B, L) intra-seq positions
+    segment_ids: Optional[jnp.ndarray] = None    # (B, L)
+    mrope_positions: Optional[jnp.ndarray] = None  # (B, L, S) for vlm
+    # decode:
+    cache_len: Optional[jnp.ndarray] = None      # (B,) current cursor
+    reset_t: Optional[jnp.ndarray] = None        # (B,) new-sequence flag
+
+
+def _norm(scale, x, eps):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _dense(key, din, dout, scale=None, dtype=jnp.float32):
+    s = scale if scale is not None else din ** -0.5
+    return jax.random.normal(key, (din, dout), dtype) * s
+
+
+def _act(name: str):
+    return jax.nn.gelu if name == "geglu" else jax.nn.silu
+
+
+# ===========================================================================
+# attention (+ shared MLP)
+# ===========================================================================
+
+def init_attn(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.ones((d,)),
+        "wq": _dense(ks[0], d, H * hd),
+        "wkv": _dense(ks[1], d, 2 * Hkv * hd),
+        "wo": _dense(ks[2], H * hd, d, scale=(H * hd) ** -0.5),
+    }
+
+
+def _apply_rope(cfg, q, k, ctx: Ctx):
+    if cfg.mrope_sections is not None:
+        pos3 = ctx.mrope_positions
+        if pos3 is None and ctx.positions is not None:
+            pos3 = jnp.repeat(ctx.positions[..., None],
+                              len(cfg.mrope_sections), axis=-1)
+        if pos3 is not None:
+            q = mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        return q, k
+    if ctx.positions is not None:
+        q = rope(q, ctx.positions, cfg.rope_theta)
+        k = rope(k, ctx.positions, cfg.rope_theta)
+    return q, k
+
+
+def apply_attn(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    B, L, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, L, H, hd)
+    kv = (h @ p["wkv"].astype(h.dtype)).reshape(B, L, 2, Hkv, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    q, k = _apply_rope(cfg, q, k, ctx)
+    chunk = cfg.attn_chunk
+    if chunk is None and L > 4096:
+        chunk = 1024                       # online-softmax for long prefill
+    o = attention(q, k, v,
+                  segment_ids_q=ctx.segment_ids,
+                  segment_ids_kv=ctx.segment_ids,
+                  causal=not cfg.encoder_only,
+                  window=cfg.attn_window,
+                  chunk_kv=chunk)
+    o = o.reshape(B, L, H * hd) @ p["wo"].astype(x.dtype)
+    if collect:
+        S = collect if cfg.attn_window is None else \
+            min(collect, cfg.attn_window)
+        lens = _valid(ctx, x).sum(-1)
+        return x + o, _ring_fill(k, v, lens, S)
+    return x + o
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    S = max_len if cfg.attn_window is None else min(max_len, cfg.attn_window)
+    return {"k": jnp.zeros((batch, S, Hkv, hd), dtype),
+            "v": jnp.zeros((batch, S, Hkv, hd), dtype)}
+
+
+def _ring_fill(k, v, lens, S):
+    """Lay a prefill's K/V into the ring-buffer layout step_attn uses:
+    slot s holds the LAST token t < len with t ≡ s (mod S)."""
+    B, L, Hkv, hd = k.shape
+    s = jnp.arange(S)[None, :]                         # (1, S)
+    nb = lens[:, None]                                 # (B, 1)
+    t = s + ((nb - 1 - s) // S) * S                    # largest ≡ s (mod S)
+    ok = (s < nb) & (t >= 0)
+    tcl = jnp.clip(t, 0, L - 1)[..., None, None]       # (B, S, 1, 1)
+    gk = jnp.take_along_axis(k, jnp.broadcast_to(tcl, (B, S) + k.shape[2:]),
+                             axis=1)
+    gv = jnp.take_along_axis(v, jnp.broadcast_to(tcl, (B, S) + v.shape[2:]),
+                             axis=1)
+    m = ok[..., None, None]
+    return {"k": jnp.where(m, gk, 0), "v": jnp.where(m, gv, 0)}
+
+
+def _conv_tail(x_in, lens, W):
+    """Last W-1 *valid* inputs per row → decode conv state (B, W-1, D)."""
+    B, L, D = x_in.shape
+    j = jnp.arange(W - 1)[None, :]                     # (1, W-1)
+    t = lens[:, None] - (W - 1) + j                    # (B, W-1)
+    ok = t >= 0
+    tcl = jnp.clip(t, 0, L - 1)[..., None]
+    g = jnp.take_along_axis(x_in, jnp.broadcast_to(tcl, (B, W - 1, D)),
+                            axis=1)
+    return jnp.where(ok[..., None], g, 0)
+
+
+def _valid(ctx: Ctx, x):
+    if ctx.segment_ids is None:
+        return jnp.ones(x.shape[:2], bool)
+    return ctx.segment_ids != 0
+
+
+def step_attn(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    """x_t: (B, 1, d). Writes K/V at ctx.cache_len then attends."""
+    B, _, d = x_t.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _norm(p["norm"], x_t, cfg.norm_eps)
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, 1, H, hd)
+    kv = (h @ p["wkv"].astype(h.dtype)).reshape(B, 1, 2, Hkv, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    pos = ctx.cache_len[:, None]                      # (B, 1) intra-seq pos
+    sctx = Ctx(positions=pos, mrope_positions=(
+        jnp.repeat(pos[..., None], len(cfg.mrope_sections), axis=-1)
+        if cfg.mrope_sections is not None else None))
+    q, k = _apply_rope(cfg, q, k, sctx)
+    # ring-buffer write for windowed attention (cache size = window keeps
+    # long_500k decode state bounded), linear write otherwise
+    S = cache["k"].shape[1]
+    slot = ctx.cache_len % S
+    bidx = jnp.arange(B)
+    kc = cache["k"].at[bidx, slot].set(k[:, 0])
+    vc = cache["v"].at[bidx, slot].set(v[:, 0])
+    if cfg.attn_window is not None:
+        o = _ring_decode(q[:, 0], kc, vc, ctx.cache_len, cfg.attn_window)
+    else:
+        o = decode_attention(q[:, 0], kc, vc, ctx.cache_len, window=None)
+    o = o.reshape(B, 1, H * hd) @ p["wo"].astype(x_t.dtype)
+    return x_t + o, {"k": kc, "v": vc}
+
+
+def _ring_decode(q_t, kc, vc, cur, window):
+    """Decode attention over a ring buffer of size S ≥ window."""
+    B, S, Hkv, hd = kc.shape
+    idx = jnp.arange(S)[None, :]
+    slot_age = (cur[:, None] % S - idx) % S          # age of each slot
+    valid = (slot_age < window) & (slot_age <= cur[:, None])
+    H = q_t.shape[1]
+    G = H // Hkv
+    s = jnp.einsum("bhgd,bkhd->bhgk", q_t.reshape(B, Hkv, G, hd), kc,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vc.dtype), vc)
+    return o.reshape(B, H, hd)
+
+
+def init_mlp(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"norm": jnp.ones((d,)),
+            "w_gate": _dense(ks[0], d, ff),
+            "w_up": _dense(ks[1], d, ff),
+            "w_down": _dense(ks[2], ff, d, scale=ff ** -0.5)}
+
+
+def apply_mlp(p, x, ctx: Ctx, cfg: ArchConfig):
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    g = _act(cfg.act)(h @ p["w_gate"].astype(h.dtype))
+    u = h @ p["w_up"].astype(h.dtype)
+    return x + (g * u) @ p["w_down"].astype(x.dtype)
+
+
+# ===========================================================================
+# MoE FFN (sort-based dispatch, EP-shardable)
+# ===========================================================================
+
+def init_moe(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+    p = {"norm": jnp.ones((d,)),
+         "router": _dense(ks[0], d, E),
+         "experts_gate": jax.random.normal(ks[1], (E, d, ff)) * d ** -0.5,
+         "experts_up": jax.random.normal(ks[2], (E, d, ff)) * d ** -0.5,
+         "experts_down": jax.random.normal(ks[3], (E, ff, d)) * ff ** -0.5}
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        p["shared_gate"] = _dense(ks[4], d, sff)
+        p["shared_up"] = _dense(ks[5], d, sff)
+        p["shared_down"] = _dense(ks[6], sff, d, scale=sff ** -0.5)
+    return p
+
+
+def _moe_ffn(p, x, cfg: ArchConfig):
+    """x: (T, d) → (T, d), plus aux losses. Sort-based capacity dispatch:
+    O(T·K) memory, experts batched on the leading (EP-shardable) axis."""
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                 # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # capacity per expert (static)
+    C = int(math.ceil(T * K / E * cfg.capacity_factor))
+    C = max(8, -(-C // 8) * 8)
+    flat_e = expert_idx.reshape(-1)                                 # (T·K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert group
+    tk = T * K
+    counts = jnp.bincount(sorted_e, length=E)
+    seg_start = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(tk) - seg_start[sorted_e]
+    keep = rank < C
+    token_of = order // K                                           # (T·K,)
+    # dispatch into (E, C, d)
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)              # drop → OOB
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[token_of])
+    xe = buf[:E * C].reshape(E, C, d)
+    # expert FFN, batched over E
+    g = _act(cfg.act)(jnp.einsum("ecd,edf->ecf", xe,
+                                 p["experts_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["experts_up"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", g * u,
+                    p["experts_down"].astype(x.dtype))
+    # combine back: gather each (t, k) choice's output
+    ye_flat = jnp.concatenate([ye.reshape(E * C, d),
+                               jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = ye_flat[slot]                                        # (T·K, d)
+    contrib = jnp.zeros((T, d), x.dtype).at[token_of].add(
+        gathered * gate_vals.reshape(-1)[order][:, None].astype(x.dtype))
+    # aux: load-balance + router z-loss
+    me = probs.mean(0)                                              # (E,)
+    ce = jnp.zeros(E, jnp.float32).at[flat_e].add(1.0) / (T * K)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    if "shared_gate" in p:
+        g = _act(cfg.act)(x @ p["shared_gate"].astype(x.dtype))
+        u = x @ p["shared_up"].astype(x.dtype)
+        contrib = contrib + (g * u) @ p["shared_down"].astype(x.dtype)
+    return contrib, {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def apply_moe(p, x, ctx: Ctx, cfg: ArchConfig):
+    B, L, d = x.shape
+    h = _norm(p["norm"], x, cfg.norm_eps).reshape(B * L, d)
+    Tc = cfg.moe_token_chunk
+    if Tc and B * L > Tc and (B * L) % Tc == 0:
+        # bound dispatch-buffer memory: route/dispatch/combine per token
+        # chunk (capacity applies per chunk — slightly better balanced)
+        ys, auxs = jax.lax.map(lambda hh: _moe_ffn(p, hh, cfg),
+                               h.reshape(-1, Tc, d))
+        y = ys.reshape(B * L, d)
+        aux = jax.tree.map(lambda a: a.mean(), auxs)
+    else:
+        y, aux = _moe_ffn(p, h, cfg)
+    return x + y.reshape(B, L, d), aux
+
+
+# ===========================================================================
+# Mamba block (the paper's architecture)
+# ===========================================================================
+
+def init_mamba(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, di, N, W, dtr = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv, \
+        cfg.dtr
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "norm": jnp.ones((d,)),
+        "in_proj": _dense(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (W, di)) * W ** -0.5,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": _dense(ks[2], di, dtr + 2 * N),
+        "dt_w": _dense(ks[3], dtr, di, scale=dtr ** -0.5),
+        "dt_b": jnp.full((di,), -4.6),        # softplus⁻¹(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,)),
+        "out_proj": _dense(ks[4], di, d, scale=di ** -0.5),
+    }
+
+
+def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    B, L, d = x.shape
+    di, N, dtr = cfg.d_inner, cfg.d_state, cfg.dtr
+    backend = "pallas" if cfg.use_pallas else "xla"
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    xz = h @ p["in_proj"].astype(h.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = kops.conv1d_pack(x_in, p["conv_w"].astype(h.dtype),
+                           p["conv_b"].astype(h.dtype),
+                           ctx.positions, backend=backend)
+    x_c = jax.nn.silu(x_c)
+    dbl = x_c @ p["x_proj"].astype(h.dtype)
+    dt_low, Bm, Cm = jnp.split(dbl, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(dt_low @ p["dt_w"].astype(h.dtype) +
+                            p["dt_b"].astype(h.dtype))
+    A = -jnp.exp(p["A_log"])
+    if collect:
+        # freeze state across right-padding: Δ=0 ⇒ Ā=1, B̄x=0. Padding
+        # positions are 0, which would trigger the Ā→0 reset and zero the
+        # handed-off state — neutralize them (pos→1) there.
+        valid = _valid(ctx, x)
+        delta = delta * valid[..., None].astype(delta.dtype)
+        pos_nz = jnp.where(valid, ctx.positions, 1)
+        y, h_last = core_ssm.selective_scan(
+            x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
+            method="chunked", chunk=cfg.scan_chunk, return_state=True)
+        state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
+                 "ssm": h_last}
+        y = y * jax.nn.silu(z)
+        return x + y @ p["out_proj"].astype(x.dtype), state
+    y = kops.selective_scan(x_c, delta, A, Bm, Cm, p["D"],
+                            positions=ctx.positions, backend=backend,
+                            xla_chunk=cfg.scan_chunk,
+                            xla_method=cfg.scan_impl,
+                            xla_dtype=(None if cfg.scan_dtype == "float32"
+                                       else cfg.scan_dtype))
+    y = y * jax.nn.silu(z)
+    return x + y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    di, N, W = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {"conv": jnp.zeros((batch, W - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, N), jnp.float32)}
+
+
+def step_mamba(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    B = x_t.shape[0]
+    di, N, dtr = cfg.d_inner, cfg.d_state, cfg.dtr
+    h = _norm(p["norm"], x_t, cfg.norm_eps)
+    xz = (h[:, 0] @ p["in_proj"].astype(h.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = conv1d_pack_update(
+        x_in, cache["conv"], p["conv_w"].astype(h.dtype),
+        p["conv_b"].astype(h.dtype), ctx.reset_t)
+    x_c = jax.nn.silu(x_c)
+    dbl = x_c @ p["x_proj"].astype(h.dtype)
+    dt_low, Bm, Cm = jnp.split(dbl, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(dt_low @ p["dt_w"].astype(h.dtype) +
+                            p["dt_b"].astype(h.dtype))
+    A = -jnp.exp(p["A_log"])
+    y, ssm = core_ssm.selective_scan_step(
+        cache["ssm"], x_c, delta, A, Bm, Cm, p["D"], reset_t=ctx.reset_t)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x_t.dtype)
+    return x_t + out[:, None], {"conv": conv_state, "ssm": ssm}
+
+
+# ===========================================================================
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ===========================================================================
+
+RGLRU_C_ = 8.0
+
+
+def init_rec(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    lw = cfg.lru_width or d
+    W = cfg.conv_width
+    nb = cfg.lru_gate_blocks
+    if lw % nb:
+        raise ValueError(f"lru_width {lw} % gate blocks {nb} != 0")
+    c = lw // nb
+    ks = jax.random.split(key, 7)
+    # a_param init so that a = exp(-c·softplus(Λ)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (lw,), minval=0.9, maxval=0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C_))  # softplus⁻¹(-ln u/c)
+    return {
+        "norm": jnp.ones((d,)),
+        "w_x": _dense(ks[0], d, lw),
+        "w_y": _dense(ks[1], d, lw),
+        "conv_w": jax.random.normal(ks[2], (W, lw)) * W ** -0.5,
+        "conv_b": jnp.zeros((lw,)),
+        # Griffin-faithful block-diagonal gate projections: (nb, c, c) blocks
+        # are local to a model-axis shard — the gates never cross shards.
+        "w_r": jax.random.normal(ks[3], (nb, c, c)) * c ** -0.5,
+        "w_i": jax.random.normal(ks[4], (nb, c, c)) * c ** -0.5,
+        "a_param": a_param,
+        "wo": _dense(ks[6], lw, d, scale=lw ** -0.5),
+    }
+
+
+def _gate_blockdiag(x_c, w, nb):
+    """x_c: (B, L, lw) → block-diagonal projection with (nb, c, c)."""
+    B, L, lw = x_c.shape
+    xb = x_c.reshape(B, L, nb, lw // nb)
+    return jnp.einsum("blnc,ncd->blnd", xb, w).reshape(B, L, lw)
+
+
+def apply_rec(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    backend = "pallas" if cfg.use_pallas else "xla"
+    nb = cfg.lru_gate_blocks
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    y_branch = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    x_branch = h @ p["w_x"].astype(h.dtype)
+    x_c = kops.conv1d_pack(x_branch, p["conv_w"].astype(h.dtype),
+                           p["conv_b"].astype(h.dtype), ctx.positions,
+                           backend=backend)
+    r = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_r"].astype(h.dtype), nb))
+    i = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_i"].astype(h.dtype), nb))
+    pos_rec = ctx.positions
+    if collect:
+        # freeze across padding: r=0 ⇒ a=1, and then b = √(1-a²)·i·x = 0;
+        # also neutralize the pos==0 reset at padding slots
+        vmask = _valid(ctx, x)
+        valid = vmask[..., None].astype(r.dtype)
+        r, i = r * valid, i * valid
+        pos_rec = jnp.where(vmask, ctx.positions, 1)
+    lru, h_last = rglru(x_c, r, i, p["a_param"], pos_rec,
+                        method="chunked", chunk=cfg.scan_chunk,
+                        compute_dtype=(None if cfg.scan_dtype == "float32"
+                                       else cfg.scan_dtype))
+    out = (lru * y_branch) @ p["wo"].astype(x.dtype)
+    if collect:
+        lens = _valid(ctx, x).sum(-1)
+        return x + out, {"conv": _conv_tail(x_branch, lens, cfg.conv_width),
+                         "h": h_last}
+    return x + out
+
+
+def init_rec_cache(cfg: ArchConfig, batch: int, dtype):
+    lw = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, lw), dtype),
+            "h": jnp.zeros((batch, lw), jnp.float32)}
+
+
+def step_rec(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    nb = cfg.lru_gate_blocks
+    h = _norm(p["norm"], x_t, cfg.norm_eps)
+    y_branch = jax.nn.gelu(h[:, 0] @ p["w_y"].astype(h.dtype))
+    x_branch = h[:, 0] @ p["w_x"].astype(h.dtype)
+    x_c, conv_state = conv1d_pack_update(
+        x_branch, cache["conv"], p["conv_w"].astype(h.dtype),
+        p["conv_b"].astype(h.dtype), ctx.reset_t)
+    r = jax.nn.sigmoid(_gate_blockdiag(x_c[:, None],
+                                       p["w_r"].astype(h.dtype), nb)[:, 0])
+    i = jax.nn.sigmoid(_gate_blockdiag(x_c[:, None],
+                                       p["w_i"].astype(h.dtype), nb)[:, 0])
+    y, hn = rglru_step(cache["h"], x_c, r, i, p["a_param"], ctx.reset_t)
+    out = (y * y_branch) @ p["wo"].astype(x_t.dtype)
+    return x_t + out[:, None], {"conv": conv_state, "h": hn}
+
+
+# ===========================================================================
+# xLSTM blocks
+# ===========================================================================
+
+def init_mlstm(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.n_heads
+    pf = int(cfg.proj_factor * d)
+    W = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,)),
+        "w_upx": _dense(ks[0], d, pf),
+        "w_upz": _dense(ks[1], d, pf),
+        "conv_w": jax.random.normal(ks[2], (W, pf)) * W ** -0.5,
+        "conv_b": jnp.zeros((pf,)),
+        "wq": _dense(ks[3], pf, pf),
+        "wk": _dense(ks[4], pf, pf),
+        "wv": _dense(ks[5], pf, pf),
+        "w_if": _dense(ks[6], pf, 2 * H),
+        "b_if": jnp.concatenate([jnp.zeros(H), jnp.full((H,), 3.0)]),
+        "w_down": _dense(ks[7], pf, d, scale=pf ** -0.5),
+    }
+
+
+def apply_mlstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    pf = p["w_upx"].shape[1]
+    dh = pf // H
+    backend = "pallas" if cfg.use_pallas else "xla"
+    hin = _norm(p["norm"], x, cfg.norm_eps)
+    x_in = hin @ p["w_upx"].astype(hin.dtype)
+    z = hin @ p["w_upz"].astype(hin.dtype)
+    x_c = kops.conv1d_pack(x_in, p["conv_w"].astype(hin.dtype),
+                           p["conv_b"].astype(hin.dtype), ctx.positions,
+                           backend=backend)
+    x_c = jax.nn.silu(x_c)
+    q = (x_c @ p["wq"].astype(hin.dtype)).reshape(B, L, H, dh)
+    k = (x_c @ p["wk"].astype(hin.dtype)).reshape(B, L, H, dh)
+    v = (x_in @ p["wv"].astype(hin.dtype)).reshape(B, L, H, dh)
+    g = x_c @ p["w_if"].astype(hin.dtype) + p["b_if"].astype(hin.dtype)
+    logi, f_pre = jnp.split(g, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = logi.astype(jnp.float32)
+    if collect:
+        # freeze across padding: f'=1 (logf=0), i'=0 (logi=-inf); neutralize
+        # the pos==0 reset at padding slots
+        vmask = _valid(ctx, x)
+        valid = vmask[..., None]
+        logf = jnp.where(valid, logf, 0.0)
+        logi = jnp.where(valid, logi, -1e30)
+        pos_nz = jnp.where(vmask, ctx.positions, 1)
+        y, (C, n, m) = mlstm(q, k, v, logf, logi, positions=pos_nz,
+                             chunk=cfg.scan_chunk, return_state=True)
+        lens = _valid(ctx, x).sum(-1)
+        state = {"conv": _conv_tail(x_in, lens, cfg.conv_width),
+                 "C": C, "n": n, "m": m}
+        y = y.reshape(B, L, pf) * jax.nn.silu(z)
+        return x + y @ p["w_down"].astype(x.dtype), state
+    y = mlstm(q, k, v, logf, logi, positions=ctx.positions,
+              chunk=cfg.scan_chunk)
+    y = y.reshape(B, L, pf) * jax.nn.silu(z)
+    return x + y @ p["w_down"].astype(x.dtype)
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype):
+    H = cfg.n_heads
+    pf = int(cfg.proj_factor * cfg.d_model)
+    dh = pf // H
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, pf), dtype),
+            "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def step_mlstm(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    pf = p["w_upx"].shape[1]
+    dh = pf // H
+    hin = _norm(p["norm"], x_t, cfg.norm_eps)
+    x_in = hin[:, 0] @ p["w_upx"].astype(hin.dtype)
+    z = hin[:, 0] @ p["w_upz"].astype(hin.dtype)
+    x_c, conv_state = conv1d_pack_update(
+        x_in, cache["conv"], p["conv_w"].astype(hin.dtype),
+        p["conv_b"].astype(hin.dtype), ctx.reset_t)
+    x_c = jax.nn.silu(x_c)
+    q = (x_c @ p["wq"].astype(hin.dtype)).reshape(B, H, dh)
+    k = (x_c @ p["wk"].astype(hin.dtype)).reshape(B, H, dh)
+    v = (x_in @ p["wv"].astype(hin.dtype)).reshape(B, H, dh)
+    g = x_c @ p["w_if"].astype(hin.dtype) + p["b_if"].astype(hin.dtype)
+    logi, f_pre = jnp.split(g, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    y, (C, n, m) = mlstm_step((cache["C"], cache["n"], cache["m"]),
+                              q, k, v, logf, logi.astype(jnp.float32),
+                              ctx.reset_t)
+    y = y.reshape(B, pf) * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(x_t.dtype)
+    return x_t + out[:, None], {"conv": conv_state, "C": C, "n": n, "m": m}
+
+
+def init_slstm(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((d,)),
+        "w_pre": _dense(ks[0], d, 4 * d),
+        "R": jax.random.normal(ks[1], (4, H, dh, dh)) * dh ** -0.5 * 0.3,
+        "w_out": _dense(ks[2], d, d),
+    }
+
+
+def apply_slstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    pre = (h @ p["w_pre"].astype(h.dtype)).reshape(B, L, 4, H, dh)
+    if collect:
+        y, (c, n, m, hh) = slstm(pre, p["R"], positions=ctx.positions,
+                                 valid=_valid(ctx, x), return_state=True)
+        out = x + y.reshape(B, L, d) @ p["w_out"].astype(x.dtype)
+        return out, {"c": c, "n": n, "m": m, "h": hh}
+    y = slstm(pre, p["R"], positions=ctx.positions)
+    y = y.reshape(B, L, d) @ p["w_out"].astype(x.dtype)
+    return x + y
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "h": z}
+
+
+def step_slstm(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    h = _norm(p["norm"], x_t, cfg.norm_eps)
+    pre = (h[:, 0] @ p["w_pre"].astype(h.dtype)).reshape(B, 1, 4, H, dh)
+    st = (cache["c"], cache["n"], cache["m"], cache["h"])
+    pos = None
+    if ctx.reset_t is not None:
+        pos = jnp.where(ctx.reset_t, 0, 1)[:, None]      # (B,1): 0 ⇒ reset
+    y, (c, n, m, hh) = slstm(pre, p["R"], positions=pos, state=st,
+                             return_state=True)
+    out = y.reshape(B, d) @ p["w_out"].astype(x_t.dtype)
+    return x_t + out[:, None], {"c": c, "n": n, "m": m, "h": hh}
+
+
+# ===========================================================================
+# kind registry
+# ===========================================================================
+
+INIT = {"attn": init_attn, "mlp": init_mlp, "moe": init_moe,
+        "mamba": init_mamba, "rec": init_rec, "mlstm": init_mlstm,
+        "slstm": init_slstm}
+
+CACHE_INIT = {"attn": init_attn_cache, "mamba": init_mamba_cache,
+              "rec": init_rec_cache, "mlstm": init_mlstm_cache,
+              "slstm": init_slstm_cache}
+
+STEP = {"attn": step_attn, "mamba": step_mamba, "rec": step_rec,
+        "mlstm": step_mlstm, "slstm": step_slstm}

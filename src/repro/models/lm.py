@@ -1,0 +1,386 @@
+"""Model assembly: embedding → scan-over-pattern-units → norm → head.
+
+Heterogeneous stacks (RecurrentGemma's rec/rec/attn, xLSTM's mLSTM/sLSTM
+mix) are expressed as a repeating *unit*; whole units are stacked and
+lax.scan'ed (compact HLO, O(1) compile time in depth), any remainder layers
+run unstacked. ``remat="unit"`` wraps each unit in jax.checkpoint.
+
+Three entry points per model, matching the assigned shapes:
+  * ``loss``/``forward``    — packed training fwd (train_4k)
+  * ``prefill``             — packed fwd that also collects decode caches and
+                              per-row cursor (prefill_32k)
+  * ``decode_step``         — one token against the cache (decode_32k,
+                              long_500k)
+
+Packing-awareness is uniform: every sequence-wise sub-block receives
+``positions``/``segment_ids`` and applies the paper's boundary rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models.blocks import Ctx
+
+
+# ---------------------------------------------------------------------------
+# unit layout
+# ---------------------------------------------------------------------------
+
+def unit_layout(cfg: ArchConfig) -> Tuple[Tuple[str, str], ...]:
+    """(param_name, kind) pairs for one pattern unit."""
+    out: List[Tuple[str, str]] = []
+    for i, kind in enumerate(cfg.unit):
+        if kind == "attn":
+            out.append((f"{i}_attn", "attn"))
+            if cfg.d_ff:
+                out.append((f"{i}_ffn", "mlp"))
+        elif kind == "moe_attn":
+            out.append((f"{i}_attn", "attn"))
+            out.append((f"{i}_moe", "moe"))
+        elif kind == "rec":
+            out.append((f"{i}_rec", "rec"))
+            if cfg.d_ff:
+                out.append((f"{i}_ffn", "mlp"))
+        elif kind == "mamba":
+            out.append((f"{i}_mamba", "mamba"))
+        elif kind == "mlstm":
+            out.append((f"{i}_mlstm", "mlstm"))
+            if cfg.d_ff:
+                out.append((f"{i}_ffn", "mlp"))
+        elif kind == "slstm":
+            out.append((f"{i}_slstm", "slstm"))
+            if cfg.d_ff:
+                out.append((f"{i}_ffn", "mlp"))
+        else:
+            raise ValueError(f"unknown unit kind {kind!r}")
+    return tuple(out)
+
+
+_APPLY = {"attn": B.apply_attn, "mlp": B.apply_mlp, "moe": B.apply_moe,
+          "mamba": B.apply_mamba, "rec": B.apply_rec,
+          "mlstm": B.apply_mlstm, "slstm": B.apply_slstm}
+
+
+def _apply_sub(kind, p, x, ctx, cfg, collect: int = 0):
+    """Uniform (x, aux, state) return. ``collect`` (= cache max_len when
+    nonzero) asks state-bearing blocks to also emit their decode cache."""
+    if kind in ("mlp", "moe"):
+        out = _APPLY[kind](p, x, ctx, cfg)
+        if kind == "moe":
+            return out[0], out[1], None
+        return out, None, None
+    if collect:
+        x, state = _APPLY[kind](p, x, ctx, cfg, collect=collect)
+        return x, None, state
+    return _APPLY[kind](p, x, ctx, cfg), None, None
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.layout = unit_layout(cfg)
+        self.n_units = cfg.n_layers // len(cfg.unit)
+        self.n_tail = cfg.n_layers % len(cfg.unit)
+        # tail layers reuse the unit layout prefix
+        self.tail_layout = unit_layout(cfg)[:self._tail_sublocks()] \
+            if self.n_tail else ()
+
+    def _tail_sublocks(self) -> int:
+        # count sub-blocks belonging to the first n_tail layers of the unit
+        n = 0
+        for name, kind in self.layout:
+            layer_idx = int(name.split("_")[0])
+            if layer_idx < self.n_tail:
+                n += 1
+        return n
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_units, k_tail, k_head = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            params["input_proj"] = B._dense(k_embed, cfg.d_model, cfg.d_model)
+        else:
+            params["embed"] = jax.random.normal(
+                k_embed, (cfg.vocab, cfg.d_model)) * 0.02
+
+        def unit_init(k):
+            p = {}
+            ks = jax.random.split(k, len(self.layout))
+            for kk, (name, kind) in zip(ks, self.layout):
+                p[name] = B.INIT[kind](kk, cfg)
+            return p
+
+        if self.n_units:
+            params["units"] = jax.vmap(unit_init)(
+                jax.random.split(k_units, self.n_units))
+        if self.n_tail:
+            p = {}
+            ks = jax.random.split(k_tail, len(self.tail_layout))
+            for kk, (name, kind) in zip(ks, self.tail_layout):
+                p[name] = B.INIT[kind](kk, cfg)
+            params["tail"] = p
+        params["final_norm"] = jnp.ones((cfg.d_model,))
+        if not cfg.tie_embeddings:
+            params["head"] = B._dense(k_head, cfg.d_model, cfg.vocab)
+        return params
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "audio":
+            x = batch["frames"].astype(dt) @ params["input_proj"].astype(dt)
+            return x
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(dt)          # (B, Nv, d)
+            vp = batch["vision_positions"]                  # (B, Nv) i32
+            bidx = jnp.arange(x.shape[0])[:, None]
+            x = x.at[bidx, vp].set(ve)
+        return x
+
+    def _ctx(self, batch) -> Ctx:
+        return Ctx(positions=batch.get("positions"),
+                   segment_ids=batch.get("segment_ids"),
+                   mrope_positions=batch.get("mrope_positions"))
+
+    # ----------------------------------------------------------- forward
+    def _stack(self, params, x, ctx) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Run all layers. Returns (hidden, aux)."""
+        cfg = self.cfg
+
+        def constrain(x):
+            # Megatron-SP analogue: the residual carried (and saved for
+            # backward) between units is sequence-sharded over "model";
+            # XLA re-gathers at TP matmuls and reduce-scatters afterwards.
+            if cfg.act_pspec is not None:
+                from jax.sharding import PartitionSpec as P
+                x = jax.lax.with_sharding_constraint(x, P(*cfg.act_pspec))
+            return x
+
+        def unit_body(carry, unit_p):
+            x, lb, zl = carry
+            for name, kind in self.layout:
+                x, aux, _ = _apply_sub(kind, unit_p[name], x, ctx, cfg)
+                if aux:
+                    lb = lb + aux["lb_loss"]
+                    zl = zl + aux["z_loss"]
+            return (constrain(x), lb, zl), None
+
+        if cfg.remat == "unit":
+            unit_body = jax.checkpoint(unit_body)
+        elif cfg.remat == "dots":
+            # save matmul outputs, recompute elementwise only — trades the
+            # HBM headroom won by act_sp/accum for less recompute traffic
+            unit_body = jax.checkpoint(
+                unit_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        lb = jnp.zeros((), jnp.float32)
+        zl = jnp.zeros((), jnp.float32)
+        x = constrain(x)
+        if self.n_units:
+            (x, lb, zl), _ = jax.lax.scan(unit_body, (x, lb, zl),
+                                          params["units"])
+        if self.n_tail:
+            for name, kind in self.tail_layout:
+                x, aux, _ = _apply_sub(kind, params["tail"][name], x, ctx,
+                                       cfg)
+                if aux:
+                    lb = lb + aux["lb_loss"]
+                    zl = zl + aux["z_loss"]
+        x = B._norm(params["final_norm"], x, cfg.norm_eps)
+        return x, {"lb_loss": lb, "z_loss": zl}
+
+    def _head_t(self, params):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return w
+
+    def forward(self, params, batch) -> jnp.ndarray:
+        """Full logits (B, L, V) — small models / tests only."""
+        x = self._embed(params, batch)
+        x, _ = self._stack(params, x, self._ctx(batch))
+        return (x @ self._head_t(params).astype(x.dtype)).astype(jnp.float32)
+
+    # ----------------------------------------------------------- loss
+    def loss(self, params, batch, loss_chunk: int = 512):
+        """Packed next-token CE. Labels: explicit batch['labels'] (with -1 =
+        masked) or derived by in-segment shift. Vocab-dim logits are computed
+        in L-chunks so the (B, L, V) f32 tensor never materializes."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x, aux = self._stack(params, x, self._ctx(batch))
+        if "labels" in batch:
+            labels = batch["labels"]
+        else:
+            seg = batch["segment_ids"]
+            tok = batch["tokens"]
+            nxt_same = (seg[:, 1:] == seg[:, :-1]) & (seg[:, 1:] != 0)
+            labels = jnp.where(nxt_same, tok[:, 1:], -1)
+            labels = jnp.concatenate(
+                [labels, jnp.full((labels.shape[0], 1), -1, labels.dtype)],
+                axis=1)
+        Bz, L, d = x.shape
+        W = self._head_t(params)
+        nchunk = max(1, L // min(loss_chunk, L))
+        if L % nchunk:
+            nchunk = 1
+        xs = x.reshape(Bz, nchunk, L // nchunk, d)
+        ls = labels.reshape(Bz, nchunk, L // nchunk)
+
+        def chunk_ce(args):
+            xc, lc = args                                  # (B, C, d), (B, C)
+            logits = (xc @ W.astype(xc.dtype)).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+            nll = lse - gold
+            mask = (lc >= 0).astype(jnp.float32)
+            return (nll * mask).sum(), mask.sum()
+
+        tot, cnt = jax.lax.map(chunk_ce, (jnp.moveaxis(xs, 1, 0),
+                                          jnp.moveaxis(ls, 1, 0)))
+        loss = tot.sum() / jnp.maximum(cnt.sum(), 1.0)
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+        metrics = {"ce": tot.sum() / jnp.maximum(cnt.sum(), 1.0),
+                   "tokens": cnt.sum(), **aux}
+        return loss, metrics
+
+    def prefill_logits(self, params, batch):
+        """Serving prefill: logits at each row's last valid position.
+        (The dry-run prefill cell lowers this — the forward pass dominates
+        its roofline; `prefill` below additionally hands off caches.)"""
+        x = self._embed(params, batch)
+        x, _ = self._stack(params, x, self._ctx(batch))
+        lens = (batch["segment_ids"] > 0).sum(-1)           # (B,)
+        xlast = x[jnp.arange(x.shape[0]), jnp.maximum(lens - 1, 0)]
+        W = self._head_t(params)
+        return (xlast @ W.astype(xlast.dtype)).astype(jnp.float32)
+
+    def prefill(self, params, batch, max_len: int):
+        """Full serving prefill: one forward pass over a batch of
+        left-aligned prompts (one sequence per row; segment_ids mark
+        validity) that also collects every layer's decode cache — O(L)
+        handoff instead of token replay. Recurrent states are frozen across
+        right-padding (Δ=0 / gate masking / slstm freeze) so the handed-off
+        state is exactly the state after each row's last valid token.
+
+        Returns (last_logits (B, V), cache, cache_len (B,))."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        ctx = self._ctx(batch)
+        lens = (batch["segment_ids"] > 0).sum(-1)
+
+        def unit_body(x, unit_p):
+            states = {}
+            for name, kind in self.layout:
+                x, _, st = _apply_sub(kind, unit_p[name], x, ctx, cfg,
+                                      collect=max_len)
+                if st is not None:
+                    states[name] = st
+            return x, states
+
+        cache: Dict[str, Any] = {}
+        if self.n_units:
+            x, unit_states = jax.lax.scan(unit_body, x, params["units"])
+            cache["units"] = unit_states
+        if self.n_tail:
+            tail_states = {}
+            for name, kind in self.tail_layout:
+                x, _, st = _apply_sub(kind, params["tail"][name], x, ctx,
+                                      cfg, collect=max_len)
+                if st is not None:
+                    tail_states[name] = st
+            cache["tail"] = tail_states
+        x = B._norm(params["final_norm"], x, cfg.norm_eps)
+        xlast = x[jnp.arange(x.shape[0]), jnp.maximum(lens - 1, 0)]
+        W = self._head_t(params)
+        logits = (xlast @ W.astype(xlast.dtype)).astype(jnp.float32)
+        return logits, cache, lens
+
+    # ----------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+
+        def one_unit(layout):
+            c = {}
+            for name, kind in layout:
+                if kind in ("mlp", "moe"):
+                    continue
+                if kind == "attn":
+                    c[name] = B.init_attn_cache(cfg, batch_size, max_len, dt)
+                else:
+                    c[name] = B.CACHE_INIT[kind](cfg, batch_size, dt)
+            return c
+
+        cache: Dict[str, Any] = {}
+        if self.n_units:
+            u = one_unit(self.layout)
+            cache["units"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (self.n_units,) + a.shape).copy(), u)
+        if self.n_tail:
+            cache["tail"] = one_unit(self.tail_layout)
+        return cache
+
+    def decode_step(self, params, cache, tokens_t, cache_len,
+                    reset: Optional[jnp.ndarray] = None,
+                    mrope_positions: Optional[jnp.ndarray] = None):
+        """tokens_t (B, 1) [or frames_t (B,1,d) for audio, unused];
+        cache_len (B,) cursor. Returns (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"], tokens_t, axis=0).astype(dt)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        ctx = Ctx(cache_len=cache_len, reset_t=reset,
+                  mrope_positions=mrope_positions)
+
+        def unit_step(x, unit_p, unit_c):
+            new_c = {}
+            for name, kind in self.layout:
+                if kind in ("mlp", "moe"):
+                    x, _, _ = _apply_sub(kind, unit_p[name], x, ctx, cfg)
+                else:
+                    x, new_c[name] = B.STEP[kind](unit_p[name], x,
+                                                  unit_c[name], ctx, cfg)
+            return x, new_c
+
+        if self.n_units:
+            def body(x, pc):
+                p_u, c_u = pc
+                x, c_new = unit_step(x, p_u, c_u)
+                return x, c_new
+            x, new_units = jax.lax.scan(body, x,
+                                        (params["units"], cache["units"]))
+            cache = dict(cache, units=new_units)
+        if self.n_tail:
+            new_tail = {}
+            for name, kind in self.tail_layout:
+                if kind in ("mlp", "moe"):
+                    x, _, _ = _apply_sub(kind, params["tail"][name], x, ctx,
+                                         cfg)
+                else:
+                    x, new_tail[name] = B.STEP[kind](
+                        params["tail"][name], x, cache["tail"][name], ctx,
+                        cfg)
+            cache = dict(cache, tail=new_tail)
+        x = B._norm(params["final_norm"], x, cfg.norm_eps)
+        logits = (x[:, 0] @ self._head_t(params).astype(x.dtype))
+        return logits.astype(jnp.float32), cache
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)

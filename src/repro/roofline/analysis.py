@@ -1,0 +1,145 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs      / (chips × 197e12  bf16 FLOP/s)      [v5e]
+  memory     = HLO_bytes      / (chips × 819e9   B/s HBM)
+  collective = collective_B   / (chips × 50e9    B/s per ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis — we parse the post-SPMD HLO text and sum *operand* sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (operand types are inlined on the defining
+line in HLO text, e.g. ``all-reduce(f32[16,1024]{1,0} %add.5)``).
+
+MODEL_FLOPS = 6·N·D (dense; N_active for MoE) ratioed against HLO FLOPs
+exposes remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+V5E = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# a defining line: "%name = TYPE[dims] opcode(OPERANDS...)"
+_DEF_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective type over the (post-SPMD) HLO.
+
+    Delegates to the while-aware static analyzer (roofline/hlo_static.py):
+    HLO text does not inline operand types, and collectives inside scan
+    bodies must be multiplied by the loop trip count."""
+    from repro.roofline.hlo_static import analyze
+    r = analyze(hlo_text)
+    out: Dict[str, float] = {op: 0.0 for op in _COLL_OPS}
+    out.update(r["collectives_by_op"])
+    out["total"] = r["collective_bytes"]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # whole-program HLO flops
+    hbm_bytes: float             # whole-program bytes accessed
+    coll_bytes: float            # whole-program collective operand bytes
+    chips: int
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    model_flops: Optional[float] = None
+
+    def __post_init__(self):
+        self.t_compute = self.flops / (self.chips * V5E["peak_flops"])
+        self.t_memory = self.hbm_bytes / (self.chips * V5E["hbm_bw"])
+        self.t_collective = self.coll_bytes / (self.chips * V5E["ici_bw"])
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound time that is useful compute — how close the
+        cell sits to the compute roofline if the dominant term were the
+        only cost."""
+        if not self.model_flops:
+            return 0.0
+        t_useful = self.model_flops / (self.chips * V5E["peak_flops"])
+        return t_useful / max(self.bound_time, 1e-30)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_per_step(cfg, kind: str, batch: int, seq: int) -> float:
+    """6·N·D (train) / 2·N·D (fwd-only) with N = active params (MoE-aware)."""
+    n_active = active_params(cfg)
+    tokens = batch * seq if kind != "decode" else batch * 1
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameter count with MoE experts scaled to the top-k active set."""
+    from repro.models.lm import build_model
+    import jax
+    import jax.numpy as jnp
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = ""
+        for p in path:
+            k = getattr(p, "key", None)
+            if k:
+                name = k
+        n = 1.0
+        for s in leaf.shape:
+            n *= s
+        if name.startswith("experts_") and cfg.n_experts:
+            n *= (cfg.top_k / cfg.n_experts)
+        total += n
+    return total

@@ -1,0 +1,70 @@
+"""Analytic HBM-traffic model for the Pallas selective-scan kernel path.
+
+The XLA-lowered chunked associative scan is traffic-bound: it materializes
+the (B, L, D, N) decay/state trajectories (×log-levels, ×backward-saved
+residuals). The Pallas kernel (kernels/selective_scan.py) keeps h in VMEM
+scratch and recomputes the trajectory per chunk in the backward from L/T
+checkpoints, so its HBM traffic is just the kernel I/O:
+
+  fwd : read u, Δ (2·B·L·D·s) + B, C (2·B·L·N·s) + pos (B·L·4)
+        write y (B·L·D·s) + checkpoints (B·(L/T)·N·D·4)
+  bwd : read everything fwd reads + dy (B·L·D·s) + checkpoints
+        write du, dΔ (2·B·L·D·4) + dB, dC partials (2·B·nD·L·N·4)
+        + dA, dD partials (small)
+
+(s = activation byte width, 2 for bf16.) This module sizes those terms per
+device for a given (cfg, shape, mesh) so EXPERIMENTS.md §Perf can report the
+deployed kernel path next to the measured XLA path. The conv1d_pack kernel
+is modeled the same way (I/O-only; the halo re-read is L/T-fractional).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.roofline.analysis import V5E
+
+
+def mamba_scan_traffic_per_device(cfg: ArchConfig, batch: int, seq: int,
+                                  data_shards: int, model_shards: int,
+                                  act_bytes: int = 2, chunk: int = 256,
+                                  block_d: int = 128) -> Dict[str, float]:
+    """Per-device bytes for ALL mamba blocks of one train step (fwd+bwd)."""
+    B = batch / data_shards                 # rows per device
+    L = seq
+    D = cfg.d_inner / model_shards          # channels per device
+    N = cfg.d_state
+    nD = max(1, D // block_d)
+    s = act_bytes
+    fwd = (2 * B * L * D * s          # u, Δ in
+           + 2 * B * L * N * s        # B, C in
+           + B * L * 4                # positions
+           + B * L * D * s            # y out
+           + B * (L / chunk) * N * D * 4)   # checkpoints
+    bwd = (fwd                        # recompute reads ≈ fwd reads
+           + B * L * D * s            # dy in
+           + 2 * B * L * D * 4        # du, dΔ out (f32)
+           + 2 * B * nD * L * N * 4)  # dB, dC partials
+    conv = 3 * (2 * B * L * D * s + B * L * 4)   # fwd + dx + dw passes
+    per_layer = fwd + bwd + conv
+    total = per_layer * cfg.n_layers
+    return {"per_layer_bytes": per_layer, "total_bytes": total,
+            "t_memory_s": total / V5E["hbm_bw"]}
+
+
+def compare_scan_paths(cfg: ArchConfig, batch: int, seq: int,
+                       data_shards: int = 16, model_shards: int = 16,
+                       measured_xla_scan_share: float = 0.9,
+                       measured_t_memory_s: float = None) -> Dict[str, float]:
+    """Kernel-path projection: replace ~`measured_xla_scan_share` of the
+    measured XLA memory term (the scan's share, from traffic_by_op) with the
+    analytic kernel traffic."""
+    k = mamba_scan_traffic_per_device(cfg, batch, seq, data_shards,
+                                      model_shards)
+    out = dict(k)
+    if measured_t_memory_s is not None:
+        rest = measured_t_memory_s * (1 - measured_xla_scan_share)
+        out["projected_t_memory_s"] = rest + k["t_memory_s"]
+        out["speedup_vs_xla"] = measured_t_memory_s / \
+            out["projected_t_memory_s"]
+    return out

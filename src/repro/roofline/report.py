@@ -1,0 +1,140 @@
+"""Render EXPERIMENTS.md tables from the dry-run / perf JSON artifacts.
+
+  PYTHONPATH=src python -m repro.roofline.report baseline
+  PYTHONPATH=src python -m repro.roofline.report opt
+  PYTHONPATH=src python -m repro.roofline.report multipod
+  PYTHONPATH=src python -m repro.roofline.report kernel
+"""
+import json
+import os
+import sys
+
+from repro.roofline.analysis import V5E
+
+
+def _load(d):
+    out = {}
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            rec = json.load(open(os.path.join(d, fn)))
+            key = (rec["arch"], rec["shape"], rec.get("mesh", ""),
+                   rec.get("variant", ""))
+            out[key] = rec
+    return out
+
+
+def _fmt_row(rec, show_variant=False):
+    rl = rec["roofline"]
+    mem = rec["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+    cols = [rec["arch"], rec["shape"]]
+    if show_variant:
+        cols.append(rec.get("variant", "baseline"))
+    cols += [rl["dominant"],
+             f"{rl['t_compute_s'] * 1e3:.1f}",
+             f"{rl['t_memory_s'] * 1e3:.1f}",
+             f"{rl['t_collective_s'] * 1e3:.1f}",
+             f"{(rl['useful_flops_ratio'] or 0):.2f}",
+             f"{rl['roofline_fraction']:.4f}",
+             f"{mem:.1f}", "yes" if mem < 16 else "**NO**"]
+    return "| " + " | ".join(str(c) for c in cols) + " |"
+
+
+def baseline(mesh="pod16x16"):
+    recs = _load("experiments/dryrun")
+    print("| arch | shape | dominant | comp ms | mem ms | coll ms | "
+          "useful | frac | tempGiB | fits |")
+    print("|---|---|---|---:|---:|---:|---:|---:|---:|---|")
+    for key in sorted(recs):
+        rec = recs[key]
+        if rec.get("status") != "ok" or key[2] != mesh:
+            continue
+        print(_fmt_row(rec))
+
+
+def skips():
+    recs = _load("experiments/dryrun")
+    for key in sorted(recs):
+        rec = recs[key]
+        if rec.get("status") == "skip" and key[2] == "pod16x16":
+            print(f"| {rec['arch']} | {rec['shape']} | {rec['reason']} |")
+
+
+def opt():
+    from repro.launch.perf import opt_variant
+    recs = _load("experiments/dryrun_opt")
+    base = _load("experiments/dryrun")
+    print("| arch | shape | variant | dominant | comp ms | mem ms | "
+          "coll ms | useful | frac | tempGiB | fits | frac vs baseline |")
+    print("|---|---|---|---|---:|---:|---:|---:|---:|---:|---|---|")
+    seen = set()
+    for key in sorted(recs):
+        arch, shape, mesh, variant = key
+        want = opt_variant(arch, shape)
+        if variant != want or (arch, shape) in seen:
+            continue
+        rec = recs[key]
+        if rec.get("status") != "ok":
+            continue
+        seen.add((arch, shape))
+        b = base.get((arch, shape, "pod16x16", ""))
+        delta = ""
+        if b and b.get("status") == "ok":
+            f0 = b["roofline"]["roofline_fraction"]
+            f1 = rec["roofline"]["roofline_fraction"]
+            delta = f"{f0:.4f} → {f1:.4f} ({f1 / max(f0, 1e-9):.1f}×)"
+        row = _fmt_row(rec, show_variant=True)
+        print(row[:-1] + f" {delta} |")
+
+
+def multipod():
+    recs = _load("experiments/dryrun")
+    print("| arch | shape | mesh | chips | comp ms | mem ms | coll ms | "
+          "compile s |")
+    print("|---|---|---|---:|---:|---:|---:|---:|")
+    for key in sorted(recs):
+        rec = recs[key]
+        if rec.get("status") != "ok":
+            continue
+        rl = rec["roofline"]
+        print(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+              f"{rec['chips']} | {rl['t_compute_s'] * 1e3:.1f} | "
+              f"{rl['t_memory_s'] * 1e3:.1f} | "
+              f"{rl['t_collective_s'] * 1e3:.1f} | {rec['compile_s']} |")
+
+
+def kernel():
+    """Pallas kernel-path projection for the mamba cells."""
+    from repro.configs.base import get_config
+    from repro.roofline.kernel_model import compare_scan_paths
+    recs = _load("experiments/dryrun_opt")
+    for arch in ("mamba-110m", "mamba-1.4b", "mamba-2.8b"):
+        cfg = get_config(arch)
+        key = None
+        for k in recs:
+            if k[0] == arch and k[1] == "train_4k":
+                key = k
+        if key is None:
+            continue
+        rec = recs[key]
+        if rec.get("status") != "ok":
+            continue
+        t_mem = rec["roofline"]["t_memory_s"]
+        # scan share of measured traffic: everything except dot+collectives
+        by = rec.get("traffic_by_op", {})
+        tot = sum(by.values()) or 1.0
+        scan_share = 1.0 - (by.get("dot", 0.0) / tot)
+        proj = compare_scan_paths(cfg, 256, 4096,
+                                  measured_xla_scan_share=scan_share,
+                                  measured_t_memory_s=t_mem)
+        print(f"| {arch} | {t_mem * 1e3:.0f} | {scan_share:.2f} | "
+              f"{proj['t_memory_s'] * 1e3:.1f} | "
+              f"{proj['projected_t_memory_s'] * 1e3:.0f} | "
+              f"{proj['speedup_vs_xla']:.0f}× |")
+
+
+if __name__ == "__main__":
+    {"baseline": baseline, "opt": opt, "multipod": multipod,
+     "kernel": kernel, "skips": skips}[sys.argv[1] if len(sys.argv) > 1
+                                       else "baseline"]()

@@ -1,0 +1,46 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_packed(rng, lens, cap, feat=None, rows=None):
+    """Helper: pack per-sequence arrays (built by `feat(n)` or token ids)
+    into (rows, cap) buffers. Returns (packed_values, positions, seg_ids,
+    per_seq_values, row_offsets)."""
+    import numpy as np
+    vals = [feat(n) if feat else
+            rng.integers(1, 100, size=(n,)).astype(np.int32) for n in lens]
+    rows_plan = []
+    cur, used = [], 0
+    for i, n in enumerate(lens):
+        if used + n > cap:
+            rows_plan.append(cur)
+            cur, used = [], 0
+        cur.append(i)
+        used += n
+    rows_plan.append(cur)
+    R = rows if rows is not None else len(rows_plan)
+    shape_tail = vals[0].shape[1:]
+    packed = np.zeros((R, cap) + shape_tail, vals[0].dtype)
+    pos = np.zeros((R, cap), np.int32)
+    seg = np.zeros((R, cap), np.int32)
+    offsets = {}
+    for r, row in enumerate(rows_plan):
+        off = 0
+        for s_i, i in enumerate(row, start=1):
+            n = lens[i]
+            packed[r, off:off + n] = vals[i]
+            pos[r, off:off + n] = np.arange(n)
+            seg[r, off:off + n] = s_i
+            offsets[i] = (r, off)
+            off += n
+    return packed, pos, seg, vals, offsets

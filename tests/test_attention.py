@@ -1,0 +1,111 @@
+"""Attention: masks, GQA, chunked online-softmax vs full, decode, M-RoPE."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.attention import (attention, decode_attention, rope, mrope,
+                                  NEG_INF)
+
+
+def _qkv(rng, B, L, H, Hkv, Dh):
+    q = jnp.asarray(rng.normal(size=(B, L, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, Hkv, Dh)), jnp.float32)
+    return q, k, v
+
+
+def test_causal_mask(rng):
+    q, k, v = _qkv(rng, 1, 8, 2, 2, 4)
+    y = attention(q, k, v, causal=True)
+    # perturbing the future must not change the past
+    k2 = k.at[:, 5:].add(100.0)
+    v2 = v.at[:, 5:].add(100.0)
+    y2 = attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(y[:, :5], y2[:, :5], atol=1e-5)
+    assert float(jnp.abs(y[:, 5:] - y2[:, 5:]).max()) > 1e-3
+
+
+def test_sliding_window(rng):
+    q, k, v = _qkv(rng, 1, 16, 2, 2, 4)
+    y = attention(q, k, v, causal=True, window=4)
+    # token 12 must not see token ≤ 8
+    k2 = k.at[:, :8].add(100.0)
+    v2 = v.at[:, :8].add(100.0)
+    y2 = attention(q, k2, v2, causal=True, window=4)
+    np.testing.assert_allclose(y[:, 12:], y2[:, 12:], atol=1e-5)
+
+
+def test_gqa_matches_repeated_mha(rng):
+    B, L, H, Hkv, Dh = 2, 10, 8, 2, 4
+    q, k, v = _qkv(rng, B, L, H, Hkv, Dh)
+    y_gqa = attention(q, k, v, causal=True)
+    k_rep = jnp.repeat(k, H // Hkv, axis=2)
+    v_rep = jnp.repeat(v, H // Hkv, axis=2)
+    y_mha = attention(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(y_gqa, y_mha, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 6])
+def test_chunked_equals_full(rng, causal, window):
+    B, L = 2, 32
+    q, k, v = _qkv(rng, B, L, 4, 2, 8)
+    seg = jnp.asarray(np.tile(np.concatenate(
+        [np.full(20, 1), np.full(10, 2), np.zeros(2)]), (B, 1)).astype(np.int32))
+    y_full = attention(q, k, v, segment_ids_q=seg, segment_ids_kv=seg,
+                       causal=causal, window=window)
+    y_chun = attention(q, k, v, segment_ids_q=seg, segment_ids_kv=seg,
+                       causal=causal, window=window, chunk_kv=8)
+    np.testing.assert_allclose(y_full, y_chun, atol=1e-4)
+
+
+def test_padding_rows_zero(rng):
+    """Fully-masked (padding) queries return 0, not NaN."""
+    q, k, v = _qkv(rng, 1, 8, 2, 2, 4)
+    seg = jnp.zeros((1, 8), jnp.int32)      # everything is padding
+    y = attention(q, k, v, segment_ids_q=seg, segment_ids_kv=seg, causal=True)
+    assert not bool(jnp.isnan(y).any())
+    np.testing.assert_allclose(y, 0.0, atol=1e-6)
+    y2 = attention(q, k, v, segment_ids_q=seg, segment_ids_kv=seg,
+                   causal=True, chunk_kv=4)
+    assert not bool(jnp.isnan(y2).any())
+    np.testing.assert_allclose(y2, 0.0, atol=1e-6)
+
+
+def test_decode_attention_matches_full(rng):
+    B, L, H, Hkv, Dh = 2, 12, 4, 2, 8
+    q, k, v = _qkv(rng, B, L, H, Hkv, Dh)
+    y_full = attention(q, k, v, causal=True)
+    for t in [0, 5, 11]:
+        y_t = decode_attention(q[:, t], k, v, jnp.full((B,), t))
+        np.testing.assert_allclose(y_t, y_full[:, t], atol=1e-5)
+
+
+def test_rope_is_relative(rng):
+    """RoPE scores depend only on relative positions — shifting both q and k
+    positions by a constant leaves attention unchanged."""
+    B, L, H, Dh = 1, 6, 2, 8
+    q, k, v = _qkv(rng, B, L, H, H, Dh)
+    p0 = jnp.arange(L)[None]
+    y0 = attention(rope(q, p0), rope(k, p0), v, causal=True)
+    p1 = p0 + 37
+    y1 = attention(rope(q, p1), rope(k, p1), v, causal=True)
+    np.testing.assert_allclose(y0, y1, atol=1e-4)
+
+
+def test_mrope_text_degenerates_to_rope(rng):
+    """With all three position channels equal, M-RoPE == RoPE (text mode)."""
+    B, L, H, Dh = 1, 6, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, L, H, Dh)), jnp.float32)
+    pos = jnp.arange(L)[None]
+    pos3 = jnp.repeat(pos[..., None], 3, axis=-1)
+    a = rope(q, pos)
+    b = mrope(q, pos3, sections=(2, 3, 3))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_mrope_sections_validated(rng):
+    q = jnp.zeros((1, 4, 2, 16))
+    with pytest.raises(ValueError):
+        mrope(q, jnp.zeros((1, 4, 3), jnp.int32), sections=(2, 2, 2))

@@ -1,0 +1,82 @@
+"""AdamW vs a hand-rolled numpy reference; schedules; clipping."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim.adamw import (AdamW, AdamWConfig, cosine_schedule,
+                               constant_schedule, global_norm,
+                               clip_by_global_norm)
+
+
+def _np_adamw(params, grads, m, v, step, lr, b1, b2, eps, wd, decay_mask):
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        out_m[k] = b1 * m[k] + (1 - b1) * g
+        out_v[k] = b2 * v[k] + (1 - b2) * g ** 2
+        mh = out_m[k] / (1 - b1 ** step)
+        vh = out_v[k] / (1 - b2 ** step)
+        delta = mh / (np.sqrt(vh) + eps)
+        if decay_mask[k]:
+            delta = delta + wd * params[k]
+        out_p[k] = params[k] - lr * delta
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_reference(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+    opt = AdamW(constant_schedule(1e-2),
+                AdamWConfig(clip_norm=None, weight_decay=0.1))
+    state = opt.init(params)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    mask = {"w": True, "b": False}     # wd only on rank≥2
+    for step in range(1, 6):
+        grads = {k: jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+                 for k, v in params.items()}
+        params, state, _ = opt.update(grads, state, params)
+        np_g = {k: np.asarray(v) for k, v in grads.items()}
+        np_p, np_m, np_v = _np_adamw(np_p, np_g, np_m, np_v, step,
+                                     1e-2, 0.9, 0.95, 1e-8, 0.1, mask)
+        for k in params:
+            np.testing.assert_allclose(params[k], np_p[k], atol=1e-5,
+                                       err_msg=f"step {step} {k}")
+
+
+def test_clipping():
+    tree = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(norm, np.sqrt(90.0), rtol=1e-6)
+    np.testing.assert_allclose(global_norm(clipped), 1.0, rtol=1e-5)
+    # under the limit: unchanged
+    small = {"a": jnp.full((4,), 0.1)}
+    out, _ = clip_by_global_norm(small, 10.0)
+    np.testing.assert_allclose(out["a"], small["a"], rtol=1e-6)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110, final_frac=0.1)
+    assert float(lr(0)) == 0.0
+    np.testing.assert_allclose(float(lr(5)), 0.5, rtol=1e-6)
+    np.testing.assert_allclose(float(lr(10)), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(float(lr(110)), 0.1, rtol=1e-5)
+    assert float(lr(60)) < 1.0
+
+
+def test_loss_decreases_on_quadratic():
+    """End-to-end sanity: AdamW minimizes a quadratic."""
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    opt = AdamW(constant_schedule(0.1))
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2

@@ -1,0 +1,100 @@
+"""Packing: pack/unpack inverse, policies, paper §5 padding rates."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (pack, unpack, pad_to_max, plan_packing,
+                                padding_rate, pack_with_split)
+from repro.data.dataset import SyntheticCorpus, CorpusConfig
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=30),
+       st.sampled_from(["sequential", "first_fit", "sorted_greedy"]))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(lens, policy):
+    rng = np.random.default_rng(0)
+    seqs = [rng.integers(1, 1000, size=n).astype(np.int32) for n in lens]
+    pb = pack(seqs, capacity=64, policy=policy)
+    rec = unpack(pb.tokens, pb)
+    assert len(rec) == len(seqs)
+    for a, b in zip(rec, seqs):
+        np.testing.assert_array_equal(a, b)
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_position_and_segment_invariants(lens):
+    rng = np.random.default_rng(1)
+    seqs = [rng.integers(1, 1000, size=n).astype(np.int32) for n in lens]
+    pb = pack(seqs, capacity=64)
+    pos = np.asarray(pb.positions)
+    seg = np.asarray(pb.segment_ids)
+    # padding has seg == 0 and pos == 0
+    assert (pos[seg == 0] == 0).all()
+    # each segment's positions are 0..n-1 in order
+    for r in range(seg.shape[0]):
+        for s in np.unique(seg[r]):
+            if s == 0:
+                continue
+            p = pos[r][seg[r] == s]
+            np.testing.assert_array_equal(p, np.arange(len(p)))
+    # position 0 marks starts: count equals number of sequences
+    assert int(((pos == 0) & (seg > 0)).sum()) == len(seqs)
+
+
+def test_too_long_sequence_raises():
+    with pytest.raises(ValueError):
+        pack([np.ones(100, np.int32)], capacity=64)
+
+
+def test_padding_rates_paper_discussion():
+    """Paper §5: sequential ≈19.1% padding on InternLM lengths; sorted local
+    greedy ≈0.41%. Our synthetic corpus matches the paper's length stats
+    (57–2048, mean≈646); check same ordering and ballpark."""
+    corpus = SyntheticCorpus(CorpusConfig(seed=3))
+    lens = np.concatenate([corpus.lengths(s, 256) for s in range(8)]).tolist()
+    seq_rate = padding_rate(lens, 4096, "sequential")
+    sort_rate = padding_rate(lens, 4096, "sorted_greedy")
+    ff_rate = padding_rate(lens, 4096, "first_fit")
+    assert 0.05 < seq_rate < 0.30          # paper: 19.1%
+    assert sort_rate < 0.02                # paper: 0.41%
+    assert sort_rate < ff_rate <= seq_rate + 1e-9
+    # pad-to-max baseline is far worse (paper: 66.3%)
+    pad_rate = 1 - np.mean(lens) / 2048
+    assert pad_rate > 0.5
+
+
+def test_pack_with_split_zero_padding():
+    rng = np.random.default_rng(2)
+    seqs = [rng.integers(1, 100, size=n).astype(np.int32)
+            for n in [10, 20, 30, 15]]
+    sb = pack_with_split(seqs, capacity=16)
+    # all but the final partial row have zero padding
+    seg = np.asarray(sb.segment_ids)
+    assert (seg[:-1] > 0).all()
+    rec = unpack(sb.tokens, sb)
+    whole = np.concatenate(seqs)
+    got = np.concatenate([np.concatenate([p for p in rec])])
+    # every token appears exactly once in order
+    np.testing.assert_array_equal(
+        np.concatenate(rec)[:whole.size], whole)
+    # carry mask marks rows whose first token is mid-sequence
+    pos = np.asarray(sb.positions)
+    np.testing.assert_array_equal(np.asarray(sb.carry_mask),
+                                  (pos[:, 0] > 0) & (seg[:, 0] > 0))
+
+
+def test_plan_packing_capacity_respected():
+    lens = [30, 40, 10, 64, 1, 63]
+    for policy in ("sequential", "first_fit", "sorted_greedy"):
+        plan = plan_packing(lens, 64, policy)
+        for row in plan:
+            assert sum(lens[i] for i in row) <= 64
+        assert sorted(i for row in plan for i in row) == list(range(len(lens)))
+
+
+def test_pad_to_max_matches_paper_baseline():
+    seqs = [np.arange(1, 5, dtype=np.int32), np.arange(1, 3, dtype=np.int32)]
+    pb = pad_to_max(seqs, 8)
+    assert pb.tokens.shape == (2, 8)
+    assert pb.padding_rate() == pytest.approx(1 - 6 / 16)

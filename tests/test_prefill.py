@@ -1,0 +1,98 @@
+"""Prefill-with-cache: one forward pass hands off per-layer decode caches
+(O(L) serving handoff). Reference = token-by-token replay with per-row
+freezing of finished rows. Covers ring-buffer attention (window < max_len),
+SSM/RG-LRU/mLSTM/sLSTM state freezing across right-padding."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.lm import build_model
+
+
+def _replay(model, params, toks, lens, max_len):
+    B = len(lens)
+    cache = model.init_cache(B, max_len)
+    lg = None
+    for t in range(max(lens)):
+        tk = jnp.stack([toks[b, min(t, lens[b] - 1)]
+                        for b in range(B)])[:, None]
+        cur = jnp.minimum(jnp.full((B,), t), jnp.asarray(lens) - 1)
+        lg_t, cache_new = model.decode_step(params, cache, tk, cur)
+        mask = jnp.asarray([t < n for n in lens])
+
+        def freeze(path, new, old):
+            # unit-scanned cache leaves carry a leading n_units dim
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            ax = 1 if stacked else 0
+            shape = [1] * new.ndim
+            shape[ax] = B
+            return jnp.where(mask.reshape(shape), new, old)
+
+        cache = jax.tree_util.tree_map_with_path(freeze, cache_new, cache)
+        lg = lg_t if lg is None else jnp.where(
+            (jnp.asarray(lens) - 1 == t)[:, None], lg_t, lg)
+    return lg, cache
+
+
+CASES = [("stablelm-1.6b", None), ("stablelm-1.6b", {"attn_window": 5}),
+         ("mamba-110m", None), ("recurrentgemma-2b", None),
+         ("xlstm-125m", None), ("mixtral-8x22b", None),
+         ("qwen2-vl-2b", None)]
+
+
+@pytest.mark.parametrize("arch,mod", CASES)
+def test_prefill_handoff_matches_replay(arch, mod, rng):
+    cfg = get_config(arch).reduced()
+    if mod:
+        cfg = dataclasses.replace(cfg, **mod)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lens, L, max_len = [7, 11], 12, 24
+    toks = np.zeros((2, L), np.int32)
+    seg = np.zeros((2, L), np.int32)
+    pos = np.zeros((2, L), np.int32)
+    for b, n in enumerate(lens):
+        toks[b, :n] = rng.integers(1, cfg.vocab, n)
+        seg[b, :n] = 1
+        pos[b, :n] = np.arange(n)
+    batch = {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos),
+             "segment_ids": jnp.asarray(seg)}
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = jnp.asarray(
+            np.repeat(pos[..., None], 3, axis=-1))
+    logits, cache, clen = model.prefill(params, batch, max_len)
+    lg_ref, cache_ref = _replay(model, params, jnp.asarray(toks), lens,
+                                max_len)
+    np.testing.assert_allclose(logits, lg_ref, atol=2e-3, rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(clen), lens)
+    # decode continuation: 3 greedy tokens, both paths identical
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    tok_r = jnp.argmax(lg_ref, -1)[:, None].astype(jnp.int32)
+    for i in range(3):
+        l1, cache = model.decode_step(params, cache, tok, clen + i)
+        l2, cache_ref = model.decode_step(params, cache_ref, tok_r,
+                                          jnp.asarray(lens) + i)
+        np.testing.assert_allclose(l1, l2, atol=2e-3, rtol=1e-3,
+                                   err_msg=f"{arch} step {i}")
+        tok = jnp.argmax(l1, -1)[:, None].astype(jnp.int32)
+        tok_r = jnp.argmax(l2, -1)[:, None].astype(jnp.int32)
+
+
+def test_prefill_logits_consistent_with_prefill():
+    cfg = get_config("mamba-110m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    n, L = 9, 12
+    toks = np.zeros((1, L), np.int32)
+    toks[0, :n] = rng.integers(1, cfg.vocab, n)
+    seg = (np.arange(L) < n).astype(np.int32)[None]
+    pos = (np.arange(L) * (np.arange(L) < n)).astype(np.int32)[None]
+    batch = {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos),
+             "segment_ids": jnp.asarray(seg)}
+    a = model.prefill_logits(params, batch)
+    b, _, _ = model.prefill(params, batch, 16)
+    np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,117 @@
+"""Roofline machinery: while-aware static HLO analysis (flops × trip count,
+collective operand bytes, traffic model) + term arithmetic."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_static import analyze, HloStaticAnalysis
+from repro.roofline.analysis import Roofline, model_flops_per_step, V5E
+from repro.configs.base import get_config
+
+
+def test_matmul_flops_exact():
+    f = lambda a, b: a @ b
+    hlo = jax.jit(f).lower(jnp.zeros((128, 256)),
+                           jnp.zeros((256, 64))).compile().as_text()
+    r = analyze(hlo)
+    assert r["flops"] == 2 * 128 * 256 * 64
+
+
+def test_scan_flops_times_trip_count():
+    def body(x, w):
+        return x @ w, ()
+
+    def fs(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    hlo = jax.jit(fs).lower(jnp.zeros((8, 128)),
+                            jnp.zeros((4, 128, 128))).compile().as_text()
+    r = analyze(hlo)
+    assert r["flops"] == 4 * 2 * 8 * 128 * 128
+    # naive cost_analysis undercounts — the reason this module exists
+    cost = jax.jit(fs).lower(jnp.zeros((8, 128)),
+                             jnp.zeros((4, 128, 128))).compile() \
+        .cost_analysis()
+    assert cost["flops"] < r["flops"] / 2
+
+
+def test_nested_scan():
+    def body(x, w):
+        return x @ w, ()
+
+    def f2(x, ws):
+        def outer(x, _):
+            return jax.lax.scan(body, x, ws)[0], ()
+        return jax.lax.scan(outer, x, jnp.arange(3))[0]
+
+    hlo = jax.jit(f2).lower(jnp.zeros((8, 128)),
+                            jnp.zeros((4, 128, 128))).compile().as_text()
+    assert analyze(hlo)["flops"] == 3 * 4 * 2 * 8 * 128 * 128
+
+
+def test_traffic_positive_and_bounded():
+    f = lambda a, b: jax.nn.relu(a @ b)
+    hlo = jax.jit(f).lower(jnp.zeros((64, 64)),
+                           jnp.zeros((64, 64))).compile().as_text()
+    r = analyze(hlo)
+    # at least inputs+output once; at most a small multiple
+    lo = 3 * 64 * 64 * 4
+    assert lo <= r["traffic_bytes"] <= 10 * lo
+
+
+def test_roofline_terms():
+    rl = Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9, chips=1,
+                  model_flops=98.5e12)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(1.0)
+    assert rl.t_collective == pytest.approx(1.0)
+    assert rl.useful_flops_ratio == pytest.approx(0.5)
+    assert rl.roofline_fraction == pytest.approx(0.5)
+    rl2 = Roofline(flops=1e12, hbm_bytes=819e9 * 10, coll_bytes=0, chips=1)
+    assert rl2.dominant == "memory"
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = get_config("stablelm-1.6b")
+    moe = get_config("mixtral-8x22b")
+    f_dense = model_flops_per_step(dense, "train", 1, 1)
+    f_moe = model_flops_per_step(moe, "train", 1, 1)
+    from repro.roofline.analysis import active_params
+    total_moe_params_lower_bound = \
+        moe.n_experts * moe.n_layers * 3 * moe.d_model * moe.d_ff
+    # active params must be well below total (top-2 of 8 experts)
+    assert active_params(moe) < 0.5 * total_moe_params_lower_bound
+    assert f_dense == pytest.approx(6 * active_params(dense))
+    assert f_moe == pytest.approx(6 * active_params(moe))
+
+
+def test_collective_bytes_from_sharded_module():
+    import subprocess
+    import sys
+    import os
+    src = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.roofline.hlo_static import analyze
+mesh = jax.make_mesh((4,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+b = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+f = jax.jit(lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P(None, None)))
+r = analyze(f.lower(a, b).compile().as_text())
+assert r["flops"] == 2 * 128 * 64 * 128, r["flops"]   # per-device share
+assert r["collective_bytes"] == 128 * 128 * 4, r      # partial-sum AR operand
+assert "all-reduce" in r["collectives_by_op"]
+print("COLL_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "COLL_OK" in out.stdout, out.stderr[-1500:]

@@ -1,0 +1,111 @@
+"""Trainer: loss decrease, grad-accum equivalence, resume determinism,
+emergency checkpoint plumbing."""
+import dataclasses
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamW, constant_schedule, cosine_schedule
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step
+from repro.data.dataset import SyntheticCorpus, CorpusConfig
+from repro.data.packing_loader import PackingLoader, LoaderConfig
+
+
+def _tiny():
+    cfg = get_config("mamba-110m").reduced()
+    return dataclasses.replace(cfg, vocab=128, n_layers=2, d_model=32)
+
+
+def _loader(rows=4, seq=64, mode="pack"):
+    corpus = SyntheticCorpus(CorpusConfig(vocab=128, seed=0, len_min=5,
+                                          len_max=40, mu=3.0, sigma=0.5))
+    return PackingLoader(corpus, LoaderConfig(rows=rows, seq_len=seq,
+                                              mode=mode))
+
+
+def test_loss_decreases(tmp_path):
+    model = build_model(_tiny())
+    opt = AdamW(cosine_schedule(3e-3, warmup=5, total=40))
+    tr = Trainer(model, opt, _loader(),
+                 TrainerConfig(steps=25, log_every=100))
+    _, hist = tr.train(jax.random.PRNGKey(0), verbose=False)
+    assert np.mean([h["loss"] for h in hist[-5:]]) < \
+        np.mean([h["loss"] for h in hist[:5]]) - 0.2
+
+
+def test_grad_accum_equivalence():
+    """accum=2 over the same global batch == accum=1 (up to fp assoc)."""
+    model = build_model(_tiny())
+    opt = AdamW(constant_schedule(1e-3))
+    loader = _loader(rows=4)
+    batch = loader.batch(0)
+    params = model.init(jax.random.PRNGKey(0))
+    s1 = {"params": params, "opt": opt.init(params)}
+    s2 = jax.tree.map(lambda x: x, s1)
+    f1 = jax.jit(make_train_step(model, opt, accum=1))
+    f2 = jax.jit(make_train_step(model, opt, accum=2))
+    n1, m1 = f1(s1, batch)
+    n2, m2 = f2(s2, batch)
+    # losses: accum averages microbatch means (token counts differ slightly
+    # per row) — close but not identical; params should track closely
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.05
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                     n1["params"], n2["params"])
+    assert max(jax.tree.leaves(d)) < 5e-2
+
+
+def test_resume_is_deterministic(tmp_path):
+    """train 10 straight == train 5, checkpoint, restart, train 5 more."""
+    model = build_model(_tiny())
+
+    def mk(dirname, steps, every):
+        opt = AdamW(constant_schedule(1e-3))
+        return Trainer(model, opt, _loader(),
+                       TrainerConfig(steps=steps, log_every=100,
+                                     ckpt_every=every, ckpt_dir=dirname,
+                                     keep_ckpts=5))
+
+    t_a = mk(str(tmp_path / "a"), 10, 100)
+    state_a, _ = t_a.train(jax.random.PRNGKey(7), verbose=False)
+
+    t_b1 = mk(str(tmp_path / "b"), 5, 5)
+    t_b1.train(jax.random.PRNGKey(7), verbose=False)
+    t_b2 = mk(str(tmp_path / "b"), 10, 100)
+    state_b, hist_b = t_b2.train(jax.random.PRNGKey(999), verbose=False)
+    assert len(hist_b) == 5                     # resumed at step 5
+    for a, b in zip(jax.tree.leaves(state_a["params"]),
+                    jax.tree.leaves(state_b["params"])):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_bf16_grad_accum_runs():
+    model = build_model(_tiny())
+    opt = AdamW(constant_schedule(1e-3))
+    f = jax.jit(make_train_step(model, opt, accum=2,
+                                grad_accum_dtype="bfloat16"))
+    loader = _loader(rows=4)
+    params = model.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params)}
+    state, metrics = f(state, loader.batch(0))
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_single_vs_padding_vs_pack_same_model():
+    """All three paper regimes drive the same model/loss code."""
+    model = build_model(_tiny())
+    opt = AdamW(constant_schedule(1e-3))
+    f = jax.jit(make_train_step(model, opt))
+    for mode, rows in (("pack", 4), ("pad", 4), ("single", 1)):
+        loader = _loader(rows=rows, mode=mode)
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": opt.init(params)}
+        batch = loader.batch(0)
+        if mode == "single":
+            f2 = jax.jit(make_train_step(model, opt))
+            state, metrics = f2(state, batch)
+        else:
+            state, metrics = f(state, batch)
+        assert np.isfinite(float(metrics["loss"])), mode
