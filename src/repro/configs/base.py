@@ -63,8 +63,17 @@ class ArchConfig:
     dtype: str = "bfloat16"           # activation/compute dtype
     param_dtype: str = "float32"
     use_pallas: bool = False          # flip on real TPU for kernel hot paths
+    pallas_schedule: str = "blocked"  # step | blocked (Pallas scan kernel;
+                                      # blocked = SSD-style subtile matmuls,
+                                      # step = per-step reference walk)
     scan_chunk: int = 256             # chunk length for XLA-path scans
-    scan_impl: str = "chunked"        # chunked | fused_seq (XLA ssm path)
+    scan_impl: str = "blocked"        # blocked | chunked | fused_seq (XLA
+                                      # ssm path; blocked = SSD-style
+                                      # block-parallel schedule, the default
+                                      # hot path — see core/scan.py)
+    scan_intra: Optional[str] = None  # blocked in-chunk evaluator: None =
+                                      # auto (matmul on TPU, assoc on CPU),
+                                      # or force "matmul" | "assoc"
     scan_dtype: str = "float32"       # recurrence compute dtype (bf16 halves
                                       # the scan's HBM traffic on the XLA path)
     act_pspec: Optional[Tuple] = None  # sharding constraint on the residual

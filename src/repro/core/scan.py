@@ -18,15 +18,39 @@ this property directly.
 This one primitive backs: Mamba-1 selective scan (state (D, N)), RG-LRU
 (state (D,)), and mLSTM (matrix state (H, dk, dv) with scalar per-head decay).
 
-Three schedules:
-  * ``sequential``   — lax.scan over time. Reference & decode-step building block.
+Schedule taxonomy (who wins when):
+  * ``sequential``   — lax.scan over time. Reference & decode-step building
+                       block. O(L) chain of tiny VPU ops; wins only at L
+                       small enough that per-chunk setup overhead dominates.
   * ``associative``  — jax.lax.associative_scan over the full L (materializes
-                       (B, L, *S) twice; fine for small state).
-  * ``chunked``      — DEFAULT. lax.scan over L/T chunks carrying h, with an
+                       (B, L, *S) twice; fine for small state / short L).
+  * ``chunked``      — lax.scan over L/T chunks carrying h, with an
                        intra-chunk associative scan. Peak memory O(B·T·S)
                        instead of O(B·L·S) for the scan internals; this is
-                       the direct XLA analogue of the Pallas kernel's
-                       grid-sequential VMEM-resident carry.
+                       the direct XLA analogue of the Pallas ``step``
+                       kernel's grid-sequential VMEM-resident carry. Still
+                       elementwise (VPU) work end to end.
+  * ``blocked``      — SSD-style block-parallel schedule (Gu & Dao's
+                       structured-state-space duality, adapted to segmented
+                       scans): per chunk of length T, build the
+                       lower-triangular cumulative-decay matrix
+                       M[i,j] = Π_{j<k≤i} a_k (reset-masked: a→0 at segment
+                       starts, so no product spans a boundary) and compute
+                       all in-chunk states as one contraction h = M @ b,
+                       plus an O(L/T) inter-chunk carry. Turns the O(L)
+                       dependent elementwise chain into L/T matmul-shaped
+                       contractions (MXU-friendly); costs O(T²·S) per-chunk
+                       intermediates and ~T× the FLOPs, so it wins when the
+                       hardware has idle matrix units and L ≫ T (see
+                       benchmarks/run.py fig2). The selective-scan
+                       specialization (exp-of-cumsum log decays, y = C·h
+                       folded in, (B, L, D, N) never materialized) is
+                       core/ssm.py::method='blocked'; its TPU-kernel twin is
+                       kernels/selective_scan.py::schedule='blocked'.
+
+The Pallas kernels mirror the last two: ``schedule='step'`` walks time with
+a per-step VPU update (chunk carry in VMEM scratch), ``schedule='blocked'``
+applies the same masked-triangular-decay contraction per in-chunk subtile.
 """
 from __future__ import annotations
 
@@ -94,6 +118,30 @@ def scan_associative(a: jnp.ndarray, b: jnp.ndarray,
     return B, B[:, -1]
 
 
+def _chunk_scan(a, b, h0, chunk, chunk_body):
+    """Shared scaffold for the chunk-carried schedules: pad L to a multiple
+    of the chunk with identity steps (a=1, b=0 carry h unchanged), run
+    ``chunk_body(h_in, (ac, bc)) -> (h_out, h_chunk)`` under lax.scan over
+    the chunks, and stitch/slice the result back to (B, L, *S)."""
+    Bsz, L = a.shape[0], a.shape[1]
+    T = min(chunk, L)
+    pad = (-L) % T
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    Lp = a.shape[1]
+    nc = Lp // T
+    S = a.shape[2:]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz,) + S, a.dtype)
+    aC = jnp.moveaxis(a.reshape((Bsz, nc, T) + S), 1, 0)   # (nc, B, T, *S)
+    bC = jnp.moveaxis(b.reshape((Bsz, nc, T) + S), 1, 0)
+    h_last, hs = jax.lax.scan(chunk_body, h0, (aC, bC))
+    h_all = jnp.moveaxis(hs, 0, 1).reshape((Bsz, Lp) + S)[:, :L]
+    return h_all, h_last
+
+
 def scan_chunked(a: jnp.ndarray, b: jnp.ndarray,
                  reset: Optional[jnp.ndarray] = None,
                  h0: Optional[jnp.ndarray] = None,
@@ -104,20 +152,6 @@ def scan_chunked(a: jnp.ndarray, b: jnp.ndarray,
     the composite (A_t, B_t) of steps [0..t]; then h_t = A_t·h_in + B_t.
     """
     a = apply_reset(a, reset)
-    Bsz, L = a.shape[0], a.shape[1]
-    if L % chunk != 0:
-        # fall back: pad time with identity steps (a=1... but a=1,b=0 keeps h)
-        pad = (-L) % chunk
-        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
-                    constant_values=1)
-        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
-    Lp = a.shape[1]
-    nc = Lp // chunk
-    S = a.shape[2:]
-    a = a.reshape((Bsz, nc, chunk) + S)
-    b = b.reshape((Bsz, nc, chunk) + S)
-    if h0 is None:
-        h0 = jnp.zeros((Bsz,) + S, a.dtype)
 
     def step(h_in, ab):
         ac, bc = ab                      # (B, chunk, *S)
@@ -125,17 +159,55 @@ def scan_chunked(a: jnp.ndarray, b: jnp.ndarray,
         h = A * h_in[:, None] + Bc       # (B, chunk, *S)
         return h[:, -1], h
 
-    aC = jnp.moveaxis(a, 1, 0)           # (nc, B, chunk, *S)
-    bC = jnp.moveaxis(b, 1, 0)
-    h_last, hs = jax.lax.scan(step, h0, (aC, bC))
-    h_all = jnp.moveaxis(hs, 0, 1).reshape((Bsz, Lp) + S)[:, :L]
-    return h_all, h_last
+    return _chunk_scan(a, b, h0, chunk, step)
+
+
+def scan_blocked(a: jnp.ndarray, b: jnp.ndarray,
+                 reset: Optional[jnp.ndarray] = None,
+                 h0: Optional[jnp.ndarray] = None,
+                 chunk: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-parallel (SSD-style) schedule. See module docstring.
+
+    Per chunk of length T the in-chunk recurrence is evaluated closed-form:
+
+        h_i = cp_i · h_in + Σ_{j≤i} M[i,j] · b_j
+        M[i,j] = Π_{j<k≤i} a_k        cp_i = Π_{k≤i} a_k
+
+    M is built with a cumprod along i of the broadcast decay (exact for any
+    real a, no log-space needed), so the PackMamba reset (a→0) zeroes every
+    boundary-spanning product automatically — including cp, which kills the
+    inter-chunk carry past a reset. Peak intermediate is O(B·T²·*S) per
+    chunk (the chunk body is rematerialized in the backward pass, so
+    residuals stay O(B·L·*S)).
+    """
+    a = apply_reset(a, reset)
+
+    @jax.checkpoint
+    def chunk_step(h_in, ab):
+        ac, bc = ab                                     # (B, T, *S)
+        T = ac.shape[1]
+        S = ac.shape[2:]
+        ii = jnp.arange(T)[:, None]
+        jj = jnp.arange(T)[None, :]
+        strict = (ii > jj).reshape((1, T, T) + (1,) * len(S))
+        lower = (ii >= jj).reshape((1, T, T) + (1,) * len(S))
+        # Amat[b,i,j] = a_i for i > j else 1; cumprod over i gives M[i,j]
+        amat = jnp.where(strict, ac[:, :, None],
+                         jnp.ones_like(ac)[:, :1, None])
+        M = jnp.where(lower, jnp.cumprod(amat, axis=1), 0)
+        h = jnp.einsum("bij...,bj...->bi...", M, bc)
+        cp = jnp.cumprod(ac, axis=1)                    # carry decay
+        h = h + cp * h_in[:, None]
+        return h[:, -1], h
+
+    return _chunk_scan(a, b, h0, chunk, chunk_step)
 
 
 _METHODS = {
     "sequential": scan_sequential,
     "associative": scan_associative,
     "chunked": scan_chunked,
+    "blocked": scan_blocked,
 }
 
 
@@ -151,7 +223,7 @@ def segmented_scan(a: jnp.ndarray, b: jnp.ndarray,
     if a.shape != b.shape:
         raise ValueError(f"a/b shape mismatch {a.shape} vs {b.shape}")
     fn = _METHODS[method]
-    if method == "chunked":
+    if method in ("chunked", "blocked"):
         return fn(a, b, reset, h0, chunk=chunk)
     return fn(a, b, reset, h0)
 

@@ -25,6 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scan import segmented_scan, scan_step
+from repro.core.scan import _combine as _scan_combine
+
+_MATMUL_CHUNK_CAP = 32    # blocked/matmul intra: bounds the T²·D·N operand
 
 
 def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
@@ -34,12 +37,14 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None,
                    method: str = "chunked", chunk: int = 256,
                    return_state: bool = False,
-                   compute_dtype=None):
+                   compute_dtype=None, intra: Optional[str] = None):
     """u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
 
     positions: (B,L) int32 — PackMamba position indices (reset where == 0).
     h0: (B, D, N) initial state (for split-pack state carry / decode chunking).
     compute_dtype: recurrence dtype (default f32; bf16 halves scan traffic).
+    intra: method='blocked' only — in-chunk evaluator ('matmul' | 'assoc';
+    default picks 'matmul' on TPU, 'assoc' elsewhere — see _blocked_ssm).
     Returns y (B, L, D) [, h_last (B, D, N)].
     """
     Bsz, L, Dm = u.shape
@@ -54,6 +59,12 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
         # is its closest pure-XLA analogue.)
         return _fused_seq_scan(u, delta, A, B, C, D, positions, h0,
                                return_state, cdt)
+    if method == "blocked":
+        # SSD-style block-parallel schedule: also never materializes
+        # (B, L, D, N), and replaces the elementwise recurrence with
+        # matmul-shaped contractions (see core/scan.py docstring).
+        return _blocked_ssm(u, delta, A, B, C, D, positions, h0,
+                            return_state, cdt, chunk, intra)
     delta_f = delta.astype(cdt)
     # decay a = exp(Δ·A): (B, L, D, N)
     a = jnp.exp(delta_f[..., None] * A.astype(cdt))
@@ -65,6 +76,115 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
     y = jnp.einsum("bldn,bln->bld", h, C.astype(cdt))
     if D is not None:
         y = y + D.astype(cdt) * u.astype(cdt)
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def _blocked_ssm(u, delta, A, B, C, D, positions, h0, return_state, cdt,
+                 chunk, intra=None):
+    """Block-parallel (SSD-style) selective scan — the fused hot path.
+
+    The schedule: partition L into chunks of length T, evaluate the whole
+    reset-masked in-chunk operator at once, and carry only the (B, D, N)
+    state across the O(L/T) chunk boundary recurrence. Per chunk
+    (structured-state-space duality, Gu & Dao, specialized to Mamba-1's
+    (D, N) diagonal decay and PackMamba resets):
+
+        M[i,j]   = Π_{j<k≤i} Ā_k  = exp(s_i − s_j)   masked to j ≤ i AND no
+                   reset in (j, i]    (s = in-chunk cumsum of Δ·A)
+        h_i      = Σ_j M[i,j]·(Δ·B·u)_j  +  1[no reset ≤ i]·exp(s_i)·h_in
+        y_i      = C_i · h_i  (+ D·u)
+
+    Only the current chunk's tensors are ever live — never the (B, L, D, N)
+    decay/input trajectory the ``chunked`` method materializes up front —
+    and y = C·h is fused into the chunk body, so HBM sees only the
+    (B, L, D) output plus O(B·L·(D+N)) raw inputs (the chunk body is
+    checkpointed, so backward residuals stay at the raw inputs too).
+
+    ``intra`` selects how the in-chunk operator is evaluated:
+      * ``"matmul"`` — build M explicitly and contract h = M @ b as an
+        einsum: T× the FLOPs of the recurrence but matmul-shaped, so the
+        MXU absorbs them while the carry chain shrinks by T. The form the
+        Pallas ``blocked`` kernel implements; default when running on TPU.
+        Peak per-chunk intermediate is the (B, T, T, D, N) masked decay
+        (s_i − s_j ≤ 0 for unmasked pairs since A < 0, Δ ≥ 0; masked pairs
+        are clamped before the exp, so no overflow anywhere).
+      * ``"assoc"`` — evaluate the same masked operator with an in-chunk
+        associative tree (log₂T passes of elementwise combines). No matrix
+        units to feed on CPU, so this is the default there; it keeps the
+        schedule's fusion/memory wins (≈2-3× faster than ``chunked`` at
+        L ≥ 1024 on CPU — see benchmarks/run.py fig2) without the T×
+        element-op blowup that only an MXU makes free.
+    Both evaluate the identical operator: results match ``sequential`` to
+    f32 tolerance either way.
+    """
+    if intra is None:
+        intra = "matmul" if jax.default_backend() == "tpu" else "assoc"
+    if intra not in ("matmul", "assoc"):
+        raise ValueError(f"unknown blocked intra mode {intra!r}")
+    Bsz, L, Dm = u.shape
+    N = A.shape[-1]
+    T = min(chunk, L)
+    if intra == "matmul":
+        # the (B, T, T, D, N) contraction operand grows as T²·D·N: an
+        # uncapped scan_chunk (256) would dwarf the (B, L, D, N) buffer
+        # this schedule exists to avoid. Matches the Pallas kernel's
+        # DEF_SUB_T-scale subtiling.
+        T = min(T, _MATMUL_CHUNK_CAP)
+    A32 = A.astype(cdt)
+    reset = (positions == 0) if positions is not None else \
+        jnp.zeros((Bsz, L), bool)
+    pad = (-L) % T
+    if pad:
+        # Δ=0 ⇒ decay 1 / b-term 0 (state carried), no reset: identity steps
+        padw = [(0, 0), (0, pad)]
+        u = jnp.pad(u, padw + [(0, 0)])
+        delta = jnp.pad(delta, padw + [(0, 0)])
+        B = jnp.pad(B, padw + [(0, 0)])
+        C = jnp.pad(C, padw + [(0, 0)])
+        reset = jnp.pad(reset, padw)
+    Lp = u.shape[1]
+    nc = Lp // T
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), cdt)
+    h0 = h0.astype(cdt)
+    tril = jnp.tril(jnp.ones((T, T), bool))
+
+    @jax.checkpoint
+    def chunk_step(h_in, xs):
+        uc, dc, Bc, Cc, rc = xs          # (B,T,Dm) ×2, (B,T,N) ×2, (B,T)
+        d32 = dc.astype(cdt)
+        bterm = (d32 * uc.astype(cdt))[..., None] * \
+            Bc.astype(cdt)[:, :, None, :]               # (B,T,Dm,N)
+        if intra == "matmul":
+            la = d32[..., None] * A32                   # (B,T,Dm,N) log decay
+            s = jnp.cumsum(la, axis=1)
+            rid = jnp.cumsum(rc.astype(jnp.int32), axis=1)   # resets ≤ i
+            m = (rid[:, :, None] == rid[:, None, :]) & tril[None]  # (B,T,T)
+            mm = m[..., None, None]
+            diff = s[:, :, None] - s[:, None, :]        # (B,T,T,Dm,N)
+            dec = jnp.where(mm, jnp.exp(jnp.where(mm, diff, 0.0)), 0.0)
+            h = jnp.einsum("bijdn,bjdn->bidn", dec, bterm)
+            cin = jnp.where((rid == 0)[..., None, None], jnp.exp(s), 0.0)
+            h = h + cin * h_in[:, None]
+        else:
+            a = jnp.exp(d32[..., None] * A32)           # (B,T,Dm,N)
+            a = jnp.where(rc[..., None, None], 0.0, a)  # PackMamba reset
+            Acum, Bcum = jax.lax.associative_scan(_scan_combine, (a, bterm),
+                                                  axis=1)
+            h = Acum * h_in[:, None] + Bcum             # Acum: carry decay,
+            #   zeroed past an in-chunk reset since a→0 poisons its products
+        y = jnp.einsum("bidn,bin->bid", h, Cc.astype(cdt))
+        return h[:, -1], y
+
+    xs = tuple(jnp.moveaxis(x.reshape((Bsz, nc, T) + x.shape[2:]), 1, 0)
+               for x in (u, delta, B, C, reset))
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Lp, Dm)[:, :L]
+    if D is not None:
+        y = y + D.astype(cdt) * u[:, :L].astype(cdt)
     y = y.astype(u.dtype)
     if return_state:
         return y, h_last

@@ -1,0 +1,20 @@
+"""Version-compat shims for the Pallas TPU API surface we use.
+
+The pinned JAX renamed/renames ``pltpu.TPUCompilerParams`` ↔
+``pltpu.CompilerParams`` across releases (0.4.x exposes only
+``TPUCompilerParams``; newer releases deprecate it in favour of
+``CompilerParams``). Every kernel module resolves the class through this
+shim so a version bump is a one-line change here instead of an
+``AttributeError`` at kernel-build time in each call site.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build compiler params (e.g. dimension_semantics=...) portably."""
+    return CompilerParams(**kwargs)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 DEF_BLOCK_D = 128
 DEF_CHUNK_T = 256
 INTERPRET = True
@@ -72,7 +74,7 @@ def conv1d_pack_fwd_pallas(x, weight, bias, positions,
         ],
         out_specs=pl.BlockSpec((1, T, bd), lambda b, d, l: (b, l, d)),
         out_shape=jax.ShapeDtypeStruct((Bz, L, Dm), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=INTERPRET if interpret is None else interpret,
     )(positions, x, x, weight, bias)
@@ -119,7 +121,7 @@ def conv1d_pack_bwd_dx_pallas(dy, weight, positions,
         ],
         out_specs=pl.BlockSpec((1, T, bd), lambda b, d, l: (b, l, d)),
         out_shape=jax.ShapeDtypeStruct((Bz, L, Dm), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=INTERPRET if interpret is None else interpret,
     )(positions, positions, dy, dy, weight)

@@ -42,22 +42,25 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
 # selective scan
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
-def _scan_padded(u, delta, At, B, C, Dp, pos, block_d, chunk):
-    y, _ = _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _scan_padded(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule):
+    y, _ = _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk,
+                          schedule)
     return y
 
 
-def _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk):
+def _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule):
     y, ckpts = scan_k.selective_scan_fwd_pallas(
-        u, delta, At, B, C, Dp, pos, block_d=block_d, chunk=chunk)
+        u, delta, At, B, C, Dp, pos, block_d=block_d, chunk=chunk,
+        schedule=schedule)
     return y, (u, delta, At, B, C, Dp, pos, ckpts)
 
 
-def _scan_bwd_rule(block_d, chunk, res, dy):
+def _scan_bwd_rule(block_d, chunk, schedule, res, dy):
     u, delta, At, B, C, Dp, pos, ckpts = res
     du, ddelta, dB_p, dC_p, dA_p, dD_p = scan_k.selective_scan_bwd_pallas(
-        u, delta, At, B, C, Dp, pos, ckpts, dy, block_d=block_d, chunk=chunk)
+        u, delta, At, B, C, Dp, pos, ckpts, dy, block_d=block_d, chunk=chunk,
+        schedule=schedule)
     return (du.astype(u.dtype), ddelta.astype(delta.dtype),
             dA_p.sum(0).astype(At.dtype), dB_p.sum(1).astype(B.dtype),
             dC_p.sum(1).astype(C.dtype), dD_p.sum(0).astype(Dp.dtype),
@@ -70,17 +73,24 @@ _scan_padded.defvjp(_scan_fwd_rule, _scan_bwd_rule)
 def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
                    backend: str = "xla", block_d: int = scan_k.DEF_BLOCK_D,
                    chunk: int = scan_k.DEF_CHUNK_T, xla_chunk: int = 256,
-                   xla_method: str = "chunked", xla_dtype=None):
+                   xla_method: str = "blocked", xla_dtype=None,
+                   xla_intra=None, schedule: str = "blocked"):
     """Fused segmented selective scan. See kernels/ref.py for semantics.
 
     u, delta: (B, L, Dm) | A: (Dm, N) | B, C: (B, L, N) | D: (Dm,) |
     positions: (B, L) i32 (reset where == 0) → y (B, L, Dm).
+
+    ``schedule`` (pallas backend): 'blocked' (SSD-style subtile contraction,
+    the default hot path) | 'step' (per-step reference walk). Both wire the
+    same custom_vjp; ``xla_method='blocked'`` (+ optional ``xla_intra``) is
+    the XLA twin.
     """
     if backend == "xla":
         return core_ssm.selective_scan(u, delta, A, B, C, D,
                                        positions=positions,
                                        method=xla_method, chunk=xla_chunk,
-                                       compute_dtype=xla_dtype)
+                                       compute_dtype=xla_dtype,
+                                       intra=xla_intra)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
     Bz, L, Dm = u.shape
@@ -97,7 +107,7 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
     pos = positions if positions is not None else \
         jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
     posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
-    y = _scan_padded(up, dtp, At, Bp, Cp, Dp, posp, bd, T)
+    y = _scan_padded(up, dtp, At, Bp, Cp, Dp, posp, bd, T, schedule)
     return y[:, :L, :Dm]
 
 

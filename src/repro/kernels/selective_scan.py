@@ -31,6 +31,21 @@ VMEM budget per grid step (T=256, bd=128, N=16, f32):
   + A (8 KiB) + pos (1 KiB); scratch h (8 KiB); bwd adds h_buf
   ((T+1)·N·bd·4 ≈ 2.06 MiB) + dh/dA (16 KiB) — comfortably inside the
   ~16 MiB/core VMEM with room for double buffering.
+
+Two schedules share this grid/BlockSpec structure (`schedule=` knob):
+  * ``step``    — the kernels above: a per-step fori_loop VPU walk. The
+                  reference path; matches the paper's ScanOp_pack closely.
+  * ``blocked`` — SSD-style (Gu & Dao duality): each in-chunk subtile of
+                  length Tt is evaluated at once as a masked
+                  cumulative-decay contraction dec @ b (see
+                  core/ssm.py::_blocked_ssm for the math). The sequential
+                  chain shrinks T→T/Tt and the (Tt, Tt, N, bd) contraction
+                  is dense matmul-shaped work the MXU can absorb, instead
+                  of T dependent (N, bd) VPU updates that leave it idle —
+                  the Baruah et al. bottleneck this PR attacks. Backward
+                  blocks the same way (transpose contraction for the
+                  adjoint scan; elementwise grads fully vectorized).
+                  Extra VMEM: ~4 MiB (gbuf + subtile dec) at defaults.
 """
 from __future__ import annotations
 
@@ -42,9 +57,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 DEF_BLOCK_D = 128
 DEF_CHUNK_T = 256
+DEF_SUB_T = 16     # blocked schedule: in-chunk subtile for the M contraction
 INTERPRET = True   # flipped by ops.configure_for_tpu() on real hardware
+
+
+def _pick_subtile(T: int) -> int:
+    """Largest supported subtile length dividing the chunk."""
+    for tt in (DEF_SUB_T, 8, 4, 2, 1):
+        if T % tt == 0:
+            return tt
+    return 1
 
 
 # ---------------------------------------------------------------------------
@@ -84,24 +110,92 @@ def _fwd_kernel(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref, Dp_ref,
     jax.lax.fori_loop(0, T, step, ())
 
 
+# ---------------------------------------------------------------------------
+# forward kernel — blocked (SSD-style) schedule
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel_blocked(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref,
+                        Dp_ref, y_ref, ckpt_ref, h_ref, *, sub_t):
+    """Same block shapes and carry semantics as ``_fwd_kernel``, but instead
+    of T dependent per-step VPU updates, each in-chunk subtile of length Tt
+    is evaluated at once via the masked cumulative-decay contraction
+    (core/ssm.py 'blocked'/'matmul' formulation):
+
+        dec[i,j] = exp(s_i − s_j)·[j ≤ i]·[no reset in (j, i]]
+        h_i      = Σ_j dec[i,j]·b_j + 1[no reset ≤ i]·exp(s_i)·h_carry
+
+    The sequential chain shrinks from T steps to T/Tt subtile steps; the
+    (Tt, Tt, N, bd) contraction is dense matmul-shaped work for the MXU.
+    Peak extra VMEM: Tt²·N·bd f32 (2 MiB at Tt=16, bd=128, N=16).
+    """
+    T = u_ref.shape[1]
+    nsub = T // sub_t
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    ckpt_ref[0, 0] = h_ref[...]
+    At = At_ref[...].astype(jnp.float32)              # (N, bd)
+    Dp = Dp_ref[0, :].astype(jnp.float32)             # (bd,)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 1)
+    causal = ii >= jj
+
+    def sub(si, _):
+        t0 = si * sub_t
+        dt = dt_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)   # (Tt, bd)
+        u_t = u_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        Bv = Bm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)   # (Tt, N)
+        Cv = Cm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        r = pos_ref[0, pl.ds(t0, sub_t)] == 0                     # (Tt,)
+        la = dt[:, None, :] * At[None]                            # (Tt, N, bd)
+        s = jnp.cumsum(la, axis=0)
+        rid = jnp.cumsum(r.astype(jnp.int32))
+        m = (rid[:, None] == rid[None, :]) & causal               # (Tt, Tt)
+        mm = m[..., None, None]
+        diff = s[:, None] - s[None, :]                     # (Tt, Tt, N, bd)
+        dec = jnp.where(mm, jnp.exp(jnp.where(mm, diff, 0.0)), 0.0)
+        bt = Bv[..., None] * (dt * u_t)[:, None, :]               # (Tt, N, bd)
+        h = jnp.sum(dec * bt[None], axis=1)                       # Σ_j
+        cin = jnp.where((rid == 0)[:, None, None], jnp.exp(s), 0.0)
+        h = h + cin * h_ref[...][None]
+        y = jnp.sum(h * Cv[..., None], axis=1)                    # (Tt, bd)
+        y_ref[0, pl.ds(t0, sub_t), :] = (y + Dp[None] * u_t).astype(
+            y_ref.dtype)
+        h_ref[...] = h[-1]
+        return ()
+
+    jax.lax.fori_loop(0, nsub, sub, ())
+
+
 def selective_scan_fwd_pallas(u, delta, At, Bm, Cm, Dp, positions,
                               block_d: int = DEF_BLOCK_D,
                               chunk: int = DEF_CHUNK_T,
+                              schedule: str = "step",
                               interpret: Optional[bool] = None):
     """Shapes (already padded by ops.py): u, delta (B, L, Dm); At (N, Dm);
     Bm, Cm (B, L, N); Dp (1, Dm); positions (B, L) i32.
-    Returns (y (B, L, Dm), ckpts (B, L/T, N, Dm))."""
+    ``schedule``: 'step' (per-step VPU walk) | 'blocked' (SSD-style subtile
+    contraction). Returns (y (B, L, Dm), ckpts (B, L/T, N, Dm))."""
     Bz, L, Dm = u.shape
     N = At.shape[0]
     T, bd = chunk, block_d
     nL, nD = L // T, Dm // bd
     grid = (Bz, nD, nL)
+    if schedule == "blocked":
+        kernel = functools.partial(_fwd_kernel_blocked,
+                                   sub_t=_pick_subtile(T))
+    elif schedule == "step":
+        kernel = _fwd_kernel
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
     out_shape = (
         jax.ShapeDtypeStruct((Bz, L, Dm), u.dtype),
         jax.ShapeDtypeStruct((Bz, nL, N, Dm), jnp.float32),
     )
     return pl.pallas_call(
-        _fwd_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, T), lambda b, d, l: (b, l)),          # pos
@@ -118,7 +212,7 @@ def selective_scan_fwd_pallas(u, delta, At, Bm, Cm, Dp, positions,
         ],
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((N, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=INTERPRET if interpret is None else interpret,
     )(positions, u, delta, At, Bm, Cm, Dp)
@@ -208,9 +302,120 @@ def _bwd_kernel(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref, Dp_ref,
         dD_ref[0, 0] = dD_acc[0, :]
 
 
+# ---------------------------------------------------------------------------
+# backward kernel — blocked (SSD-style) schedule
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel_blocked(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref,
+                        Dp_ref, ckpt_ref, dy_ref,
+                        du_ref, ddt_ref, dB_ref, dC_ref, dA_ref, dD_ref,
+                        hbuf_ref, gbuf_ref, g_ref, dA_acc, dD_acc, *, sub_t):
+    """Adjoint of one chunk under the blocked formulation. Outputs and carry
+    semantics identical to ``_bwd_kernel``; the two inner walks are blocked:
+
+      * h recompute: the forward subtile contraction refilled into hbuf.
+      * adjoint g: the reverse recurrence g_t = C_t⊗dy_t + a_{t+1}·g_{t+1}
+        is itself a segmented scan running backwards, so per subtile
+        g_j = Σ_{i≥j} dec[i,j]·(C⊗dy)_i + dec[last,j]·G_in — the transpose
+        contraction of the same masked decay matrix, with the VMEM carry
+        G = a_first·g_first handed to the previous subtile/chunk.
+
+    The per-position parameter/input adjoints are then pure elementwise
+    (T, N, bd) tensor work — no sequential walk at all.
+    Extra VMEM vs step bwd: gbuf (T, N, bd) ≈ 2 MiB at T=256, bd=128.
+    """
+    T = u_ref.shape[1]
+    nsub = T // sub_t
+
+    @pl.when(pl.program_id(2) == 0)          # first step of the REVERSE walk
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        dA_acc[...] = jnp.zeros_like(dA_acc)
+        dD_acc[...] = jnp.zeros_like(dD_acc)
+
+    At = At_ref[...].astype(jnp.float32)
+    Dp = Dp_ref[0, :].astype(jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 1)
+    causal = ii >= jj
+
+    def _tile(si):
+        """Masked decay matrix + shared per-subtile tensors."""
+        t0 = si * sub_t
+        dt = dt_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        u_t = u_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        r = pos_ref[0, pl.ds(t0, sub_t)] == 0
+        la = dt[:, None, :] * At[None]                  # (Tt, N, bd)
+        s = jnp.cumsum(la, axis=0)
+        rid = jnp.cumsum(r.astype(jnp.int32))
+        m = (rid[:, None] == rid[None, :]) & causal
+        mm = m[..., None, None]
+        diff = s[:, None] - s[None, :]
+        dec = jnp.where(mm, jnp.exp(jnp.where(mm, diff, 0.0)), 0.0)
+        return t0, dt, u_t, r, la, s, rid, dec
+
+    # ---- recompute h within the chunk, blocked per subtile ----
+    hbuf_ref[0] = ckpt_ref[0, 0]
+
+    def fsub(si, _):
+        t0, dt, u_t, r, la, s, rid, dec = _tile(si)
+        Bv = Bm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        bt = Bv[..., None] * (dt * u_t)[:, None, :]
+        h = jnp.sum(dec * bt[None], axis=1)
+        cin = jnp.where((rid == 0)[:, None, None], jnp.exp(s), 0.0)
+        h = h + cin * hbuf_ref[t0][None]
+        hbuf_ref[pl.ds(t0 + 1, sub_t)] = h
+        return ()
+
+    jax.lax.fori_loop(0, nsub, fsub, ())
+
+    # ---- reverse adjoint walk, blocked per subtile ----
+    def rsub(si, _):
+        t0, dt, u_t, r, la, s, rid, dec = _tile(nsub - 1 - si)
+        Cv = Cm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        dy = dy_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        c = Cv[..., None] * dy[:, None, :]              # (Tt, N, bd)
+        g = jnp.sum(dec * c[:, None], axis=0)           # Σ_{i≥j} decᵀ·c
+        g = g + dec[-1] * g_ref[...][None]              # carry through M[last,j]
+        gbuf_ref[pl.ds(t0, sub_t)] = g
+        a0 = jnp.where(r[0], 0.0, jnp.exp(la[0]))
+        g_ref[...] = a0 * g[0]                          # hand to t0 − 1
+        return ()
+
+    jax.lax.fori_loop(0, nsub, rsub, ())
+
+    # ---- elementwise adjoints, vectorized over the whole chunk ----
+    dt = dt_ref[0].astype(jnp.float32)                  # (T, bd)
+    u_t = u_ref[0].astype(jnp.float32)
+    dy = dy_ref[0].astype(jnp.float32)
+    Bv = Bm_ref[0].astype(jnp.float32)                  # (T, N)
+    Cv = Cm_ref[0].astype(jnp.float32)
+    a = jnp.exp(dt[:, None, :] * At[None])              # (T, N, bd)
+    a = jnp.where((pos_ref[0] == 0)[:, None, None], 0.0, a)
+    hb = hbuf_ref[...]
+    h_prev, h_t = hb[:-1], hb[1:]
+    g = gbuf_ref[...]
+    da = g * h_prev
+    gB = jnp.sum(g * Bv[..., None], axis=1)             # (T, bd)
+    du_ref[0] = (dt * gB + Dp[None] * dy).astype(du_ref.dtype)
+    ddt_ref[0] = (jnp.sum(da * a * At[None], axis=1) +
+                  u_t * gB).astype(ddt_ref.dtype)
+    dB_ref[0, 0] = jnp.sum(g * (dt * u_t)[:, None, :],
+                           axis=2).astype(dB_ref.dtype)
+    dC_ref[0, 0] = jnp.sum(h_t * dy[:, None, :], axis=2).astype(dC_ref.dtype)
+    dA_acc[...] += jnp.sum(da * a * dt[:, None, :], axis=0)
+    dD_acc[0, :] += jnp.sum(dy * u_t, axis=0)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        dA_ref[0] = dA_acc[...]
+        dD_ref[0, 0] = dD_acc[0, :]
+
+
 def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
                               block_d: int = DEF_BLOCK_D,
                               chunk: int = DEF_CHUNK_T,
+                              schedule: str = "step",
                               interpret: Optional[bool] = None):
     """Returns (du, ddelta, dB_partial (B,nD,L,N), dC_partial (B,nD,L,N),
     dA_partial (B,N,Dm), dD_partial (B,1,Dm))."""
@@ -221,6 +426,26 @@ def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
     grid = (Bz, nD, nL)
     rev = lambda l: nL - 1 - l                 # walk the L dimension backwards
     f32 = jnp.float32
+    if schedule == "blocked":
+        kernel = functools.partial(_bwd_kernel_blocked,
+                                   sub_t=_pick_subtile(T))
+        scratch = [
+            pltpu.VMEM((T + 1, N, bd), f32),   # recomputed h trajectory
+            pltpu.VMEM((T, N, bd), f32),       # adjoint trajectory g
+            pltpu.VMEM((N, bd), f32),          # adjoint carry G
+            pltpu.VMEM((N, bd), f32),          # dA accumulator
+            pltpu.VMEM((1, bd), f32),          # dD accumulator
+        ]
+    elif schedule == "step":
+        kernel = _bwd_kernel
+        scratch = [
+            pltpu.VMEM((T + 1, N, bd), f32),   # recomputed h trajectory
+            pltpu.VMEM((N, bd), f32),          # adjoint carry g
+            pltpu.VMEM((N, bd), f32),          # dA accumulator
+            pltpu.VMEM((1, bd), f32),          # dD accumulator
+        ]
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
     out_shape = (
         jax.ShapeDtypeStruct((Bz, L, Dm), f32),       # du
         jax.ShapeDtypeStruct((Bz, L, Dm), f32),       # ddelta
@@ -230,7 +455,7 @@ def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
         jax.ShapeDtypeStruct((Bz, 1, Dm), f32),       # dD partials
     )
     return pl.pallas_call(
-        _bwd_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, T), lambda b, d, l: (b, rev(l))),
@@ -252,13 +477,8 @@ def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
             pl.BlockSpec((1, 1, bd), lambda b, d, l: (b, 0, d)),
         ],
         out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((T + 1, N, bd), f32),   # recomputed h trajectory
-            pltpu.VMEM((N, bd), f32),          # adjoint carry g
-            pltpu.VMEM((N, bd), f32),          # dA accumulator
-            pltpu.VMEM((1, bd), f32),          # dD accumulator
-        ],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=scratch,
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=INTERPRET if interpret is None else interpret,
     )(positions, u, delta, At, Bm, Cm, Dp, ckpts, dy)

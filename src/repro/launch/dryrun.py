@@ -65,6 +65,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, list):   # pinned JAX: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # while-aware static analysis: cost_analysis counts scan bodies
         # once, not × trip count (see roofline/hlo_static.py)

@@ -31,6 +31,14 @@ VARIANTS = {
     # REFUTED: scan autodiff stores per-step residuals (see EXPERIMENTS.md)
     "fused_scan": {"scan_impl": "fused_seq"},
     "act_sp+fused_scan": {"act_pspec": ("auto",), "scan_impl": "fused_seq"},
+    # It-8: scan schedules. The SSD-style block-parallel schedule
+    # (scan_impl="blocked", see core/scan.py) is now the BASELINE hot path:
+    # no (B,L,D,N) materialization, y=C·h fused per chunk, checkpointed
+    # chunk bodies. "scan_chunked" re-lowers the pre-It-8 default for
+    # before/after regression tracking.
+    "scan_chunked": {"scan_impl": "chunked"},
+    "act_dp+scan_chunked": {"act_pspec": ("auto_d",), "scan_impl": "chunked"},
+    "scan_blocked+bf16": {"scan_impl": "blocked", "scan_dtype": "bfloat16"},
     # It-3: bf16 recurrence compute — halves the scan's HBM traffic
     "scan_bf16": {"scan_dtype": "bfloat16"},
     "act_dp+scan_bf16": {"act_pspec": ("auto_d",),
@@ -62,7 +70,8 @@ HILLCLIMB = [
     ("deepseek-67b", "train_4k", ["act_sp+accum4", "act_sp+accum8"]),
     ("gemma-7b", "prefill_32k", ["act_sp"]),
     ("mamba-2.8b", "train_4k",
-     ["act_dp", "scan_bf16", "act_dp+scan_bf16"]),
+     ["act_dp", "scan_bf16", "act_dp+scan_bf16", "scan_chunked",
+      "scan_blocked+bf16"]),
 ]
 
 

@@ -349,7 +349,8 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
         pos_nz = jnp.where(valid, ctx.positions, 1)
         y, h_last = core_ssm.selective_scan(
             x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
-            method="chunked", chunk=cfg.scan_chunk, return_state=True)
+            method=cfg.scan_impl, chunk=cfg.scan_chunk, return_state=True,
+            intra=cfg.scan_intra)
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
         y = y * jax.nn.silu(z)
@@ -359,7 +360,9 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
                             xla_chunk=cfg.scan_chunk,
                             xla_method=cfg.scan_impl,
                             xla_dtype=(None if cfg.scan_dtype == "float32"
-                                       else cfg.scan_dtype))
+                                       else cfg.scan_dtype),
+                            xla_intra=cfg.scan_intra,
+                            schedule=cfg.pallas_schedule)
     y = y * jax.nn.silu(z)
     return x + y @ p["out_proj"].astype(x.dtype)
 

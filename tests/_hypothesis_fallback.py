@@ -1,0 +1,85 @@
+"""Minimal fixed-seed stand-in for `hypothesis` when it isn't installed.
+
+The tier-1 environment has no `hypothesis`; rather than skipping the
+property-test modules entirely, this shim runs each ``@given`` test over a
+deterministic set of examples drawn from the same strategy ranges
+(fixed-seed ``random.Random`` per example index, so failures reproduce).
+It implements exactly the strategy surface the test-suite uses:
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists``.
+
+No shrinking, no database, no `@example` — if a case fails here, rerun
+under real hypothesis for minimization. Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+import random
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda r: [elements.example(r)
+                                    for _ in range(r.randint(min_size,
+                                                             max_size))])
+
+
+st = _Strategies()
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — pytest must see a zero-arg
+        # signature, not the strategy parameters (it would treat them as
+        # fixtures). The @given tests in this suite take only strategy args.
+        def run():
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", DEFAULT_MAX_EXAMPLES))
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + i)
+                ex = [s.example(rng) for s in strategies]
+                kex = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*ex, **kex)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        run.hypothesis_fallback = True
+        return run
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        # keep runtimes reasonable without hypothesis' dedup machinery
+        fn._max_examples = min(max_examples, DEFAULT_MAX_EXAMPLES)
+        return fn
+    return deco

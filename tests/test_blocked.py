@@ -1,0 +1,223 @@
+"""Blocked (SSD-style) scan schedule: parity vs the sequential reference.
+
+Covers the acceptance surface of the block-parallel schedule:
+  * generic ``scan_blocked`` (cumprod M construction) on random packed
+    resets, chunk not dividing L, segments straddling chunk boundaries
+  * ``core.ssm.selective_scan(method='blocked')`` fwd + grads, both
+    in-chunk evaluators ('matmul' einsum and 'assoc' tree), h0 carry
+  * the Pallas ``schedule='blocked'`` kernels (interpret mode) fwd + grads
+  * structural memory claim: no (B, L, D, N) intermediate in the jaxpr
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.scan import segmented_scan
+from repro.core import ssm as core_ssm
+from repro.kernels.ops import selective_scan as kops_scan
+from repro.kernels.ref import selective_scan_ref
+
+
+def _packed_pos(rng, Bz, L, max_cuts=3):
+    """Random packed position ids: segments deliberately straddle chunk
+    boundaries (cuts are arbitrary, chunks are powers of two)."""
+    pos = np.zeros((Bz, L), np.int32)
+    for b in range(Bz):
+        cuts = sorted(rng.choice(np.arange(1, L),
+                                 size=min(max_cuts, L - 1),
+                                 replace=False)) if L > 2 else []
+        prev = 0
+        for c in list(cuts) + [L]:
+            pos[b, prev:c] = np.arange(c - prev)
+            prev = c
+    return jnp.asarray(pos)
+
+
+def _ssm_inputs(rng, Bz, L, Dm, N):
+    u = jnp.asarray(rng.normal(size=(Bz, L, Dm)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.5, (Bz, L, Dm)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(Dm, N)), jnp.float32))
+    Bm = jnp.asarray(rng.normal(size=(Bz, L, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bz, L, N)), jnp.float32)
+    Dk = jnp.asarray(rng.normal(size=(Dm,)), jnp.float32)
+    return u, dt, A, Bm, Cm, Dk, _packed_pos(rng, Bz, L)
+
+
+# ---------------------------------------------------------------------------
+# generic scan_blocked
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,D,chunk", [(2, 37, 5, 8), (1, 16, 3, 16),
+                                         (3, 64, 4, 5), (1, 7, 2, 32)])
+def test_scan_blocked_matches_sequential(rng, B, L, D, chunk):
+    a = jnp.asarray(rng.uniform(0.1, 1.0, (B, L, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, D)), jnp.float32)
+    reset = jnp.asarray(rng.random((B, L)) < 0.2)
+    h0 = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    hs, hls = segmented_scan(a, b, reset, h0, method="sequential")
+    hb, hlb = segmented_scan(a, b, reset, h0, method="blocked", chunk=chunk)
+    np.testing.assert_allclose(hs, hb, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(hls, hlb, atol=1e-5, rtol=1e-5)
+
+
+def test_scan_blocked_grads(rng):
+    B, L, D, chunk = 2, 23, 4, 8
+    a = jnp.asarray(rng.uniform(0.1, 1.0, (B, L, D)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, D)), jnp.float32)
+    reset = jnp.zeros((B, L), bool).at[:, 9].set(True)
+
+    def loss(m):
+        def f(a_in, b_in):
+            h, _ = segmented_scan(a_in, b_in, reset, method=m, chunk=chunk)
+            return (h ** 2).sum()
+        return jax.grad(f, argnums=(0, 1))(a, b)
+
+    for ga, gb in zip(loss("sequential"), loss("blocked")):
+        np.testing.assert_allclose(ga, gb, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# XLA selective scan, method='blocked'
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("intra", ["matmul", "assoc"])
+@pytest.mark.parametrize("Bz,L,Dm,N,T", [(2, 24, 10, 4, 8),
+                                         (1, 17, 5, 3, 8),
+                                         (1, 64, 16, 16, 16)])
+def test_blocked_ssm_fwd(rng, intra, Bz, L, Dm, N, T):
+    u, dt, A, Bm, Cm, Dk, pos = _ssm_inputs(rng, Bz, L, Dm, N)
+    y_seq = core_ssm.selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                    method="sequential")
+    y_blk, h_blk = core_ssm.selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                           method="blocked", chunk=T,
+                                           intra=intra, return_state=True)
+    _, h_seq = core_ssm.selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                       method="sequential",
+                                       return_state=True)
+    np.testing.assert_allclose(np.asarray(y_blk), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_blk), np.asarray(h_seq),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("intra", ["matmul", "assoc"])
+def test_blocked_ssm_grads(rng, intra):
+    Bz, L, Dm, N, T = 2, 24, 6, 4, 8
+    u, dt, A, Bm, Cm, Dk, pos = _ssm_inputs(rng, Bz, L, Dm, N)
+
+    def grads(method, **kw):
+        def f(u, dt, A, Bm, Cm, Dk):
+            y = core_ssm.selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                        method=method, chunk=T, **kw)
+            return (y ** 2).sum()
+        return jax.grad(f, argnums=tuple(range(6)))(u, dt, A, Bm, Cm, Dk)
+
+    gs = grads("sequential")
+    gb = grads("blocked", intra=intra)
+    for name, a, b in zip("u dt A B C D".split(), gs, gb):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
+                                   err_msg=f"{intra} grad {name}")
+
+
+def test_blocked_ssm_h0_carry(rng):
+    """Split-pack state carry: scan [x1; x2] == scan x2 with h0 from x1."""
+    Bz, L, Dm, N = 1, 20, 4, 3
+    u, dt, A, Bm, Cm, Dk, _ = _ssm_inputs(rng, Bz, L, Dm, N)
+    pos = jnp.tile(jnp.arange(1, L + 1, dtype=jnp.int32), (Bz, 1))  # no reset
+    y_all, h_all = core_ssm.selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                           method="blocked", chunk=8,
+                                           return_state=True)
+    _, h_mid = core_ssm.selective_scan(
+        u[:, :11], dt[:, :11], A, Bm[:, :11], Cm[:, :11], Dk, pos[:, :11],
+        method="sequential", return_state=True)
+    y_rest, h_end = core_ssm.selective_scan(
+        u[:, 11:], dt[:, 11:], A, Bm[:, 11:], Cm[:, 11:], Dk, pos[:, 11:],
+        h0=h_mid, method="blocked", chunk=4, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_rest), np.asarray(y_all[:, 11:]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_end), np.asarray(h_all),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_blocked_grad_does_not_cross_boundary(rng):
+    """Backward PUI on the blocked path (paper §3.4)."""
+    Bz, L, Dm, N = 1, 16, 4, 3
+    u, dt, A, Bm, Cm, Dk, _ = _ssm_inputs(rng, Bz, L, Dm, N)
+    pos = jnp.concatenate([jnp.arange(8), jnp.arange(8)])[None]
+
+    def loss(u_in):
+        y = core_ssm.selective_scan(u_in, dt, A, Bm, Cm, Dk, pos,
+                                    method="blocked", chunk=8)
+        return (y[:, 8:] ** 2).sum()
+
+    g = jax.grad(loss)(u)
+    np.testing.assert_allclose(g[:, :8], 0.0, atol=1e-7)
+    assert float(jnp.abs(g[:, 8:]).max()) > 0
+
+
+def test_blocked_jaxpr_has_no_full_trajectory():
+    """The structural memory claim: `blocked` never builds a (B, L, D, N)
+    intermediate; `chunked` does (it materializes decay + input tensors)."""
+    Bz, L, Dm, N = 1, 512, 32, 8
+    args = (jnp.zeros((Bz, L, Dm)), jnp.full((Bz, L, Dm), 0.1),
+            -jnp.ones((Dm, N)), jnp.zeros((Bz, L, N)),
+            jnp.zeros((Bz, L, N)), jnp.zeros((Dm,)),
+            jnp.zeros((Bz, L), jnp.int32))
+
+    def has_full(method, **kw):
+        jaxpr = jax.make_jaxpr(lambda *a: core_ssm.selective_scan(
+            *a, method=method, chunk=64, **kw))(*args)
+        want = (Bz, L, Dm, N)
+        return any(getattr(v.aval, "shape", None) == want
+                   for eqn in jaxpr.jaxpr.eqns for v in eqn.outvars)
+
+    assert has_full("chunked")
+    assert not has_full("blocked", intra="assoc")
+    assert not has_full("blocked", intra="matmul")
+
+
+# ---------------------------------------------------------------------------
+# Pallas blocked kernels (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["step", "blocked"])
+@pytest.mark.parametrize("Bz,L,Dm,N", [(2, 24, 10, 4), (1, 33, 8, 16)])
+def test_pallas_schedules_fwd(rng, schedule, Bz, L, Dm, N):
+    u, dt, A, Bm, Cm, Dk, pos = _ssm_inputs(rng, Bz, L, Dm, N)
+    y_ref = selective_scan_ref(u, dt, A, Bm, Cm, Dk, pos)
+    y = kops_scan(u, dt, A, Bm, Cm, Dk, pos, backend="pallas",
+                  block_d=8, chunk=8, schedule=schedule)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+
+
+def test_pallas_blocked_grads(rng):
+    Bz, L, Dm, N = 2, 24, 10, 4
+    u, dt, A, Bm, Cm, Dk, pos = _ssm_inputs(rng, Bz, L, Dm, N)
+
+    def lp(*args):
+        return (kops_scan(*args, pos, backend="pallas", block_d=8, chunk=8,
+                          schedule="blocked") ** 2).sum()
+
+    def lr(*args):
+        return (selective_scan_ref(*args, pos) ** 2).sum()
+
+    gp = jax.grad(lp, argnums=tuple(range(6)))(u, dt, A, Bm, Cm, Dk)
+    gr = jax.grad(lr, argnums=tuple(range(6)))(u, dt, A, Bm, Cm, Dk)
+    for name, a, b in zip("u dt A B C D".split(), gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3,
+                                   err_msg=f"grad {name}")
+
+
+def test_pallas_blocked_reset_blocks_grad(rng):
+    u, dt, A, Bm, Cm, Dk, _ = _ssm_inputs(rng, 1, 16, 8, 4)
+    pos = jnp.concatenate([jnp.arange(8), jnp.arange(8)])[None]
+
+    def loss(u_in):
+        y = kops_scan(u_in, dt, A, Bm, Cm, Dk, pos, backend="pallas",
+                      block_d=8, chunk=8, schedule="blocked")
+        return (y[:, 8:] ** 2).sum()
+
+    g = jax.grad(loss)(u)
+    np.testing.assert_allclose(g[:, :8], 0.0, atol=1e-7)
+    assert float(jnp.abs(g[:, 8:]).max()) > 0

@@ -5,7 +5,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # tier-1 env has no hypothesis: fixed-seed fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import get_config
 from repro.models import blocks as B

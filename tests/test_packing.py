@@ -1,7 +1,10 @@
 """Packing: pack/unpack inverse, policies, paper §5 padding rates."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # tier-1 env has no hypothesis: fixed-seed fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.packing import (pack, unpack, pad_to_max, plan_packing,
                                 padding_rate, pack_with_split)

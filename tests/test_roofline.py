@@ -33,6 +33,8 @@ def test_scan_flops_times_trip_count():
     cost = jax.jit(fs).lower(jnp.zeros((8, 128)),
                              jnp.zeros((4, 128, 128))).compile() \
         .cost_analysis()
+    if isinstance(cost, list):   # pinned JAX returns one dict per device
+        cost = cost[0]
     assert cost["flops"] < r["flops"] / 2
 
 
