@@ -1,0 +1,25 @@
+# CI entry points. `make verify` is the tier-1 gate (ROADMAP.md).
+PY := PYTHONPATH=src python
+
+# Scan-schedule perf gate files: OLD is the committed baseline; NEW is the
+# fresh run `bench-scan` writes (BENCH_SCAN_JSON env override in
+# benchmarks/run.py keeps the baseline untouched). To refresh the committed
+# baseline instead: `make bench-scan NEW=BENCH_scan.json`.
+OLD ?= BENCH_scan.json
+NEW ?= BENCH_scan.new.json
+
+.PHONY: verify bench-scan bench-compare quickstart
+
+verify:
+	$(PY) -m pytest -x -q
+
+# regenerate the scan-schedule matrix into $(NEW)
+bench-scan:
+	BENCH_SCAN_JSON=$(NEW) $(PY) -m benchmarks.run fig2
+
+# gate on the scan perf trajectory: exits nonzero on >10% regressions
+bench-compare:
+	$(PY) benchmarks/compare.py $(OLD) $(NEW)
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,0 +1,73 @@
+"""Diff two BENCH_scan.json files and flag schedule regressions.
+
+    PYTHONPATH=src python benchmarks/compare.py OLD.json NEW.json [--pct 10]
+
+Rows are joined on (op, shape, schedule). For every pair the us_per_call
+delta is printed; rows slower by more than ``--pct`` percent are flagged as
+REGRESSION and the exit code is nonzero (so `make bench-compare` can gate a
+PR on the scan-schedule perf trajectory). Rows present in only one file are
+listed as added/removed, never flagged — new schedules (e.g. the mamba2
+rows) must be able to land.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _key(rec):
+    return (rec["op"], rec["shape"], rec["schedule"])
+
+
+def load(path):
+    with open(path) as f:
+        recs = json.load(f)
+    return {_key(r): r for r in recs}
+
+
+def compare(old_path: str, new_path: str, pct: float = 10.0):
+    """Returns (report lines, regression count)."""
+    old, new = load(old_path), load(new_path)
+    lines, regressions = [], 0
+    for k in sorted(old.keys() | new.keys()):
+        name = "/".join(k)
+        if k not in new:
+            lines.append(f"  removed   {name}")
+            continue
+        if k not in old:
+            lines.append(f"  added     {name}  "
+                         f"{new[k]['us_per_call']:.1f}us")
+            continue
+        o, n = old[k]["us_per_call"], new[k]["us_per_call"]
+        delta = (n - o) / o * 100 if o else 0.0
+        tag = "ok        "
+        if delta > pct:
+            tag = "REGRESSION"
+            regressions += 1
+        elif delta < -pct:
+            tag = "improved  "
+        lines.append(f"  {tag} {name}  {o:.1f} -> {n:.1f}us "
+                     f"({delta:+.1f}%)")
+    return lines, regressions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--pct", type=float, default=10.0,
+                    help="regression threshold in percent (default 10)")
+    args = ap.parse_args()
+    lines, regressions = compare(args.old, args.new, args.pct)
+    print(f"# {args.old} -> {args.new} (threshold {args.pct:.0f}%)")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"# {regressions} regression(s) > {args.pct:.0f}%")
+        sys.exit(1)
+    print("# no regressions")
+
+
+if __name__ == "__main__":
+    main()

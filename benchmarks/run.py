@@ -46,7 +46,9 @@ def _row(name, us, derived=""):
 # ---------------------------------------------------------------------------
 
 BENCH_RECORDS = []          # machine-readable mirror of the scan CSV rows
-BENCH_JSON = "BENCH_scan.json"
+# output path override so `make bench-scan` can write a fresh file next to
+# the committed baseline instead of clobbering it (see Makefile)
+BENCH_JSON = os.environ.get("BENCH_SCAN_JSON", "BENCH_scan.json")
 
 
 def _bench(op, shape, schedule, us, tokens):
@@ -75,20 +77,31 @@ def fig2_ssm_operator_profile():
       blocked_matmul  same schedule, explicit M @ b einsum contraction
                       (the MXU form the Pallas kernel uses)
       fused_seq       single sequential scan, y fused
+      mamba2_blocked  head-structured (scalar per-head decay) blocked
+                      schedule at MATCHED channels (D = H·dh) — the decay
+                      matrix is (T,T) per head and the chunk evaluates as
+                      one (T,T)·(T,dh·N) matmul
+                      (core/ssm.py::selective_scan_heads)
 
     The blocked_noreset row repeats `blocked` with reset-free positions:
     its delta vs `blocked` is the cost of PackMamba reset-correctness
     (paper's claim: ~zero). A final comment row greps the compiled HLO for
     a (B, L, D, N)-shaped buffer — the peak-memory evidence that `blocked`
-    (unlike `chunked`) never materializes the full decay/state trajectory.
+    (unlike `chunked`) never materializes the full decay/state trajectory
+    (and likewise no (B, L, H, dh, N) buffer for mamba2_blocked).
     """
     print("# fig2: selective_scan duration vs seqlen x schedule "
-          "(B=1, D=256, N=16, packed segments ~300)")
-    from repro.core.ssm import selective_scan
+          "(B=1, D=256, N=16, packed segments ~300; mamba2 rows: H=4 "
+          "dh=64 at matched channels)")
+    from repro.core.ssm import selective_scan, selective_scan_heads
     rng = np.random.default_rng(0)
     D, N = 256, 16
+    H2 = 4
+    P2 = D // H2
     A = -jnp.exp(jnp.asarray(rng.normal(size=(D, N)), jnp.float32))
+    A2 = -jnp.exp(jnp.asarray(rng.normal(size=(H2,)), jnp.float32))
     Dk = jnp.ones((D,), jnp.float32)
+    D2k = jnp.ones((H2,), jnp.float32)
     scheds = [
         ("chunked", dict(method="chunked", chunk=256)),
         ("blocked", dict(method="blocked", chunk=128)),
@@ -101,31 +114,49 @@ def fig2_ssm_operator_profile():
         dt = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, D)), jnp.float32)
         Bm = jnp.asarray(rng.normal(size=(1, L, N)), jnp.float32)
         Cm = jnp.asarray(rng.normal(size=(1, L, N)), jnp.float32)
+        u2 = u.reshape(1, L, H2, P2)
+        dt2 = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, H2)), jnp.float32)
         pos = _packed_positions(L)
         pos_flat = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (1, L))
         shape = f"B1_L{L}_D{D}_N{N}"
-        cells = [(name, kw, pos) for name, kw in scheds]
-        cells.append(("blocked_noreset", dict(method="blocked", chunk=128),
-                      pos_flat))
-        fns, best = {}, {}
-        for name, kw, p in cells:
-            fns[name] = jax.jit(lambda u, dt, Bm, Cm, pos,
-                                kw=tuple(kw.items()):
-                                selective_scan(u, dt, A, Bm, Cm, Dk, pos,
-                                               **dict(kw)))
-            jax.block_until_ready(fns[name](u, dt, Bm, Cm, p))   # compile
+
+        def mk1(kw):
+            return jax.jit(lambda u, dt, Bm, Cm, pos, kw=tuple(kw.items()):
+                           selective_scan(u, dt, A, Bm, Cm, Dk, pos,
+                                          **dict(kw)))
+
+        def mk2(kw):
+            return jax.jit(lambda u, dt, Bm, Cm, pos, kw=tuple(kw.items()):
+                           selective_scan_heads(u, dt, A2, Bm, Cm, D2k, pos,
+                                                **dict(kw)))
+
+        # each cell: (name, jitted fn, args)
+        cells = [(name, mk1(kw), (u, dt, Bm, Cm, pos))
+                 for name, kw in scheds]
+        cells.append(("blocked_noreset",
+                      mk1(dict(method="blocked", chunk=128)),
+                      (u, dt, Bm, Cm, pos_flat)))
+        cells.append(("mamba2_blocked",
+                      mk2(dict(method="blocked", chunk=64)),
+                      (u2, dt2, Bm, Cm, pos)))
+        cells.append(("mamba2_noreset",
+                      mk2(dict(method="blocked", chunk=64)),
+                      (u2, dt2, Bm, Cm, pos_flat)))
+        best = {}
+        for name, fn, args in cells:
+            jax.block_until_ready(fn(*args))                     # compile
             best[name] = float("inf")
         # interleave schedules round-robin: min-of-rounds is robust to the
         # machine-load drift that would bias per-schedule timing blocks
         for _ in range(7):
-            for name, kw, p in cells:
+            for name, fn, args in cells:
                 t0 = time.perf_counter()
-                jax.block_until_ready(fns[name](u, dt, Bm, Cm, p))
+                jax.block_until_ready(fn(*args))
                 best[name] = min(best[name],
                                  (time.perf_counter() - t0) * 1e6)
-        for name, kw, p in cells:
+        for name, fn, args in cells:
             us = best[name]
-            tag = " (reset-free baseline)" if name == "blocked_noreset" \
+            tag = " (reset-free baseline)" if name.endswith("noreset") \
                 else ""
             _row(f"fig2/ssm_{name}_L{L}", us,
                  f"{L / (us / 1e6):.0f} tok/s{tag}")
@@ -148,6 +179,15 @@ def fig2_ssm_operator_profile():
             u, dt, Bm, Cm, pos).compile().as_text()
         print(f"# fig2 memory: {name} HLO contains (B,L,D,N)={full} "
               f"buffer: {full in hlo}")
+    u2 = u.reshape(1, L, H2, P2)
+    dt2 = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, H2)), jnp.float32)
+    full2 = f"f32[1,{L},{H2},{P2},{N}]"
+    hlo2 = jax.jit(lambda u, dt, Bm, Cm, pos:
+                   selective_scan_heads(u, dt, A2, Bm, Cm, D2k, pos,
+                                        method="blocked", chunk=64)).lower(
+        u2, dt2, Bm, Cm, pos).compile().as_text()
+    print(f"# fig2 memory: mamba2_blocked HLO contains (B,L,H,dh,N)="
+          f"{full2} buffer: {full2 in hlo2}")
 
 
 # ---------------------------------------------------------------------------

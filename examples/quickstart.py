@@ -21,6 +21,10 @@ from repro.train.trainer import make_train_step
 
 def main():
     # 1. a tiny Mamba (the paper's architecture family)
+    #    (ssm_variant="mamba2" — or get_config("mamba2-370m") — selects the
+    #    head-structured Mamba-2/SSD core instead: scalar per-head decay,
+    #    whose blocked schedule runs one (T,T)·(T,dh·N) matmul per head.
+    #    Everything below, packing included, works identically for both.)
     cfg = dataclasses.replace(get_config("mamba-110m"),
                               d_model=128, n_layers=4, vocab=512,
                               dtype="float32", scan_chunk=64)

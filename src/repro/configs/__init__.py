@@ -6,7 +6,7 @@ _MODULES = [
     "recurrentgemma_2b", "stablelm_1_6b", "deepseek_coder_33b", "gemma_7b",
     "deepseek_67b", "hubert_xlarge", "mixtral_8x22b", "moonshot_v1_16b_a3b",
     "qwen2_vl_2b", "xlstm_125m",
-    "mamba_110m", "mamba_1_4b", "mamba_2_8b",
+    "mamba_110m", "mamba_1_4b", "mamba_2_8b", "mamba2_370m",
 ]
 
 _loaded = False

@@ -52,6 +52,11 @@ class ArchConfig:
     d_conv: int = 4
     expand: int = 2
     dt_rank: Optional[int] = None     # default ceil(d_model / 16)
+    ssm_variant: str = "mamba1"       # mamba1 (per-channel decay, dh=1) |
+                                      # mamba2 (SSD: scalar per-head decay,
+                                      # single-matmul blocked schedule)
+    ssm_heads: Optional[int] = None   # mamba2: #heads (default d_inner/hd)
+    ssm_head_dim: Optional[int] = None  # mamba2: head dim dh (default 64)
     # hybrid / xlstm layer pattern: one entry per layer in the unit
     pattern: Tuple[str, ...] = ()     # e.g. ("rec","rec","attn"); () = homogeneous
     lru_width: Optional[int] = None   # hybrid recurrent width (default d_model)
@@ -100,12 +105,32 @@ class ArchConfig:
         return self.expand * self.d_model
 
     @property
+    def ssm_hd(self) -> int:
+        """Mamba-2 head dim dh; enforces d_inner = ssm_heads · ssm_hd."""
+        hd = self.ssm_head_dim
+        if hd is None:
+            hd = (self.d_inner // self.ssm_heads) if self.ssm_heads else 64
+        if self.ssm_heads:
+            if self.ssm_heads * hd != self.d_inner:
+                raise ValueError(
+                    f"ssm_heads ({self.ssm_heads}) × head dim ({hd}) != "
+                    f"d_inner ({self.d_inner})")
+        elif self.d_inner % hd:
+            raise ValueError(
+                f"d_inner {self.d_inner} not divisible by ssm_head_dim {hd}")
+        return hd
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_hd
+
+    @property
     def unit(self) -> Tuple[str, ...]:
         """The repeating layer-pattern unit."""
         if self.pattern:
             return self.pattern
         if self.family == "mamba":
-            return ("mamba",)
+            return ("mamba2",) if self.ssm_variant == "mamba2" else ("mamba",)
         if self.family == "moe":
             return ("moe_attn",)
         return ("attn",)
@@ -114,7 +139,7 @@ class ArchConfig:
     def sub_quadratic(self) -> bool:
         """True if per-token decode state is O(1) w.r.t. context length."""
         kinds = set(self.unit)
-        if kinds <= {"mamba", "rec", "mlstm", "slstm"}:
+        if kinds <= {"mamba", "mamba2", "rec", "mlstm", "slstm"}:
             return True
         # attention present: sub-quadratic iff windowed
         return self.attn_window is not None
@@ -132,6 +157,9 @@ class ArchConfig:
             k["mrope_sections"] = (2, 3, 3)    # sums to reduced head_dim/2
         if self.family == "hybrid":
             k["lru_gate_blocks"] = 4
+        if self.ssm_variant == "mamba2":
+            k["ssm_head_dim"] = 16             # 8 heads at d_inner = 128
+            k["ssm_heads"] = None
         return dataclasses.replace(
             self, name=self.name + "-smoke",
             n_layers=max(len(self.unit) * 2, 2),

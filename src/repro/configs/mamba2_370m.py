@@ -1,0 +1,20 @@
+"""mamba2-370m — Mamba-2 (SSD) evaluation size (Dao & Gu: 48 layers,
+d_model=1024, d_state=64, head dim 64 → 32 heads at expand=2).
+
+Same PackMamba packing rules as mamba-110m, but the scalar per-head decay
+turns the blocked schedule's in-chunk step into a single (T,T)·(T,dh·N)
+matmul per head (core/scan.py taxonomy; kernels schedule='blocked_heads').
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mamba2-370m",
+    family="mamba",
+    n_layers=48,
+    d_model=1024,
+    n_heads=1, n_kv_heads=1,   # unused by mamba blocks
+    d_ff=0,
+    vocab=50280,
+    d_state=64, d_conv=4, expand=2,
+    ssm_variant="mamba2", ssm_head_dim=64,
+))

@@ -47,10 +47,26 @@ Schedule taxonomy (who wins when):
                        folded in, (B, L, D, N) never materialized) is
                        core/ssm.py::method='blocked'; its TPU-kernel twin is
                        kernels/selective_scan.py::schedule='blocked'.
+  * ``blocked`` with *per-head scalar decay* (Mamba-2 / SSD proper) — the
+                       head-structured specialization: with state (H, dh, N)
+                       and one scalar decay a_t per head (instead of one per
+                       (d, n) element), the decay matrix M collapses from
+                       (T, T, D, N) to a single (T, T) matrix per head, and
+                       the whole in-chunk evaluation becomes ONE
+                       (T, T)·(T, dh·N) matmul per head — the pure-MXU form
+                       PackMamba's "bottleneck operator under diverse tensor
+                       shapes" analysis calls for. Mamba-1 is the degenerate
+                       case H = d_inner, dh = 1 with per-channel decay; both
+                       variants dispatch through
+                       core/ssm.py::selective_scan_heads. The TPU-kernel
+                       twin is kernels/selective_scan.py::
+                       schedule='blocked_heads'.
 
 The Pallas kernels mirror the last two: ``schedule='step'`` walks time with
 a per-step VPU update (chunk carry in VMEM scratch), ``schedule='blocked'``
-applies the same masked-triangular-decay contraction per in-chunk subtile.
+applies the same masked-triangular-decay contraction per in-chunk subtile,
+and ``schedule='blocked_heads'`` applies the per-head scalar-decay form as
+one dense (Tt, Tt) @ (Tt, dh·N) matmul per subtile.
 """
 from __future__ import annotations
 

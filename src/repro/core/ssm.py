@@ -1,12 +1,29 @@
-"""Mamba-1 selective scan with PackMamba segment resets — XLA path.
+"""Selective scan with PackMamba segment resets — XLA path.
 
-Discretization (paper eq. 2a/2b, Mamba's ZOH-for-A / Euler-for-B):
+One *head-structured* state-space interface serves both Mamba generations.
+The general layout is ``(B, L, H, dh)`` inputs with state ``(B, H, dh, N)``:
 
-    Ā[b,l,d,n] = exp(Δ[b,l,d] · A[d,n])          A = -exp(A_log)  (real < 0)
-    B̄x[b,l,d,n] = Δ[b,l,d] · B[b,l,n] · u[b,l,d]
+  * **Mamba-2 / SSD** — per-head *scalar* decay ``A: (H,)``:
 
-    h_t = Ā_t ⊙ h_{t-1} + B̄x_t                    (per (b, d, n))
-    y[b,l,d] = Σ_n C[b,l,n] · h[b,l,d,n] + D[d] · u[b,l,d]
+        Ā[b,l,h]      = exp(Δ[b,l,h] · A[h])     A = -exp(A_log)  (real < 0)
+        B̄x[b,l,h,p,n] = Δ[b,l,h] · B[b,l,n] · u[b,l,h,p]
+        h_t = Ā_t · h_{t-1} + B̄x_t               (per (b, h); scalar decay)
+        y[b,l,h,p] = Σ_n C[b,l,n] · h[b,l,h,p,n] + D[h] · u[b,l,h,p]
+
+    With scalar decay the blocked schedule's cumulative-decay matrix is one
+    (T, T) matrix per head, so a whole chunk evaluates as a single
+    (T, T) · (T, dh·N) matmul — see ``selective_scan_heads``.
+
+  * **Mamba-1** — the degenerate case ``H = d_inner, dh = 1`` with
+    *per-channel* decay ``A: (D, N)`` (paper eq. 2a/2b, ZOH-for-A /
+    Euler-for-B):
+
+        Ā[b,l,d,n] = exp(Δ[b,l,d] · A[d,n])
+        B̄x[b,l,d,n] = Δ[b,l,d] · B[b,l,n] · u[b,l,d]
+        y[b,l,d] = Σ_n C[b,l,n] · h[b,l,d,n] + D[d] · u[b,l,d]
+
+    ``selective_scan`` keeps the historical (B, L, D) surface and routes
+    through ``selective_scan_heads`` with dh = 1.
 
 PackMamba (§3.4): wherever position_indices == 0, Ā → 0 — state reset at the
 start of each packed sequence. In serial form this equals Δ→∞ state
@@ -14,8 +31,10 @@ forgetting that selective SSMs already support (paper eq. 2a remark); in
 parallel form the reset composes with the associative combine (see
 core/scan.py docstring).
 
-This module is the default (dry-run / roofline) path; the Pallas TPU kernel
-lives in kernels/selective_scan.py and matches this to numerical tolerance.
+This module is the default (dry-run / roofline) path; the Pallas TPU kernels
+live in kernels/selective_scan.py and match this to numerical tolerance
+(``schedule='blocked'``/``'step'`` for per-channel, ``'blocked_heads'`` for
+per-head scalar decay).
 """
 from __future__ import annotations
 
@@ -28,6 +47,9 @@ from repro.core.scan import segmented_scan, scan_step
 from repro.core.scan import _combine as _scan_combine
 
 _MATMUL_CHUNK_CAP = 32    # blocked/matmul intra: bounds the T²·D·N operand
+_HEADS_CHUNK_CAP = 64     # blocked heads: bounds the (T, T, H) decay matrix
+#   and the T× FLOP multiplier of the single-matmul step (SSD picks T ≈ dh
+#   so the (T,T)·(T,dh·N) matmul stays square-ish and compute-balanced)
 
 
 def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
@@ -38,7 +60,10 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                    method: str = "chunked", chunk: int = 256,
                    return_state: bool = False,
                    compute_dtype=None, intra: Optional[str] = None):
-    """u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
+    """Mamba-1 surface: u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
+
+    The degenerate head-structured case H = D, dh = 1 — dispatches through
+    ``selective_scan_heads`` (the unified state-space interface).
 
     positions: (B,L) int32 — PackMamba position indices (reset where == 0).
     h0: (B, D, N) initial state (for split-pack state carry / decode chunking).
@@ -47,6 +72,72 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
     default picks 'matmul' on TPU, 'assoc' elsewhere — see _blocked_ssm).
     Returns y (B, L, D) [, h_last (B, D, N)].
     """
+    out = selective_scan_heads(
+        u[..., None], delta, A, B, C, D, positions=positions,
+        h0=None if h0 is None else h0[:, :, None, :],
+        method=method, chunk=chunk, return_state=return_state,
+        compute_dtype=compute_dtype, intra=intra)
+    if return_state:
+        y, h_last = out
+        return y[..., 0], h_last[:, :, 0, :]
+    return out[..., 0]
+
+
+def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
+                         B: jnp.ndarray, C: jnp.ndarray,
+                         D: Optional[jnp.ndarray] = None,
+                         positions: Optional[jnp.ndarray] = None,
+                         h0: Optional[jnp.ndarray] = None,
+                         method: str = "blocked", chunk: int = 64,
+                         return_state: bool = False,
+                         compute_dtype=None, intra: Optional[str] = None):
+    """Unified head-structured state-space interface (module docstring).
+
+    u: (B, L, H, dh); delta: (B, L, H); B, C: (B, L, N) (shared across the
+    heads of a group); D: (H,) skip; positions: (B, L) int32 (reset where
+    == 0); h0: (B, H, dh, N).
+
+    ``A`` selects the variant:
+      * (H,)   — Mamba-2/SSD scalar per-head decay. ``method``:
+                 'blocked' (single (T,T)·(T,dh·N) matmul per head per chunk
+                 — the hot path) | 'sequential' (reference / short L).
+      * (H, N) — Mamba-1 per-(channel, state) decay; requires dh == 1 and
+                 accepts every per-channel ``method`` ('blocked' | 'chunked'
+                 | 'fused_seq' | 'sequential' | 'associative', plus
+                 ``intra`` for 'blocked').
+
+    Returns y (B, L, H, dh) [, h_last (B, H, dh, N)].
+    """
+    Bsz, L, H, P = u.shape
+    if A.ndim == 2:
+        # Mamba-1 degenerate case: fold dh into the channel axis and run the
+        # per-channel evaluators.
+        if P != 1:
+            raise ValueError(
+                f"per-channel decay A{A.shape} requires dh == 1, got {P}")
+        out = _selective_scan_channels(
+            u[..., 0], delta, A, B, C, D, positions,
+            None if h0 is None else h0[:, :, 0, :],
+            method, chunk, return_state, compute_dtype, intra)
+        if return_state:
+            y, h_last = out
+            return y[..., None], h_last[:, :, None, :]
+        return out[..., None]
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
+        jnp.promote_types(u.dtype, jnp.float32)
+    if method == "blocked":
+        return _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
+                                  return_state, cdt, chunk)
+    if method == "sequential":
+        return _seq_scan_heads(u, delta, A, B, C, D, positions, h0,
+                               return_state, cdt)
+    raise ValueError(f"unknown scalar-decay scan method {method!r}")
+
+
+def _selective_scan_channels(u, delta, A, B, C, D, positions, h0,
+                             method, chunk, return_state, compute_dtype,
+                             intra):
+    """Per-channel (Mamba-1) evaluator family. u,delta: (B,L,D); A: (D,N)."""
     Bsz, L, Dm = u.shape
     N = A.shape[-1]
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
@@ -223,21 +314,153 @@ def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, return_state, cdt):
     return y
 
 
+# ---------------------------------------------------------------------------
+# head-structured (scalar per-head decay) evaluators — Mamba-2 / SSD
+# ---------------------------------------------------------------------------
+
+def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0, return_state,
+                       cdt, chunk):
+    """Block-parallel schedule, per-head scalar decay — the SSD hot path.
+
+    The same schedule as ``_blocked_ssm`` but the decay depends only on
+    (b, l, h), so per chunk of length T the masked cumulative-decay matrix
+
+        dec[i,j] = exp(s_i − s_j)·[j ≤ i]·[no reset in (j, i]]   (s = cumsum Δ·A)
+
+    is a single (T, T) matrix per (b, h) — NOT (T, T, D, N) — and every
+    in-chunk state is produced by ONE matmul-shaped contraction
+
+        h[i, p, n] = Σ_j dec[i,j] · (Δ·u ⊗ B)[j, p, n]        ((T,T)·(T,dh·N))
+
+    per head, with y = C·h fused in the chunk body. No per-(d, n) batching
+    anywhere: the MXU sees dense (T, T) × (T, dh·N) work. The (B, L, H, dh, N)
+    state trajectory is never materialized — only the current chunk's
+    (B, T, H, dh, N) slice is live, and the chunk body is checkpointed so
+    backward residuals stay at the raw inputs.
+    """
+    Bsz, L, H, P = u.shape
+    N = B.shape[-1]
+    T = min(chunk, L, _HEADS_CHUNK_CAP)
+    A32 = A.astype(cdt)
+    reset = (positions == 0) if positions is not None else \
+        jnp.zeros((Bsz, L), bool)
+    pad = (-L) % T
+    if pad:
+        # Δ=0 ⇒ decay 1 / b-term 0 (state carried), no reset: identity steps
+        u = jnp.pad(u, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        delta = jnp.pad(delta, [(0, 0), (0, pad), (0, 0)])
+        B = jnp.pad(B, [(0, 0), (0, pad), (0, 0)])
+        C = jnp.pad(C, [(0, 0), (0, pad), (0, 0)])
+        reset = jnp.pad(reset, [(0, 0), (0, pad)])
+    Lp = u.shape[1]
+    nc = Lp // T
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), cdt)
+    h0 = h0.astype(cdt)
+    tril = jnp.tril(jnp.ones((T, T), bool))
+
+    @jax.checkpoint
+    def chunk_step(h_in, xs):
+        uc, dc, Bc, Cc, rc = xs     # (B,T,H,P), (B,T,H), (B,T,N)×2, (B,T)
+        d32 = dc.astype(cdt)
+        la = d32 * A32                                   # (B,T,H) log decay
+        s = jnp.cumsum(la, axis=1)
+        rid = jnp.cumsum(rc.astype(jnp.int32), axis=1)   # resets ≤ i
+        m = (rid[:, :, None] == rid[:, None, :]) & tril[None]    # (B,T,T)
+        mm = m[..., None]
+        diff = s[:, :, None] - s[:, None, :]             # (B,T,T,H)
+        dec = jnp.where(mm, jnp.exp(jnp.where(mm, diff, 0.0)), 0.0)
+        bterm = (d32[..., None] * uc.astype(cdt))[..., None] * \
+            Bc.astype(cdt)[:, :, None, None, :]          # (B,T,H,P,N)
+        # the single-matmul step: (T,T)·(T, dh·N) batched only over (b, h)
+        h = jnp.einsum("bijh,bjhpn->bihpn", dec, bterm)
+        cin = jnp.where((rid == 0)[..., None], jnp.exp(s), 0.0)  # (B,T,H)
+        h = h + cin[..., None, None] * h_in[:, None]
+        y = jnp.einsum("bihpn,bin->bihp", h, Cc.astype(cdt))
+        return h[:, -1], y
+
+    xs = tuple(jnp.moveaxis(x.reshape((Bsz, nc, T) + x.shape[2:]), 1, 0)
+               for x in (u, delta, B, C, reset))
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Lp, H, P)[:, :L]
+    if D is not None:
+        y = y + (D.astype(cdt)[:, None] * u[:, :L].astype(cdt))
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def _seq_scan_heads(u, delta, A, B, C, D, positions, h0, return_state, cdt):
+    """Sequential per-head reference (y = C·h fused, scalar decay)."""
+    Bsz, L, H, P = u.shape
+    N = B.shape[-1]
+    A32 = A.astype(cdt)
+    reset = (positions == 0) if positions is not None else \
+        jnp.zeros((Bsz, L), bool)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), cdt)
+    h0 = h0.astype(cdt)
+
+    def step(h, xs):
+        u_t, d_t, B_t, C_t, r_t = xs       # (B,H,P), (B,H), (B,N)×2, (B,)
+        d32 = d_t.astype(cdt)
+        a_t = jnp.exp(d32 * A32)                          # (B, H)
+        a_t = jnp.where(r_t[:, None], 0.0, a_t)
+        b_t = (d32[..., None] * u_t.astype(cdt))[..., None] * \
+            B_t.astype(cdt)[:, None, None, :]             # (B, H, P, N)
+        h = a_t[..., None, None] * h + b_t
+        y_t = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(cdt))
+        return h, y_t
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0),
+          jnp.moveaxis(reset, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if D is not None:
+        y = y + (D.astype(cdt)[:, None] * u.astype(cdt))
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def selective_scan_heads_step(h: jnp.ndarray, u_t: jnp.ndarray,
+                              delta_t: jnp.ndarray, A: jnp.ndarray,
+                              B_t: jnp.ndarray, C_t: jnp.ndarray,
+                              D: Optional[jnp.ndarray] = None,
+                              reset_t: Optional[jnp.ndarray] = None
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One head-structured decode step. h: (B, H, dh, N); u_t: (B, H, dh);
+    delta_t: (B, H); A: (H,) scalar decay or (H, N) per-state (dh == 1);
+    B_t, C_t: (B, N); D: (H,); reset_t: (B,) bool.
+
+    Returns (y_t (B, H, dh), h_new (B, H, dh, N)).
+    """
+    cdt = h.dtype
+    d32 = delta_t.astype(cdt)
+    if A.ndim == 2:                       # Mamba-1 degenerate: (H, N), dh = 1
+        a_t = jnp.exp(d32[..., None] * A.astype(cdt))[:, :, None, :]
+    else:
+        a_t = jnp.exp(d32 * A.astype(cdt))[..., None, None]   # (B,H,1,1)
+    b_t = (d32[..., None] * u_t.astype(cdt))[..., None] * \
+        B_t.astype(cdt)[:, None, None, :]                     # (B,H,dh,N)
+    h_new = scan_step(h, jnp.broadcast_to(a_t, h.shape), b_t, reset_t)
+    y_t = jnp.einsum("bhpn,bn->bhp", h_new, C_t.astype(cdt))
+    if D is not None:
+        y_t = y_t + D.astype(cdt)[:, None] * u_t.astype(cdt)
+    return y_t.astype(u_t.dtype), h_new
+
+
 def selective_scan_step(h: jnp.ndarray, u_t: jnp.ndarray, delta_t: jnp.ndarray,
                         A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray,
                         D: Optional[jnp.ndarray] = None,
                         reset_t: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One decode step. h: (B, D, N); u_t, delta_t: (B, D); B_t, C_t: (B, N).
-
-    Returns (y_t (B, D), h_new (B, D, N)).
-    """
-    cdt = h.dtype
-    a_t = jnp.exp(delta_t.astype(cdt)[..., None] * A.astype(cdt))      # (B,D,N)
-    b_t = (delta_t.astype(cdt) * u_t.astype(cdt))[..., None] * \
-        B_t.astype(cdt)[:, None, :]
-    h_new = scan_step(h, a_t, b_t, reset_t)
-    y_t = jnp.einsum("bdn,bn->bd", h_new, C_t.astype(cdt))
-    if D is not None:
-        y_t = y_t + D.astype(cdt) * u_t.astype(cdt)
-    return y_t.astype(u_t.dtype), h_new
+    """One Mamba-1 decode step — the dh = 1 case of
+    ``selective_scan_heads_step``. h: (B, D, N); u_t, delta_t: (B, D);
+    B_t, C_t: (B, N). Returns (y_t (B, D), h_new (B, D, N))."""
+    y_t, h_new = selective_scan_heads_step(
+        h[:, :, None, :], u_t[..., None], delta_t, A, B_t, C_t, D, reset_t)
+    return y_t[..., 0], h_new[:, :, 0, :]

@@ -1,0 +1,30 @@
+"""Version-compat shims for the mesh/sharding API surface we use.
+
+Mirror of ``kernels/compat.py`` (the CompilerParams shim), for the device
+side: newer JAX grows ``jax.sharding.AxisType`` and a matching
+``axis_types=`` kwarg on ``jax.make_mesh`` (explicit vs auto sharding
+modes); the pinned 0.4.x has neither. Every mesh construction site —
+``launch/mesh.py`` and the subprocess sources in
+``tests/test_{roofline,sharding,checkpoint}.py`` — resolves mesh creation
+through this shim so a version bump is a one-line change here instead of an
+``AttributeError`` at mesh-build time in each call site.
+"""
+from __future__ import annotations
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def auto_axis_types(n: int):
+    """``axis_types`` kwargs for an n-axis mesh: Auto on every axis where
+    the running JAX supports axis types, {} otherwise."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with Auto axis types whenever supported."""
+    return jax.make_mesh(axis_shapes, axis_names,
+                         **auto_axis_types(len(axis_names)), **kwargs)

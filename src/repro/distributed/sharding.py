@@ -81,8 +81,10 @@ def _param_rule(name: str, shape: Tuple[int, ...], mesh: Mesh,
                   "dt_w", "w_x", "w_y", "w_pre", "shared_gate", "shared_up"):
         body = spec2(dta, m)                  # column-TP (output sharded)
     elif name in ("wo", "w_down", "out_proj", "x_proj", "wo_rec",
-                  "shared_down", "w_out"):
+                  "shared_down", "w_out", "bc_proj"):
         body = spec2(m, dta)                  # row-TP (contraction sharded)
+    elif name == "dt_proj":                   # (d_inner, H): H heads are few
+        body = spec2(m, None)                 # — shard the contraction only
     elif name == "wkv":                       # GQA KV: small — replicate cols
         body = spec2(dta, None)
     elif name == "router":                    # (d, E)
@@ -101,8 +103,11 @@ def _param_rule(name: str, shape: Tuple[int, ...], mesh: Mesh,
         body = (None, _fit(mesh, shape[-1], m))
     elif name in ("conv_b", "dt_b", "D", "a_param"):   # (channels,)
         body = (_fit(mesh, shape[-1], m),)
-    elif name == "A_log":                     # (d_inner, N)
-        body = (_fit(mesh, shape[-2], m), None)
+    elif name == "A_log":
+        if d == 1:                            # mamba2: (H,) per-head decay
+            body = (_fit(mesh, shape[-1], m),)
+        else:                                 # mamba1: (d_inner, N)
+            body = (_fit(mesh, shape[-2], m), None)
     elif name in ("w_r", "w_i"):              # (nb, c, c) block-diag gates
         body = (_fit(mesh, shape[-3], m), None, None)
     elif name in ("w_if",):                   # (pf, 2H)
@@ -185,6 +190,9 @@ def cache_pspecs(cache_shape, mesh: Mesh, batch_size: int):
         elif name == "ssm" and len(core) == 3:         # (B, d_inner, N)
             spec = (batch_axis(mesh, core[0]),
                     _fit(mesh, core[1], "model"), None)
+        elif name == "ssm" and len(core) == 4:   # (B, H, dh, N) head-struct.
+            spec = (batch_axis(mesh, core[0]),
+                    _fit(mesh, core[1], "model"), None, None)
         elif name == "h" and len(core) == 2:           # (B, lru)
             spec = (batch_axis(mesh, core[0]), _fit(mesh, core[1], "model"))
         else:

@@ -112,6 +112,80 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
 
 
 # ---------------------------------------------------------------------------
+# head-structured selective scan (Mamba-2 / SSD, scalar per-head decay)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def _scan_heads_padded(u, delta, Ah, B, C, Dp, pos, chunk):
+    y, _ = _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk)
+    return y
+
+
+def _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk):
+    y, ckpts = scan_k.selective_scan_heads_fwd_pallas(
+        u, delta, Ah, B, C, Dp, pos, chunk=chunk)
+    return y, (u, delta, Ah, B, C, Dp, pos, ckpts)
+
+
+def _scan_heads_bwd_rule(chunk, res, dy):
+    u, delta, Ah, B, C, Dp, pos, ckpts = res
+    du, ddelta, dB_p, dC_p, dA_p, dD_p = \
+        scan_k.selective_scan_heads_bwd_pallas(
+            u, delta, Ah, B, C, Dp, pos, ckpts, dy, chunk=chunk)
+    return (du.astype(u.dtype), ddelta.astype(delta.dtype),
+            dA_p.sum(0).astype(Ah.dtype), dB_p.sum(1).astype(B.dtype),
+            dC_p.sum(1).astype(C.dtype), dD_p.sum(0).astype(Dp.dtype),
+            np.zeros(pos.shape, _F0))
+
+
+_scan_heads_padded.defvjp(_scan_heads_fwd_rule, _scan_heads_bwd_rule)
+
+
+def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
+                         backend: str = "xla",
+                         chunk: int = scan_k.DEF_CHUNK_T,
+                         xla_chunk: int = 64, xla_method: str = "blocked",
+                         xla_dtype=None, schedule: str = "blocked_heads"):
+    """Fused head-structured segmented selective scan (scalar per-head
+    decay — Mamba-2/SSD). See core/ssm.py::selective_scan_heads for
+    semantics; this wrapper adds backend dispatch.
+
+    u: (B, L, H, dh) | delta: (B, L, H) | A: (H,) | B, C: (B, L, N) |
+    D: (H,) | positions: (B, L) i32 (reset where == 0) → y (B, L, H, dh).
+
+    ``backend='xla'`` routes to the core evaluators; ``backend='pallas'``
+    transposes to the head-major kernel layout ((B, H, L, dh)), pads L to
+    the chunk, and runs the ``blocked_heads`` kernels through a custom_vjp
+    (the transpose-contraction backward).
+    """
+    if backend == "xla":
+        return core_ssm.selective_scan_heads(u, delta, A, B, C, D,
+                                             positions=positions,
+                                             method=xla_method,
+                                             chunk=xla_chunk,
+                                             compute_dtype=xla_dtype)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    if schedule != "blocked_heads":
+        raise ValueError(f"unknown heads schedule {schedule!r}")
+    Bz, L, H, P = u.shape
+    T = min(chunk, L)
+    uh = jnp.moveaxis(u, 2, 1)                       # (B, H, L, P)
+    dth = jnp.moveaxis(delta, 2, 1)                  # (B, H, L)
+    Ah = A.astype(jnp.float32)[:, None]              # (H, 1)
+    Dp = (D if D is not None else
+          jnp.zeros(H, u.dtype)).astype(jnp.float32)[:, None]
+    # L padding: pos=1 (no reset), delta=0 ⇒ decay 1 / b-term 0 (carry)
+    uh, dth = _pad_to(uh, 2, T), _pad_to(dth, 2, T)
+    Bp, Cp = _pad_to(B, 1, T), _pad_to(C, 1, T)
+    pos = positions if positions is not None else \
+        jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
+    posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
+    y = _scan_heads_padded(uh, dth, Ah, Bp, Cp, Dp, posp, T)
+    return jnp.moveaxis(y, 1, 2)[:, :L]
+
+
+# ---------------------------------------------------------------------------
 # conv1d pack
 # ---------------------------------------------------------------------------
 

@@ -32,7 +32,7 @@ VMEM budget per grid step (T=256, bd=128, N=16, f32):
   ((T+1)·N·bd·4 ≈ 2.06 MiB) + dh/dA (16 KiB) — comfortably inside the
   ~16 MiB/core VMEM with room for double buffering.
 
-Two schedules share this grid/BlockSpec structure (`schedule=` knob):
+Three schedules share this grid/BlockSpec structure (`schedule=` knob):
   * ``step``    — the kernels above: a per-step fori_loop VPU walk. The
                   reference path; matches the paper's ScanOp_pack closely.
   * ``blocked`` — SSD-style (Gu & Dao duality): each in-chunk subtile of
@@ -46,6 +46,18 @@ Two schedules share this grid/BlockSpec structure (`schedule=` knob):
                   blocks the same way (transpose contraction for the
                   adjoint scan; elementwise grads fully vectorized).
                   Extra VMEM: ~4 MiB (gbuf + subtile dec) at defaults.
+  * ``blocked_heads`` — head-structured (Mamba-2/SSD proper): grid
+                  ``(B, H, L/T)``, per-head SCALAR decay, state (dh, N) per
+                  head in VMEM scratch. The masked cumulative-decay matrix
+                  is one (Tt, Tt) f32 tile per head (vs (Tt, Tt, N, bd) for
+                  ``blocked``), and the entire subtile evaluates as ONE
+                  dense (Tt, Tt) @ (Tt, dh·N) matmul — the widest MXU shape
+                  of the three, with ~N·bd/Tt× less decay-matrix traffic.
+                  Backward mirrors ``blocked``: transpose contraction
+                  (Tt, Tt)ᵀ @ (Tt, dh·N) for the adjoint scan, elementwise
+                  grads vectorized over the chunk, per-head dA/dD scalar
+                  accumulators. Operands arrive head-major ((B, H, L, dh) /
+                  (B, H, L)); ops.py does the layout transpose.
 """
 from __future__ import annotations
 
@@ -167,6 +179,108 @@ def _fwd_kernel_blocked(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref,
         return ()
 
     jax.lax.fori_loop(0, nsub, sub, ())
+
+
+# ---------------------------------------------------------------------------
+# forward kernel — blocked_heads (scalar per-head decay) schedule
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel_blocked_heads(pos_ref, u_ref, dt_ref, A_ref, Bm_ref, Cm_ref,
+                              Dp_ref, y_ref, ckpt_ref, h_ref, *, sub_t):
+    """One (b, head, l-chunk) grid step, scalar per-head decay.
+
+    pos (1,T) i32 | u (1,1,T,P) | dt (1,1,T) | A, Dp (1,1) scalars |
+    Bm, Cm (1,T,N) | y (1,1,T,P) | ckpt (1,1,1,P,N) | h scratch (P,N) f32.
+
+    Per subtile of length Tt the masked cumulative-decay matrix is a single
+    (Tt, Tt) tile and all states evaluate as ONE matmul:
+
+        dec[i,j] = exp(s_i − s_j)·[j ≤ i]·[no reset in (j, i]]
+        h        = dec @ bterm.reshape(Tt, P·N)   + carry·exp(s)
+        y_i      = Σ_n h[i,·,n]·C[i,n] + D·u_i
+    """
+    T = u_ref.shape[2]
+    P = u_ref.shape[3]
+    N = Bm_ref.shape[2]
+    nsub = T // sub_t
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    ckpt_ref[0, 0, 0] = h_ref[...]
+    A = A_ref[0, 0]                                    # per-head scalar
+    Dp = Dp_ref[0, 0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 1)
+    causal = ii >= jj
+
+    def sub(si, _):
+        t0 = si * sub_t
+        dt = dt_ref[0, 0, pl.ds(t0, sub_t)].astype(jnp.float32)   # (Tt,)
+        u_t = u_ref[0, 0, pl.ds(t0, sub_t), :].astype(jnp.float32)  # (Tt,P)
+        Bv = Bm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)   # (Tt, N)
+        Cv = Cm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        r = pos_ref[0, pl.ds(t0, sub_t)] == 0                     # (Tt,)
+        s = jnp.cumsum(dt * A)                                    # (Tt,)
+        rid = jnp.cumsum(r.astype(jnp.int32))
+        m = (rid[:, None] == rid[None, :]) & causal               # (Tt, Tt)
+        diff = s[:, None] - s[None, :]
+        dec = jnp.where(m, jnp.exp(jnp.where(m, diff, 0.0)), 0.0)
+        bt = Bv[:, None, :] * (dt[:, None] * u_t)[:, :, None]     # (Tt,P,N)
+        h = jnp.dot(dec, bt.reshape(sub_t, P * N),
+                    preferred_element_type=jnp.float32).reshape(sub_t, P, N)
+        cin = jnp.where(rid == 0, jnp.exp(s), 0.0)                # (Tt,)
+        h = h + cin[:, None, None] * h_ref[...][None]
+        y = jnp.sum(h * Cv[:, None, :], axis=2)                   # (Tt, P)
+        y_ref[0, 0, pl.ds(t0, sub_t), :] = (y + Dp * u_t).astype(
+            y_ref.dtype)
+        h_ref[...] = h[-1]
+        return ()
+
+    jax.lax.fori_loop(0, nsub, sub, ())
+
+
+def selective_scan_heads_fwd_pallas(u, delta, Ah, Bm, Cm, Dp, positions,
+                                    chunk: int = DEF_CHUNK_T,
+                                    interpret: Optional[bool] = None):
+    """Head-major shapes (already padded/transposed by ops.py):
+    u (B, H, L, P); delta (B, H, L); Ah, Dp (H, 1); Bm, Cm (B, L, N);
+    positions (B, L) i32. Returns (y (B, H, L, P), ckpts (B, H, L/T, P, N))."""
+    Bz, H, L, P = u.shape
+    N = Bm.shape[-1]
+    T = chunk
+    nL = L // T
+    grid = (Bz, H, nL)
+    kernel = functools.partial(_fwd_kernel_blocked_heads,
+                               sub_t=_pick_subtile(T))
+    out_shape = (
+        jax.ShapeDtypeStruct((Bz, H, L, P), u.dtype),
+        jax.ShapeDtypeStruct((Bz, H, nL, P, N), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, h, l: (b, l)),            # pos
+            pl.BlockSpec((1, 1, T, P), lambda b, h, l: (b, h, l, 0)),  # u
+            pl.BlockSpec((1, 1, T), lambda b, h, l: (b, h, l)),      # dt
+            pl.BlockSpec((1, 1), lambda b, h, l: (h, 0)),            # A
+            pl.BlockSpec((1, T, N), lambda b, h, l: (b, l, 0)),      # Bm
+            pl.BlockSpec((1, T, N), lambda b, h, l: (b, l, 0)),      # Cm
+            pl.BlockSpec((1, 1), lambda b, h, l: (h, 0)),            # Dp
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, P), lambda b, h, l: (b, h, l, 0)),  # y
+            pl.BlockSpec((1, 1, 1, P, N),
+                         lambda b, h, l: (b, h, l, 0, 0)),             # ckpt
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(positions, u, delta, Ah, Bm, Cm, Dp)
 
 
 def selective_scan_fwd_pallas(u, delta, At, Bm, Cm, Dp, positions,
@@ -389,7 +503,6 @@ def _bwd_kernel_blocked(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref,
     u_t = u_ref[0].astype(jnp.float32)
     dy = dy_ref[0].astype(jnp.float32)
     Bv = Bm_ref[0].astype(jnp.float32)                  # (T, N)
-    Cv = Cm_ref[0].astype(jnp.float32)
     a = jnp.exp(dt[:, None, :] * At[None])              # (T, N, bd)
     a = jnp.where((pos_ref[0] == 0)[:, None, None], 0.0, a)
     hb = hbuf_ref[...]
@@ -410,6 +523,180 @@ def _bwd_kernel_blocked(pos_ref, u_ref, dt_ref, At_ref, Bm_ref, Cm_ref,
     def _flush():
         dA_ref[0] = dA_acc[...]
         dD_ref[0, 0] = dD_acc[0, :]
+
+
+# ---------------------------------------------------------------------------
+# backward kernel — blocked_heads schedule
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel_blocked_heads(pos_ref, u_ref, dt_ref, A_ref, Bm_ref, Cm_ref,
+                              Dp_ref, ckpt_ref, dy_ref,
+                              du_ref, ddt_ref, dB_ref, dC_ref, dA_ref,
+                              dD_ref,
+                              hbuf_ref, gbuf_ref, g_ref, dA_acc, dD_acc, *,
+                              sub_t):
+    """Adjoint of one (b, head, l-chunk), scalar per-head decay. Mirrors
+    ``_bwd_kernel_blocked``: h recomputed per subtile from the chunk-entry
+    checkpoint via the forward matmul, the adjoint scan
+
+        g_t = C_t ⊗ dy_t + a_{t+1}·g_{t+1}
+
+    evaluated per subtile as the TRANSPOSE contraction decᵀ @ (C⊗dy) (one
+    (Tt, Tt) @ (Tt, P·N) matmul) with the VMEM carry G = a_first·g_first,
+    then all per-position parameter/input adjoints as elementwise chunk-wide
+    tensor work. Per-head dA/dD reduce into (1, 1) scalar accumulators
+    flushed on the last reverse grid step.
+    """
+    T = u_ref.shape[2]
+    P = u_ref.shape[3]
+    N = Bm_ref.shape[2]
+    nsub = T // sub_t
+
+    @pl.when(pl.program_id(2) == 0)          # first step of the REVERSE walk
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        dA_acc[...] = jnp.zeros_like(dA_acc)
+        dD_acc[...] = jnp.zeros_like(dD_acc)
+
+    A = A_ref[0, 0]
+    Dp = Dp_ref[0, 0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 1)
+    causal = ii >= jj
+
+    def _tile(si):
+        """Masked (Tt, Tt) decay matrix + shared per-subtile tensors."""
+        t0 = si * sub_t
+        dt = dt_ref[0, 0, pl.ds(t0, sub_t)].astype(jnp.float32)   # (Tt,)
+        u_t = u_ref[0, 0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        r = pos_ref[0, pl.ds(t0, sub_t)] == 0
+        la = dt * A
+        s = jnp.cumsum(la)
+        rid = jnp.cumsum(r.astype(jnp.int32))
+        m = (rid[:, None] == rid[None, :]) & causal
+        diff = s[:, None] - s[None, :]
+        dec = jnp.where(m, jnp.exp(jnp.where(m, diff, 0.0)), 0.0)
+        return t0, dt, u_t, r, la, s, rid, dec
+
+    # ---- recompute h within the chunk, one matmul per subtile ----
+    hbuf_ref[0] = ckpt_ref[0, 0, 0]
+
+    def fsub(si, _):
+        t0, dt, u_t, r, la, s, rid, dec = _tile(si)
+        Bv = Bm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        bt = Bv[:, None, :] * (dt[:, None] * u_t)[:, :, None]     # (Tt,P,N)
+        h = jnp.dot(dec, bt.reshape(sub_t, P * N),
+                    preferred_element_type=jnp.float32).reshape(sub_t, P, N)
+        cin = jnp.where(rid == 0, jnp.exp(s), 0.0)
+        h = h + cin[:, None, None] * hbuf_ref[t0][None]
+        hbuf_ref[pl.ds(t0 + 1, sub_t)] = h
+        return ()
+
+    jax.lax.fori_loop(0, nsub, fsub, ())
+
+    # ---- reverse adjoint walk, transpose contraction per subtile ----
+    def rsub(si, _):
+        t0, dt, u_t, r, la, s, rid, dec = _tile(nsub - 1 - si)
+        Cv = Cm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        dy = dy_ref[0, 0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        c = dy[:, :, None] * Cv[:, None, :]                       # (Tt,P,N)
+        g = jnp.dot(dec.T, c.reshape(sub_t, P * N),
+                    preferred_element_type=jnp.float32).reshape(sub_t, P, N)
+        g = g + dec[-1][:, None, None] * g_ref[...][None]   # carry M[last,j]
+        gbuf_ref[pl.ds(t0, sub_t)] = g
+        a0 = jnp.where(r[0], 0.0, jnp.exp(la[0]))
+        g_ref[...] = a0 * g[0]                              # hand to t0 − 1
+        return ()
+
+    jax.lax.fori_loop(0, nsub, rsub, ())
+
+    # ---- elementwise adjoints, vectorized over the whole chunk ----
+    dt = dt_ref[0, 0].astype(jnp.float32)                   # (T,)
+    u_t = u_ref[0, 0].astype(jnp.float32)                   # (T, P)
+    dy = dy_ref[0, 0].astype(jnp.float32)
+    Bv = Bm_ref[0].astype(jnp.float32)                      # (T, N)
+    a = jnp.exp(dt * A)                                     # (T,)
+    a = jnp.where(pos_ref[0] == 0, 0.0, a)
+    hb = hbuf_ref[...]
+    h_prev, h_t = hb[:-1], hb[1:]                           # (T, P, N)
+    g = gbuf_ref[...]
+    da = jnp.sum(g * h_prev, axis=(1, 2))                   # (T,) scalar/step
+    gB = jnp.sum(g * Bv[:, None, :], axis=2)                # (T, P)
+    du_ref[0, 0] = (dt[:, None] * gB + Dp * dy).astype(du_ref.dtype)
+    ddt_ref[0, 0] = (da * a * A +
+                     jnp.sum(u_t * gB, axis=1)).astype(ddt_ref.dtype)
+    dB_ref[0, 0] = jnp.sum(g * (dt[:, None] * u_t)[:, :, None],
+                           axis=1).astype(dB_ref.dtype)
+    dC_ref[0, 0] = jnp.sum(h_t * dy[:, :, None], axis=1).astype(dC_ref.dtype)
+    dA_acc[0, 0] += jnp.sum(da * a * dt)
+    dD_acc[0, 0] += jnp.sum(dy * u_t)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        dA_ref[0, 0] = dA_acc[0]
+        dD_ref[0, 0] = dD_acc[0]
+
+
+def selective_scan_heads_bwd_pallas(u, delta, Ah, Bm, Cm, Dp, positions,
+                                    ckpts, dy,
+                                    chunk: int = DEF_CHUNK_T,
+                                    interpret: Optional[bool] = None):
+    """Head-major shapes as in the forward. Returns (du (B,H,L,P),
+    ddelta (B,H,L), dB_partial (B,H,L,N), dC_partial (B,H,L,N),
+    dA_partial (B,H,1), dD_partial (B,H,1))."""
+    Bz, H, L, P = u.shape
+    N = Bm.shape[-1]
+    T = chunk
+    nL = L // T
+    grid = (Bz, H, nL)
+    rev = lambda l: nL - 1 - l                 # walk the L dimension backwards
+    f32 = jnp.float32
+    kernel = functools.partial(_bwd_kernel_blocked_heads,
+                               sub_t=_pick_subtile(T))
+    scratch = [
+        pltpu.VMEM((T + 1, P, N), f32),        # recomputed h trajectory
+        pltpu.VMEM((T, P, N), f32),            # adjoint trajectory g
+        pltpu.VMEM((P, N), f32),               # adjoint carry G
+        pltpu.VMEM((1, 1), f32),               # per-head dA accumulator
+        pltpu.VMEM((1, 1), f32),               # per-head dD accumulator
+    ]
+    out_shape = (
+        jax.ShapeDtypeStruct((Bz, H, L, P), f32),     # du
+        jax.ShapeDtypeStruct((Bz, H, L), f32),        # ddelta
+        jax.ShapeDtypeStruct((Bz, H, L, N), f32),     # dB partials
+        jax.ShapeDtypeStruct((Bz, H, L, N), f32),     # dC partials
+        jax.ShapeDtypeStruct((Bz, H, 1), f32),        # dA partials
+        jax.ShapeDtypeStruct((Bz, H, 1), f32),        # dD partials
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T), lambda b, h, l: (b, rev(l))),       # pos
+            pl.BlockSpec((1, 1, T, P), lambda b, h, l: (b, h, rev(l), 0)),
+            pl.BlockSpec((1, 1, T), lambda b, h, l: (b, h, rev(l))),  # dt
+            pl.BlockSpec((1, 1), lambda b, h, l: (h, 0)),            # A
+            pl.BlockSpec((1, T, N), lambda b, h, l: (b, rev(l), 0)),  # Bm
+            pl.BlockSpec((1, T, N), lambda b, h, l: (b, rev(l), 0)),  # Cm
+            pl.BlockSpec((1, 1), lambda b, h, l: (h, 0)),            # Dp
+            pl.BlockSpec((1, 1, 1, P, N),
+                         lambda b, h, l: (b, h, rev(l), 0, 0)),      # ckpt
+            pl.BlockSpec((1, 1, T, P), lambda b, h, l: (b, h, rev(l), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, P), lambda b, h, l: (b, h, rev(l), 0)),
+            pl.BlockSpec((1, 1, T), lambda b, h, l: (b, h, rev(l))),
+            pl.BlockSpec((1, 1, T, N), lambda b, h, l: (b, h, rev(l), 0)),
+            pl.BlockSpec((1, 1, T, N), lambda b, h, l: (b, h, rev(l), 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, l: (b, h, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, l: (b, h, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(positions, u, delta, Ah, Bm, Cm, Dp, ckpts, dy)
 
 
 def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,

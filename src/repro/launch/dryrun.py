@@ -33,7 +33,7 @@ ASSIGNED = [
     "deepseek-67b", "hubert-xlarge", "mixtral-8x22b", "moonshot-v1-16b-a3b",
     "qwen2-vl-2b", "xlstm-125m",
 ]
-PAPER = ["mamba-110m", "mamba-1.4b", "mamba-2.8b"]
+PAPER = ["mamba-110m", "mamba-1.4b", "mamba-2.8b", "mamba2-370m"]
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,

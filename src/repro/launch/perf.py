@@ -72,6 +72,10 @@ HILLCLIMB = [
     ("mamba-2.8b", "train_4k",
      ["act_dp", "scan_bf16", "act_dp+scan_bf16", "scan_chunked",
       "scan_blocked+bf16"]),
+    # It-9: head-structured (Mamba-2/SSD) variant at matched packed shapes —
+    # tracks the per-head vs per-channel schedule gap across PRs
+    ("mamba2-370m", "train_4k",
+     ["baseline", "act_dp", "scan_bf16", "act_dp+scan_bf16"]),
 ]
 
 
@@ -101,8 +105,8 @@ def _report(rec):
           f"tempHBM {mem:6.2f}GiB")
 
 
-RECURRENT = {"mamba-110m", "mamba-1.4b", "mamba-2.8b", "recurrentgemma-2b",
-             "xlstm-125m"}
+RECURRENT = {"mamba-110m", "mamba-1.4b", "mamba-2.8b", "mamba2-370m",
+             "recurrentgemma-2b", "xlstm-125m"}
 BIG = {"deepseek-67b", "deepseek-coder-33b", "mixtral-8x22b"}
 
 

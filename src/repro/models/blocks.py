@@ -396,6 +396,106 @@ def step_mamba(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
 
 
 # ===========================================================================
+# Mamba-2 block (SSD: scalar per-head decay, head-structured state)
+# ===========================================================================
+
+def init_mamba2(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    H = cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    # Mamba-2 init: A ~ U[1, 16] per head; A = -exp(A_log) < 0
+    A = jax.random.uniform(ks[5], (H,), minval=1.0, maxval=16.0)
+    return {
+        "norm": jnp.ones((d,)),
+        "in_proj": _dense(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (W, di)) * W ** -0.5,
+        "conv_b": jnp.zeros((di,)),
+        # grouped B/C projections: one (B, C) pair shared by every head
+        "bc_proj": _dense(ks[2], di, 2 * N),
+        # per-head Δ head (no low-rank bottleneck: H ≪ d_inner already)
+        "dt_proj": _dense(ks[3], di, H),
+        "dt_b": jnp.full((H,), -4.6),         # softplus⁻¹(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((H,)),
+        "out_proj": _dense(ks[4], di, d, scale=di ** -0.5),
+    }
+
+
+def _mamba2_gates(p, x_c, cfg: ArchConfig):
+    """Shared projection head: x_c (..., di) → (Δ (..., H), B, C (..., N))."""
+    bc = x_c @ p["bc_proj"].astype(x_c.dtype)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    delta = jax.nn.softplus(x_c @ p["dt_proj"].astype(x_c.dtype) +
+                            p["dt_b"].astype(x_c.dtype))
+    return delta, Bm, Cm
+
+
+def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+    B, L, d = x.shape
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_hd
+    backend = "pallas" if cfg.use_pallas else "xla"
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    xz = h @ p["in_proj"].astype(h.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = kops.conv1d_pack(x_in, p["conv_w"].astype(h.dtype),
+                           p["conv_b"].astype(h.dtype),
+                           ctx.positions, backend=backend)
+    x_c = jax.nn.silu(x_c)
+    delta, Bm, Cm = _mamba2_gates(p, x_c, cfg)
+    A = -jnp.exp(p["A_log"])
+    u_h = x_c.reshape(B, L, H, P)
+    if collect:
+        # freeze state across right-padding (Δ=0 ⇒ decay 1, b-term 0) and
+        # neutralize the pos==0 reset at padding slots — same protocol as
+        # apply_mamba.
+        valid = _valid(ctx, x)
+        delta = delta * valid[..., None].astype(delta.dtype)
+        pos_nz = jnp.where(valid, ctx.positions, 1)
+        y, h_last = core_ssm.selective_scan_heads(
+            u_h, delta, A, Bm, Cm, p["D"], positions=pos_nz,
+            method="blocked", chunk=cfg.scan_chunk, return_state=True)
+        state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
+                 "ssm": h_last}
+        y = y.reshape(B, L, di) * jax.nn.silu(z)
+        return x + y @ p["out_proj"].astype(x.dtype), state
+    y = kops.selective_scan_heads(u_h, delta, A, Bm, Cm, p["D"],
+                                  positions=ctx.positions, backend=backend,
+                                  xla_chunk=cfg.scan_chunk,
+                                  xla_dtype=(None
+                                             if cfg.scan_dtype == "float32"
+                                             else cfg.scan_dtype))
+    y = y.reshape(B, L, di) * jax.nn.silu(z)
+    return x + y @ p["out_proj"].astype(x.dtype)
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype):
+    di, N, W = cfg.d_inner, cfg.d_state, cfg.d_conv
+    H, P = cfg.n_ssm_heads, cfg.ssm_hd
+    return {"conv": jnp.zeros((batch, W - 1, di), dtype),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32)}
+
+
+def step_mamba2(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
+    B = x_t.shape[0]
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_hd
+    h = _norm(p["norm"], x_t, cfg.norm_eps)
+    xz = (h[:, 0] @ p["in_proj"].astype(h.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = conv1d_pack_update(
+        x_in, cache["conv"], p["conv_w"].astype(h.dtype),
+        p["conv_b"].astype(h.dtype), ctx.reset_t)
+    x_c = jax.nn.silu(x_c)
+    delta, Bm, Cm = _mamba2_gates(p, x_c, cfg)
+    A = -jnp.exp(p["A_log"])
+    y, ssm = core_ssm.selective_scan_heads_step(
+        cache["ssm"], x_c.reshape(B, H, P), delta, A, Bm, Cm, p["D"],
+        reset_t=ctx.reset_t)
+    y = y.reshape(B, di) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x_t.dtype)
+    return x_t + out[:, None], {"conv": conv_state, "ssm": ssm}
+
+
+# ===========================================================================
 # RG-LRU recurrent block (RecurrentGemma / Griffin)
 # ===========================================================================
 
@@ -649,12 +749,12 @@ def step_slstm(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
 # ===========================================================================
 
 INIT = {"attn": init_attn, "mlp": init_mlp, "moe": init_moe,
-        "mamba": init_mamba, "rec": init_rec, "mlstm": init_mlstm,
-        "slstm": init_slstm}
+        "mamba": init_mamba, "mamba2": init_mamba2, "rec": init_rec,
+        "mlstm": init_mlstm, "slstm": init_slstm}
 
 CACHE_INIT = {"attn": init_attn_cache, "mamba": init_mamba_cache,
-              "rec": init_rec_cache, "mlstm": init_mlstm_cache,
-              "slstm": init_slstm_cache}
+              "mamba2": init_mamba2_cache, "rec": init_rec_cache,
+              "mlstm": init_mlstm_cache, "slstm": init_slstm_cache}
 
-STEP = {"attn": step_attn, "mamba": step_mamba, "rec": step_rec,
-        "mlstm": step_mlstm, "slstm": step_slstm}
+STEP = {"attn": step_attn, "mamba": step_mamba, "mamba2": step_mamba2,
+        "rec": step_rec, "mlstm": step_mlstm, "slstm": step_slstm}

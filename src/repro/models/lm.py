@@ -49,6 +49,8 @@ def unit_layout(cfg: ArchConfig) -> Tuple[Tuple[str, str], ...]:
                 out.append((f"{i}_ffn", "mlp"))
         elif kind == "mamba":
             out.append((f"{i}_mamba", "mamba"))
+        elif kind == "mamba2":
+            out.append((f"{i}_mamba2", "mamba2"))
         elif kind == "mlstm":
             out.append((f"{i}_mlstm", "mlstm"))
             if cfg.d_ff:
@@ -63,8 +65,8 @@ def unit_layout(cfg: ArchConfig) -> Tuple[Tuple[str, str], ...]:
 
 
 _APPLY = {"attn": B.apply_attn, "mlp": B.apply_mlp, "moe": B.apply_moe,
-          "mamba": B.apply_mamba, "rec": B.apply_rec,
-          "mlstm": B.apply_mlstm, "slstm": B.apply_slstm}
+          "mamba": B.apply_mamba, "mamba2": B.apply_mamba2,
+          "rec": B.apply_rec, "mlstm": B.apply_mlstm, "slstm": B.apply_slstm}
 
 
 def _apply_sub(kind, p, x, ctx, cfg, collect: int = 0):

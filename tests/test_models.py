@@ -16,7 +16,7 @@ from repro.train.trainer import make_train_step
 ARCHS = ["recurrentgemma-2b", "stablelm-1.6b", "deepseek-coder-33b",
          "gemma-7b", "deepseek-67b", "hubert-xlarge", "mixtral-8x22b",
          "moonshot-v1-16b-a3b", "qwen2-vl-2b", "xlstm-125m",
-         "mamba-110m", "mamba-1.4b", "mamba-2.8b"]
+         "mamba-110m", "mamba-1.4b", "mamba-2.8b", "mamba2-370m"]
 
 
 def _batch(rng, cfg, B=2, L=32):
@@ -68,6 +68,7 @@ def test_arch_smoke_forward_and_train_step(arch, rng):
 
 
 @pytest.mark.parametrize("arch", ["stablelm-1.6b", "mamba-110m",
+                                  "mamba2-370m",
                                   "recurrentgemma-2b", "xlstm-125m",
                                   "mixtral-8x22b", "qwen2-vl-2b"])
 def test_decode_matches_forward(arch, rng):

@@ -82,8 +82,8 @@ MINI_DRYRUN = r"""
 import jax, dataclasses
 from repro.configs.base import get_config
 from repro.launch.shapes import build_cell, SHAPES
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.distributed.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 SHAPES["train_4k"] = dict(kind="train", seq=128, batch=8)
 SHAPES["decode_32k"] = dict(kind="decode", seq=128, batch=8)
 for arch in ARCHS:
@@ -98,7 +98,10 @@ for arch in ARCHS:
             c = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                         out_shardings=cell.out_shardings).lower(
                 *cell.args).compile()
-        assert c.cost_analysis().get("flops", 0) > 0
+        cost = c.cost_analysis()
+        if isinstance(cost, list):   # pinned JAX: one dict per device
+            cost = cost[0] if cost else {}
+        assert cost.get("flops", 0) > 0
         print("OK", arch, shape)
 print("ALL_OK")
 """
@@ -126,6 +129,7 @@ from repro.models.lm import build_model
 from repro.optim.adamw import AdamW, constant_schedule
 from repro.train.trainer import make_train_step
 from repro.distributed import sharding as shd
+from repro.distributed.compat import make_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 cfg = dataclasses.replace(get_config("mamba-110m").reduced(), dtype="float32")
@@ -141,8 +145,7 @@ params = model.init(jax.random.PRNGKey(0))
 state = {"params": params, "opt": opt.init(params)}
 ref_state, ref_metrics = jax.jit(step)(state, batch)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 pspec = shd.param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)),
                          mesh)
 ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
