@@ -1,14 +1,17 @@
 # CI entry points. `make verify` is the tier-1 gate (ROADMAP.md).
 PY := PYTHONPATH=src python
 
-# Scan-schedule perf gate files: OLD is the committed baseline; NEW is the
-# fresh run `bench-scan` writes (BENCH_SCAN_JSON env override in
-# benchmarks/run.py keeps the baseline untouched). To refresh the committed
-# baseline instead: `make bench-scan NEW=BENCH_scan.json`.
+# Perf gate files: OLD/SERVE_OLD are the committed baselines; NEW/SERVE_NEW
+# are what `bench-scan` / `bench-serve` write (env overrides in
+# benchmarks/run.py keep the baselines untouched). To refresh a committed
+# baseline instead: `make bench-scan NEW=BENCH_scan.json` /
+# `make bench-serve SERVE_NEW=BENCH_serve.json`.
 OLD ?= BENCH_scan.json
 NEW ?= BENCH_scan.new.json
+SERVE_OLD ?= BENCH_serve.json
+SERVE_NEW ?= BENCH_serve.new.json
 
-.PHONY: verify bench-scan bench-compare quickstart
+.PHONY: verify bench-scan bench-serve bench-compare quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -17,9 +20,15 @@ verify:
 bench-scan:
 	BENCH_SCAN_JSON=$(NEW) $(PY) -m benchmarks.run fig2
 
-# gate on the scan perf trajectory: exits nonzero on >10% regressions
+# regenerate the serving padded-vs-packed throughput rows into $(SERVE_NEW)
+bench-serve:
+	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve
+
+# gate on the perf trajectories: exits nonzero on >10% regressions
+# (serve compare is skipped if a side wasn't regenerated)
 bench-compare:
 	$(PY) benchmarks/compare.py $(OLD) $(NEW)
+	$(PY) benchmarks/compare.py $(SERVE_OLD) $(SERVE_NEW) --allow-missing
 
 quickstart:
 	$(PY) examples/quickstart.py

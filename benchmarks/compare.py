@@ -1,18 +1,22 @@
-"""Diff two BENCH_scan.json files and flag schedule regressions.
+"""Diff two benchmark JSON files (BENCH_scan.json / BENCH_serve.json) and
+flag regressions.
 
     PYTHONPATH=src python benchmarks/compare.py OLD.json NEW.json [--pct 10]
 
 Rows are joined on (op, shape, schedule). For every pair the us_per_call
 delta is printed; rows slower by more than ``--pct`` percent are flagged as
 REGRESSION and the exit code is nonzero (so `make bench-compare` can gate a
-PR on the scan-schedule perf trajectory). Rows present in only one file are
-listed as added/removed, never flagged — new schedules (e.g. the mamba2
-rows) must be able to land.
+PR on the scan-schedule AND serve-throughput perf trajectories). Rows
+present in only one file are listed as added/removed, never flagged — new
+schedules (e.g. the mamba2 rows) must be able to land. ``--allow-missing``
+turns an absent file into a no-op (exit 0) so one gate can cover benchmark
+files that a given run didn't regenerate.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -58,7 +62,14 @@ def main():
     ap.add_argument("new")
     ap.add_argument("--pct", type=float, default=10.0,
                     help="regression threshold in percent (default 10)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="exit 0 (no-op) if either file is absent")
     args = ap.parse_args()
+    if args.allow_missing and not (os.path.exists(args.old) and
+                                   os.path.exists(args.new)):
+        missing = [p for p in (args.old, args.new) if not os.path.exists(p)]
+        print(f"# skipping compare: missing {', '.join(missing)}")
+        return
     lines, regressions = compare(args.old, args.new, args.pct)
     print(f"# {args.old} -> {args.new} (threshold {args.pct:.0f}%)")
     for ln in lines:

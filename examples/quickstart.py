@@ -62,6 +62,24 @@ def main():
         state, metrics = step(state, batch)
         if i % 3 == 0:
             print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+    # 5. serving: the same packing trick on the inference path. The
+    #    ServeEngine packs queued prompts into ONE prefill forward, hands
+    #    each prompt's final recurrent state off to a decode slot
+    #    (model.prefill_packed -> model.scatter_into_cache), and refills
+    #    slots mid-flight as requests finish — continuous batching with a
+    #    bucket-bounded number of compiled prefill shapes.
+    #    (see examples/serve_packed.py and `python -m repro.launch.serve`)
+    from repro.launch.serve import ServeEngine
+    engine = ServeEngine(model, state["params"], num_slots=4, max_len=64,
+                         buckets=(32,), max_segments=2)
+    for s in seqs[:6]:
+        engine.submit(s[:20], max_new=8)
+    outs = engine.run()
+    print(f"served {len(outs)} requests "
+          f"({engine.stats.generated} tokens, "
+          f"{engine.stats.prefills} packed prefills, "
+          f"{len(engine.stats.buckets)} prefill shape(s) compiled)")
     print("done.")
 
 

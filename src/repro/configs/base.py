@@ -57,6 +57,11 @@ class ArchConfig:
                                       # single-matmul blocked schedule)
     ssm_heads: Optional[int] = None   # mamba2: #heads (default d_inner/hd)
     ssm_head_dim: Optional[int] = None  # mamba2: head dim dh (default 64)
+    ssm_norm: str = "none"            # mamba2 output gate: "none" (plain
+                                      # y·silu(z)) | "rms_gate" (RMSNorm the
+                                      # gated product before out_proj, with
+                                      # a learned (d_inner,) scale — the
+                                      # Mamba-2 `rmsnorm` variant)
     # hybrid / xlstm layer pattern: one entry per layer in the unit
     pattern: Tuple[str, ...] = ()     # e.g. ("rec","rec","attn"); () = homogeneous
     lru_width: Optional[int] = None   # hybrid recurrent width (default d_model)

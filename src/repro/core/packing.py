@@ -166,6 +166,25 @@ def unpack(batch_values: jnp.ndarray, packed: PackedBatch) -> List[np.ndarray]:
     return [np.concatenate(pieces[i], axis=0) for i in sorted(pieces)]
 
 
+def segment_ends(packed: PackedBatch, max_segments: int) -> np.ndarray:
+    """Last-token index of each packed segment, −1-padded to
+    (B, max_segments) — the ``ends`` input of ``model.prefill_packed``
+    (serving: one decode-cache handoff per entry)."""
+    if packed.seq_lens is None:
+        raise ValueError("PackedBatch lacks seq_lens bookkeeping")
+    B = packed.tokens.shape[0]
+    ends = np.full((B, max_segments), -1, np.int32)
+    for r, lens in enumerate(packed.seq_lens):
+        if len(lens) > max_segments:
+            raise ValueError(f"row {r} holds {len(lens)} segments "
+                             f"> max_segments={max_segments}")
+        off = 0
+        for s, n in enumerate(lens):
+            off += n
+            ends[r, s] = off - 1
+    return ends
+
+
 # ---------------------------------------------------------------------------
 # pack_with_split — paper §5 future work (beyond-paper feature)
 # ---------------------------------------------------------------------------

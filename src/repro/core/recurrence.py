@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import segmented_scan, scan_step
+from repro.core.scan import segmented_scan, scan_step, gather_state_ends
 
 
 # ---------------------------------------------------------------------------
@@ -36,11 +36,16 @@ RGLRU_C = 8.0
 def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
           a_param: jnp.ndarray, positions: Optional[jnp.ndarray] = None,
           h0: Optional[jnp.ndarray] = None, method: str = "chunked",
-          chunk: int = 256, compute_dtype=None
+          chunk: int = 256, compute_dtype=None,
+          collect_ends: Optional[jnp.ndarray] = None
           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x, r_gate, i_gate: (B, L, D) (gates already sigmoided); a_param: (D,).
 
-    Returns (h (B, L, D), h_last (B, D))."""
+    collect_ends: (B, S) int32 segment-end indices (−1 = absent) — the
+    RG-LRU state trajectory IS its output, so the per-segment serving
+    handoff is a free gather (in the f32 compute dtype, pre-cast).
+
+    Returns (h (B, L, D), h_last (B, D)) [+ h_ends (B, S, D) appended]."""
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
         jnp.float32
     log_a = -RGLRU_C * jax.nn.softplus(a_param.astype(cdt)) * \
@@ -55,6 +60,8 @@ def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
     reset = (positions == 0) if positions is not None else None
     h, h_last = segmented_scan(a, b, reset=reset, h0=h0,
                                method=method, chunk=chunk)
+    if collect_ends is not None:
+        return h.astype(x.dtype), h_last, gather_state_ends(h, collect_ends)
     return h.astype(x.dtype), h_last
 
 

@@ -250,3 +250,21 @@ def scan_step(h: jnp.ndarray, a_t: jnp.ndarray, b_t: jnp.ndarray,
     if reset_t is not None:
         a_t = jnp.where(_bcast_reset(reset_t, a_t), jnp.zeros_like(a_t), a_t)
     return a_t * h + b_t
+
+
+def gather_state_ends(h_traj: jnp.ndarray, ends: jnp.ndarray) -> jnp.ndarray:
+    """Sample a (B, L, *S) state trajectory at per-segment end indices.
+
+    Because segment resets stop state from crossing boundaries, the state at
+    a segment's last token IS that segment's final state — this is the
+    packed-prefill serving handoff. ``ends``: (B, S) int32, −1 = absent
+    segment (→ zeros). Returns (B, S, *S)."""
+    Bsz = h_traj.shape[0]
+    S = ends.shape[1]
+    tail = h_traj.shape[2:]
+    idx = jnp.clip(ends, 0, h_traj.shape[1] - 1)
+    idx = idx.reshape((Bsz, S) + (1,) * len(tail))
+    g = jnp.take_along_axis(h_traj, jnp.broadcast_to(idx, (Bsz, S) + tail),
+                            axis=1)
+    ok = (ends >= 0).reshape((Bsz, S) + (1,) * len(tail))
+    return jnp.where(ok, g, 0)

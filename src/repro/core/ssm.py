@@ -31,6 +31,15 @@ forgetting that selective SSMs already support (paper eq. 2a remark); in
 parallel form the reset composes with the associative combine (see
 core/scan.py docstring).
 
+Serving handoff (``collect_ends``): because resets make the state at index
+``e`` depend only on tokens of ``e``'s own segment, the final state of EVERY
+packed segment is just the state trajectory sampled at that segment's last
+token. ``collect_ends (B, S)`` asks the evaluators to also return those
+samples ``h_ends (B, S, …)`` (−1 entries = absent segment → zeros). The
+blocked schedules gather them from the in-chunk state slice they already
+compute — one O(B·S·state) gather per chunk, no extra scan passes and still
+no (B, L, …, N) materialization.
+
 This module is the default (dry-run / roofline) path; the Pallas TPU kernels
 live in kernels/selective_scan.py and match this to numerical tolerance
 (``schedule='blocked'``/``'step'`` for per-channel, ``'blocked_heads'`` for
@@ -43,7 +52,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import segmented_scan, scan_step
+from repro.core.scan import segmented_scan, scan_step, gather_state_ends
 from repro.core.scan import _combine as _scan_combine
 
 _MATMUL_CHUNK_CAP = 32    # blocked/matmul intra: bounds the T²·D·N operand
@@ -59,7 +68,8 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None,
                    method: str = "chunked", chunk: int = 256,
                    return_state: bool = False,
-                   compute_dtype=None, intra: Optional[str] = None):
+                   compute_dtype=None, intra: Optional[str] = None,
+                   collect_ends: Optional[jnp.ndarray] = None):
     """Mamba-1 surface: u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
 
     The degenerate head-structured case H = D, dh = 1 — dispatches through
@@ -70,17 +80,23 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
     compute_dtype: recurrence dtype (default f32; bf16 halves scan traffic).
     intra: method='blocked' only — in-chunk evaluator ('matmul' | 'assoc';
     default picks 'matmul' on TPU, 'assoc' elsewhere — see _blocked_ssm).
-    Returns y (B, L, D) [, h_last (B, D, N)].
+    collect_ends: (B, S) int32 segment-end indices (−1 = absent) — per-
+    segment serving handoff (module docstring).
+    Returns y (B, L, D) [, h_last (B, D, N)] [, h_ends (B, S, D, N)].
     """
     out = selective_scan_heads(
         u[..., None], delta, A, B, C, D, positions=positions,
         h0=None if h0 is None else h0[:, :, None, :],
         method=method, chunk=chunk, return_state=return_state,
-        compute_dtype=compute_dtype, intra=intra)
-    if return_state:
-        y, h_last = out
-        return y[..., 0], h_last[:, :, 0, :]
-    return out[..., 0]
+        compute_dtype=compute_dtype, intra=intra,
+        collect_ends=collect_ends)
+    if not (return_state or collect_ends is not None):
+        return out[..., 0]
+    out = list(out)
+    out[0] = out[0][..., 0]                          # y: drop dh = 1
+    for i in range(1, len(out)):
+        out[i] = out[i][..., 0, :]                   # states: (…, dh=1, N)
+    return tuple(out)
 
 
 def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
@@ -90,12 +106,14 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                          h0: Optional[jnp.ndarray] = None,
                          method: str = "blocked", chunk: int = 64,
                          return_state: bool = False,
-                         compute_dtype=None, intra: Optional[str] = None):
+                         compute_dtype=None, intra: Optional[str] = None,
+                         collect_ends: Optional[jnp.ndarray] = None):
     """Unified head-structured state-space interface (module docstring).
 
     u: (B, L, H, dh); delta: (B, L, H); B, C: (B, L, N) (shared across the
     heads of a group); D: (H,) skip; positions: (B, L) int32 (reset where
-    == 0); h0: (B, H, dh, N).
+    == 0); h0: (B, H, dh, N); collect_ends: (B, S) int32 segment-end
+    indices (−1 = absent) for the per-segment serving handoff.
 
     ``A`` selects the variant:
       * (H,)   — Mamba-2/SSD scalar per-head decay. ``method``:
@@ -106,7 +124,8 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                  | 'fused_seq' | 'sequential' | 'associative', plus
                  ``intra`` for 'blocked').
 
-    Returns y (B, L, H, dh) [, h_last (B, H, dh, N)].
+    Returns y (B, L, H, dh) [, h_last (B, H, dh, N)]
+    [, h_ends (B, S, H, dh, N)].
     """
     Bsz, L, H, P = u.shape
     if A.ndim == 2:
@@ -115,29 +134,45 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
         if P != 1:
             raise ValueError(
                 f"per-channel decay A{A.shape} requires dh == 1, got {P}")
-        out = _selective_scan_channels(
+        y, h_last, h_ends = _selective_scan_channels(
             u[..., 0], delta, A, B, C, D, positions,
             None if h0 is None else h0[:, :, 0, :],
-            method, chunk, return_state, compute_dtype, intra)
-        if return_state:
-            y, h_last = out
-            return y[..., None], h_last[:, :, None, :]
-        return out[..., None]
+            method, chunk, compute_dtype, intra, collect_ends)
+        return _pack_scan_out(
+            y[..., None], h_last[:, :, None, :],
+            None if h_ends is None else h_ends[:, :, :, None, :],
+            return_state, collect_ends)
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
         jnp.promote_types(u.dtype, jnp.float32)
     if method == "blocked":
-        return _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
-                                  return_state, cdt, chunk)
-    if method == "sequential":
-        return _seq_scan_heads(u, delta, A, B, C, D, positions, h0,
-                               return_state, cdt)
-    raise ValueError(f"unknown scalar-decay scan method {method!r}")
+        y, h_last, h_ends = _blocked_ssm_heads(
+            u, delta, A, B, C, D, positions, h0, cdt, chunk, collect_ends)
+    elif method == "sequential":
+        y, h_last, h_ends = _seq_scan_heads(
+            u, delta, A, B, C, D, positions, h0, cdt, collect_ends)
+    else:
+        raise ValueError(f"unknown scalar-decay scan method {method!r}")
+    return _pack_scan_out(y, h_last, h_ends, return_state, collect_ends)
+
+
+def _pack_scan_out(y, h_last, h_ends, return_state, collect_ends):
+    out = (y,)
+    if return_state:
+        out += (h_last,)
+    if collect_ends is not None:
+        out += (h_ends,)
+    return out[0] if len(out) == 1 else out
+
+
+_gather_ends = gather_state_ends
 
 
 def _selective_scan_channels(u, delta, A, B, C, D, positions, h0,
-                             method, chunk, return_state, compute_dtype,
-                             intra):
-    """Per-channel (Mamba-1) evaluator family. u,delta: (B,L,D); A: (D,N)."""
+                             method, chunk, compute_dtype, intra,
+                             collect_ends=None):
+    """Per-channel (Mamba-1) evaluator family. u,delta: (B,L,D); A: (D,N).
+
+    Returns (y, h_last, h_ends|None) — packed by the dispatcher."""
     Bsz, L, Dm = u.shape
     N = A.shape[-1]
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None else \
@@ -149,13 +184,13 @@ def _selective_scan_channels(u, delta, A, B, C, D, positions, h0,
         # + O(L·D) outputs. (The Pallas kernel is the real TPU answer; this
         # is its closest pure-XLA analogue.)
         return _fused_seq_scan(u, delta, A, B, C, D, positions, h0,
-                               return_state, cdt)
+                               cdt, collect_ends)
     if method == "blocked":
         # SSD-style block-parallel schedule: also never materializes
         # (B, L, D, N), and replaces the elementwise recurrence with
         # matmul-shaped contractions (see core/scan.py docstring).
         return _blocked_ssm(u, delta, A, B, C, D, positions, h0,
-                            return_state, cdt, chunk, intra)
+                            cdt, chunk, intra, collect_ends)
     delta_f = delta.astype(cdt)
     # decay a = exp(Δ·A): (B, L, D, N)
     a = jnp.exp(delta_f[..., None] * A.astype(cdt))
@@ -168,13 +203,13 @@ def _selective_scan_channels(u, delta, A, B, C, D, positions, h0,
     if D is not None:
         y = y + D.astype(cdt) * u.astype(cdt)
     y = y.astype(u.dtype)
-    if return_state:
-        return y, h_last
-    return y
+    h_ends = _gather_ends(h, collect_ends) if collect_ends is not None \
+        else None
+    return y, h_last, h_ends
 
 
-def _blocked_ssm(u, delta, A, B, C, D, positions, h0, return_state, cdt,
-                 chunk, intra=None):
+def _blocked_ssm(u, delta, A, B, C, D, positions, h0, cdt,
+                 chunk, intra=None, collect_ends=None):
     """Block-parallel (SSD-style) selective scan — the fused hot path.
 
     The schedule: partition L into chunks of length T, evaluate the whole
@@ -242,10 +277,13 @@ def _blocked_ssm(u, delta, A, B, C, D, positions, h0, return_state, cdt,
         h0 = jnp.zeros((Bsz, Dm, N), cdt)
     h0 = h0.astype(cdt)
     tril = jnp.tril(jnp.ones((T, T), bool))
+    collect = collect_ends is not None
+    nseg = collect_ends.shape[1] if collect else 0
 
     @jax.checkpoint
-    def chunk_step(h_in, xs):
-        uc, dc, Bc, Cc, rc = xs          # (B,T,Dm) ×2, (B,T,N) ×2, (B,T)
+    def chunk_step(carry, xs):
+        h_in, acc = carry
+        uc, dc, Bc, Cc, rc, ci = xs      # (B,T,Dm) ×2, (B,T,N) ×2, (B,T), ()
         d32 = dc.astype(cdt)
         bterm = (d32 * uc.astype(cdt))[..., None] * \
             Bc.astype(cdt)[:, :, None, :]               # (B,T,Dm,N)
@@ -267,22 +305,33 @@ def _blocked_ssm(u, delta, A, B, C, D, positions, h0, return_state, cdt,
                                                   axis=1)
             h = Acum * h_in[:, None] + Bcum             # Acum: carry decay,
             #   zeroed past an in-chunk reset since a→0 poisons its products
+        if collect:
+            # serving handoff: sample the in-chunk states (already live in
+            # both intra modes) at the segment ends that fall in this chunk
+            local = collect_ends - ci * T               # (B, S)
+            ok = (local >= 0) & (local < T)
+            lcl = jnp.clip(local, 0, T - 1)[..., None, None]
+            sel = jnp.take_along_axis(
+                h, jnp.broadcast_to(lcl, (Bsz, nseg, Dm, N)), axis=1)
+            acc = acc + jnp.where(ok[..., None, None], sel, 0)
         y = jnp.einsum("bidn,bin->bid", h, Cc.astype(cdt))
-        return h[:, -1], y
+        return (h[:, -1], acc), y
 
     xs = tuple(jnp.moveaxis(x.reshape((Bsz, nc, T) + x.shape[2:]), 1, 0)
                for x in (u, delta, B, C, reset))
-    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    acc0 = jnp.zeros((Bsz, nseg, Dm, N), cdt) if collect else \
+        jnp.zeros((), cdt)
+    (h_last, h_ends), ys = jax.lax.scan(chunk_step, (h0, acc0),
+                                        xs + (jnp.arange(nc),))
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Lp, Dm)[:, :L]
     if D is not None:
         y = y + D.astype(cdt) * u[:, :L].astype(cdt)
     y = y.astype(u.dtype)
-    if return_state:
-        return y, h_last
-    return y
+    return y, h_last, (h_ends if collect else None)
 
 
-def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, return_state, cdt):
+def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, cdt,
+                    collect_ends=None):
     Bsz, L, Dm = u.shape
     N = A.shape[-1]
     A32 = A.astype(cdt)
@@ -290,36 +339,42 @@ def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, return_state, cdt):
         jnp.zeros((Bsz, L), bool)
     if h0 is None:
         h0 = jnp.zeros((Bsz, Dm, N), cdt)
+    collect = collect_ends is not None
+    nseg = collect_ends.shape[1] if collect else 0
 
-    def step(h, xs):
-        u_t, d_t, B_t, C_t, r_t = xs
+    def step(carry, xs):
+        h, acc = carry
+        u_t, d_t, B_t, C_t, r_t, t = xs
         d32 = d_t.astype(cdt)
         a_t = jnp.exp(d32[..., None] * A32)               # (B, Dm, N)
         a_t = jnp.where(r_t[:, None, None], 0.0, a_t)
         h = a_t * h + (d32 * u_t.astype(cdt))[..., None] * \
             B_t.astype(cdt)[:, None, :]
+        if collect:
+            ok = (collect_ends == t)[..., None, None]     # (B, S, 1, 1)
+            acc = acc + jnp.where(ok, h[:, None], 0)
         y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(cdt))
-        return h, y_t
+        return (h, acc), y_t
 
     xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
           jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0),
-          jnp.moveaxis(reset, 1, 0))
-    h_last, ys = jax.lax.scan(step, h0, xs)
+          jnp.moveaxis(reset, 1, 0), jnp.arange(L))
+    acc0 = jnp.zeros((Bsz, nseg, Dm, N), cdt) if collect else \
+        jnp.zeros((), cdt)
+    (h_last, h_ends), ys = jax.lax.scan(step, (h0, acc0), xs)
     y = jnp.moveaxis(ys, 0, 1)
     if D is not None:
         y = y + D.astype(cdt) * u.astype(cdt)
     y = y.astype(u.dtype)
-    if return_state:
-        return y, h_last
-    return y
+    return y, h_last, (h_ends if collect else None)
 
 
 # ---------------------------------------------------------------------------
 # head-structured (scalar per-head decay) evaluators — Mamba-2 / SSD
 # ---------------------------------------------------------------------------
 
-def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0, return_state,
-                       cdt, chunk):
+def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
+                       cdt, chunk, collect_ends=None):
     """Block-parallel schedule, per-head scalar decay — the SSD hot path.
 
     The same schedule as ``_blocked_ssm`` but the decay depends only on
@@ -358,10 +413,13 @@ def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0, return_state,
         h0 = jnp.zeros((Bsz, H, P, N), cdt)
     h0 = h0.astype(cdt)
     tril = jnp.tril(jnp.ones((T, T), bool))
+    collect = collect_ends is not None
+    nseg = collect_ends.shape[1] if collect else 0
 
     @jax.checkpoint
-    def chunk_step(h_in, xs):
-        uc, dc, Bc, Cc, rc = xs     # (B,T,H,P), (B,T,H), (B,T,N)×2, (B,T)
+    def chunk_step(carry, xs):
+        h_in, acc = carry
+        uc, dc, Bc, Cc, rc, ci = xs  # (B,T,H,P), (B,T,H), (B,T,N)×2, (B,T)
         d32 = dc.astype(cdt)
         la = d32 * A32                                   # (B,T,H) log decay
         s = jnp.cumsum(la, axis=1)
@@ -376,22 +434,32 @@ def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0, return_state,
         h = jnp.einsum("bijh,bjhpn->bihpn", dec, bterm)
         cin = jnp.where((rid == 0)[..., None], jnp.exp(s), 0.0)  # (B,T,H)
         h = h + cin[..., None, None] * h_in[:, None]
+        if collect:
+            # serving handoff: sample in-chunk states at segment ends
+            local = collect_ends - ci * T                # (B, S)
+            ok = (local >= 0) & (local < T)
+            lcl = jnp.clip(local, 0, T - 1)[..., None, None, None]
+            sel = jnp.take_along_axis(
+                h, jnp.broadcast_to(lcl, (Bsz, nseg, H, P, N)), axis=1)
+            acc = acc + jnp.where(ok[..., None, None, None], sel, 0)
         y = jnp.einsum("bihpn,bin->bihp", h, Cc.astype(cdt))
-        return h[:, -1], y
+        return (h[:, -1], acc), y
 
     xs = tuple(jnp.moveaxis(x.reshape((Bsz, nc, T) + x.shape[2:]), 1, 0)
                for x in (u, delta, B, C, reset))
-    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    acc0 = jnp.zeros((Bsz, nseg, H, P, N), cdt) if collect else \
+        jnp.zeros((), cdt)
+    (h_last, h_ends), ys = jax.lax.scan(chunk_step, (h0, acc0),
+                                        xs + (jnp.arange(nc),))
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Lp, H, P)[:, :L]
     if D is not None:
         y = y + (D.astype(cdt)[:, None] * u[:, :L].astype(cdt))
     y = y.astype(u.dtype)
-    if return_state:
-        return y, h_last
-    return y
+    return y, h_last, (h_ends if collect else None)
 
 
-def _seq_scan_heads(u, delta, A, B, C, D, positions, h0, return_state, cdt):
+def _seq_scan_heads(u, delta, A, B, C, D, positions, h0, cdt,
+                    collect_ends=None):
     """Sequential per-head reference (y = C·h fused, scalar decay)."""
     Bsz, L, H, P = u.shape
     N = B.shape[-1]
@@ -401,29 +469,35 @@ def _seq_scan_heads(u, delta, A, B, C, D, positions, h0, return_state, cdt):
     if h0 is None:
         h0 = jnp.zeros((Bsz, H, P, N), cdt)
     h0 = h0.astype(cdt)
+    collect = collect_ends is not None
+    nseg = collect_ends.shape[1] if collect else 0
 
-    def step(h, xs):
-        u_t, d_t, B_t, C_t, r_t = xs       # (B,H,P), (B,H), (B,N)×2, (B,)
+    def step(carry, xs):
+        h, acc = carry
+        u_t, d_t, B_t, C_t, r_t, t = xs    # (B,H,P), (B,H), (B,N)×2, (B,)
         d32 = d_t.astype(cdt)
         a_t = jnp.exp(d32 * A32)                          # (B, H)
         a_t = jnp.where(r_t[:, None], 0.0, a_t)
         b_t = (d32[..., None] * u_t.astype(cdt))[..., None] * \
             B_t.astype(cdt)[:, None, None, :]             # (B, H, P, N)
         h = a_t[..., None, None] * h + b_t
+        if collect:
+            ok = (collect_ends == t)[..., None, None, None]
+            acc = acc + jnp.where(ok, h[:, None], 0)
         y_t = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(cdt))
-        return h, y_t
+        return (h, acc), y_t
 
     xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(delta, 1, 0),
           jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0),
-          jnp.moveaxis(reset, 1, 0))
-    h_last, ys = jax.lax.scan(step, h0, xs)
+          jnp.moveaxis(reset, 1, 0), jnp.arange(L))
+    acc0 = jnp.zeros((Bsz, nseg, H, P, N), cdt) if collect else \
+        jnp.zeros((), cdt)
+    (h_last, h_ends), ys = jax.lax.scan(step, (h0, acc0), xs)
     y = jnp.moveaxis(ys, 0, 1)
     if D is not None:
         y = y + (D.astype(cdt)[:, None] * u.astype(cdt))
     y = y.astype(u.dtype)
-    if return_state:
-        return y, h_last
-    return y
+    return y, h_last, (h_ends if collect else None)
 
 
 def selective_scan_heads_step(h: jnp.ndarray, u_t: jnp.ndarray,

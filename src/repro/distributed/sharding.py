@@ -101,7 +101,8 @@ def _param_rule(name: str, shape: Tuple[int, ...], mesh: Mesh,
                     _fit(mesh, shape[2], m))
     elif name in ("conv_w",):                 # (W, channels)
         body = (None, _fit(mesh, shape[-1], m))
-    elif name in ("conv_b", "dt_b", "D", "a_param"):   # (channels,)
+    elif name in ("conv_b", "dt_b", "D", "a_param",
+                  "ssm_norm_w"):                       # (channels,)
         body = (_fit(mesh, shape[-1], m),)
     elif name == "A_log":
         if d == 1:                            # mamba2: (H,) per-head decay
@@ -162,6 +163,39 @@ def batch_pspecs(batch_shape: Dict[str, Any], mesh: Mesh):
     return jax.tree.map(one, batch_shape)
 
 
+def _cache_leaf_spec(name, core, mesh: Mesh):
+    """Slot-major cache-leaf body spec: (B, …) → axis tuple (no P)."""
+    if name in ("k", "v") and len(core) == 4:      # (B, S, Hkv, hd)
+        return (batch_axis(mesh, core[0]), _fit(mesh, core[1], "model"),
+                None, None)
+    if name == "conv" and len(core) == 3:          # (B, W-1, ch)
+        return (batch_axis(mesh, core[0]), None,
+                _fit(mesh, core[2], "model"))
+    if name == "ssm" and len(core) == 3:           # (B, d_inner, N)
+        return (batch_axis(mesh, core[0]),
+                _fit(mesh, core[1], "model"), None)
+    if name == "ssm" and len(core) == 4:     # (B, H, dh, N) head-struct.
+        return (batch_axis(mesh, core[0]),
+                _fit(mesh, core[1], "model"), None, None)
+    if name == "h" and len(core) == 2:             # (B, lru)
+        return (batch_axis(mesh, core[0]), _fit(mesh, core[1], "model"))
+    return (batch_axis(mesh, core[0]),) + (None,) * (len(core) - 1)
+
+
+_CACHE_LEAF_NAMES = ("k", "v", "conv", "ssm", "h", "C", "n", "m", "c")
+
+
+def _cache_path_info(path):
+    name, stacked = None, False
+    for pth in path:
+        k = getattr(pth, "key", None)
+        if k == "units":
+            stacked = True
+        if k in _CACHE_LEAF_NAMES:
+            name = k
+    return name, stacked
+
+
 def cache_pspecs(cache_shape, mesh: Mesh, batch_size: int):
     """Decode caches: batch over DP axes (when divisible), attention K/V
     sequence dim over 'model' (decode sequence parallelism); recurrent
@@ -169,34 +203,30 @@ def cache_pspecs(cache_shape, mesh: Mesh, batch_size: int):
     del batch_size
 
     def one(path, leaf):
-        name = None
-        stacked = False
-        for pth in path:
-            k = getattr(pth, "key", None)
-            if k == "units":
-                stacked = True
-            if k in ("k", "v", "conv", "ssm", "h", "C", "n", "m", "c"):
-                name = k
+        name, stacked = _cache_path_info(path)
         shp = leaf.shape
         # stacked over units: leading n_units dim
         lead = (None,) if stacked else ()
         core = shp[1:] if stacked else shp
-        if name in ("k", "v") and len(core) == 4:      # (B, S, Hkv, hd)
-            spec = (batch_axis(mesh, core[0]), _fit(mesh, core[1], "model"),
-                    None, None)
-        elif name == "conv" and len(core) == 3:        # (B, W-1, ch)
-            spec = (batch_axis(mesh, core[0]), None,
-                    _fit(mesh, core[2], "model"))
-        elif name == "ssm" and len(core) == 3:         # (B, d_inner, N)
-            spec = (batch_axis(mesh, core[0]),
-                    _fit(mesh, core[1], "model"), None)
-        elif name == "ssm" and len(core) == 4:   # (B, H, dh, N) head-struct.
-            spec = (batch_axis(mesh, core[0]),
-                    _fit(mesh, core[1], "model"), None, None)
-        elif name == "h" and len(core) == 2:           # (B, lru)
-            spec = (batch_axis(mesh, core[0]), _fit(mesh, core[1], "model"))
-        else:
-            spec = (batch_axis(mesh, core[0]),) + (None,) * (len(core) - 1)
-        return P(*(lead + spec))
+        return P(*(lead + _cache_leaf_spec(name, core, mesh)))
 
     return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def packed_state_pspecs(state_shape, mesh: Mesh):
+    """PartitionSpecs for the packed-prefill handoff states
+    (``model.prefill_packed``): same layout as the decode cache but every
+    leaf carries a (B, S) leading pair — prefill rows shard like cache
+    batch, the per-row segment axis is replicated (segments are scattered
+    to arbitrary slots right after harvest, so sharding it would only buy
+    an all-to-all). Unit-stacked leaves keep their leading None."""
+    def one(path, leaf):
+        name, stacked = _cache_path_info(path)
+        shp = leaf.shape
+        lead = (None,) if stacked else ()
+        core = shp[1:] if stacked else shp          # (B, S, …)
+        body = _cache_leaf_spec(name, (core[0],) + core[2:], mesh)
+        spec = (body[0], None) + body[1:]           # reinsert segment axis
+        return P(*(lead + spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

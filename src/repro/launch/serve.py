@@ -1,42 +1,272 @@
-"""Serving launcher: batched greedy decoding with per-layer caches, request
-slots with reset-based reuse (no cache reallocation between requests), and
-continuous-batching-style slot refill.
+"""Continuous-batching serve engine: packed prefill → per-slot decode.
+
+PackMamba's packing is applied to the SERVING path: instead of left-padding
+every prompt to the batch max and decoding in synchronous waves (the padded
+baseline the paper shows wasting 2-3×), prompts are packed back-to-back into
+shape-bucketed prefill buffers (core/packing.py policies), ONE forward
+harvests every segment's final (conv-tail, recurrent/KV) state at its
+segment end (``model.prefill_packed``), and the states are scattered into
+per-request decode slots (``model.scatter_into_cache``). Decode then runs
+one fused step per token over all slots; a slot that hits EOS or its token
+budget is released and refilled from the admission queue *mid-flight* —
+the decode batch stays full without draining a wave.
+
+Compile discipline: decode is one fixed shape; prefill shapes are bounded
+by the bucket list (rows × bucket-capacity), NOT by the number of distinct
+prompt lengths — ``stats.buckets`` counts the shapes actually compiled.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba-110m --tiny \
-      --batch 4 --new-tokens 16
+      --slots 8 --requests 24 --new-tokens 16
 """
 import argparse
-import functools
+import collections
 import dataclasses
+import functools
 import time
+from typing import Dict, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.core import packing
 from repro.models.lm import build_model
 
 
-class ServeEngine:
-    """Slot-based batch decoder: B slots; prompts enter through a single
-    O(L) prefill forward that hands off every layer's cache (model.prefill);
-    finished slots are reset in place (PackMamba's state-isolation rule on
-    the decode path) and refilled from the pending queue."""
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray         # 1-D int32 prompt
+    max_new: int
+    eos: int = -1              # -1 = never matches (greedy runs to budget)
 
-    def __init__(self, model, params, batch_slots: int, max_len: int):
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0              # packed prefill rounds issued
+    prefill_tokens: int = 0        # real prompt tokens prefilled
+    decode_steps: int = 0          # fused all-slot decode steps
+    generated: int = 0             # tokens handed back to requests
+    midflight_refills: int = 0     # prefills issued while slots were decoding
+    buckets: Optional[set] = None  # distinct (rows, L) prefill shapes used
+
+    def __post_init__(self):
+        if self.buckets is None:
+            self.buckets = set()
+
+
+class ServeEngine:
+    """Slot-based continuous batching with a packed-prefill admission path.
+
+    * ``submit()`` enqueues requests; ``run()`` drives admission + decode
+      until everything drains (``step()`` exposes one iteration for custom
+      loops).
+    * Admission packs queued prompts (FIFO, ``policy``) into a
+      (prefill_rows, bucket) buffer — the smallest bucket that fits the
+      head-of-line prompt — capped by free slots and ``max_segments`` per
+      row, then scatters the harvested per-segment states into the free
+      slots. Requests never wait for a wave boundary.
+    * The decode batch is one jitted ``decode_step`` over ALL slots; idle
+      slots ride along (their state is fully overwritten at refill, so the
+      garbage they accumulate is harmless and the shape never changes).
+    * Per-slot termination: a slot is released the moment its request emits
+      ``eos`` or exhausts ``max_new`` — the EOS token itself is kept.
+    """
+
+    def __init__(self, model, params, num_slots: int, max_len: int, *,
+                 prefill_rows: int = 2, buckets=(64, 128, 256),
+                 max_segments: int = 4, policy: str = "first_fit",
+                 eos: int = -1, refill_threshold: Optional[int] = None):
         self.model = model
         self.params = params
-        self.B = batch_slots
+        self.num_slots = num_slots
         self.max_len = max_len
-        self.cache = model.init_cache(batch_slots, max_len)
-        self.step = jax.jit(model.decode_step)
-        self.prefill = jax.jit(functools.partial(model.prefill,
-                                                 max_len=max_len))
+        self.prefill_rows = prefill_rows
+        self.buckets = tuple(sorted(buckets))
+        self.max_segments = max_segments
+        self.policy = policy
+        self.eos = eos
+        # A decode step costs the same whether a slot is active or idle
+        # (fixed batch), so single-slot refills waste a whole prefill
+        # forward to activate one slot. Batch admissions: only refill once
+        # this many slots are free (or nothing is decoding at all).
+        self.refill_threshold = max(1, num_slots // 2) \
+            if refill_threshold is None else refill_threshold
 
-    def decode_batch(self, prompts, max_new: int, eos: int = -1):
-        """prompts: list of ≤B int32 arrays. Returns list of outputs."""
-        B = self.B
+        self.cache = model.init_cache(num_slots, max_len)
+        self.cache_len = jnp.zeros((num_slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((num_slots, 1), jnp.int32)
+        self._step = jax.jit(model.decode_step)
+        self._scatter = jax.jit(model.scatter_into_cache)
+        self._prefill = jax.jit(
+            functools.partial(model.prefill_packed, max_len=max_len))
+        self._wave_prefill = jax.jit(
+            functools.partial(model.prefill, max_len=max_len))
+
+        self.queue: collections.deque = collections.deque()
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slot_remaining = [0] * num_slots
+        self.outputs: Dict[int, List[int]] = {}
+        self.stats = EngineStats()
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(self, tokens, max_new: int, eos: Optional[int] = None) -> int:
+        tokens = np.asarray(tokens, np.int32)
+        if len(tokens) == 0:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(tokens) > self.buckets[-1]:
+            raise ValueError(f"prompt length {len(tokens)} exceeds largest "
+                             f"prefill bucket {self.buckets[-1]}")
+        if len(tokens) + max_new > self.max_len:
+            raise ValueError(f"prompt {len(tokens)} + max_new {max_new} "
+                             f"exceeds slot capacity {self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, tokens, max_new,
+                                  self.eos if eos is None else eos))
+        self.outputs[rid] = []
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _finish_token(self, slot: int, tok: int):
+        """Record one generated token; release the slot on EOS / budget."""
+        req = self.slot_req[slot]
+        self.outputs[req.rid].append(tok)
+        self.stats.generated += 1
+        self.slot_remaining[slot] -= 1
+        if tok == req.eos or self.slot_remaining[slot] <= 0:
+            self.slot_req[slot] = None
+
+    def _try_refill(self) -> bool:
+        """Admit queued prompts into free slots via one packed prefill.
+
+        Bucket choice is head-of-line: the smallest bucket holding the
+        oldest prompt; younger prompts join only if they fit the same
+        bucket (FIFO within a round, no starvation across rounds)."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return False
+        if len(free) < self.refill_threshold and self._active_slots():
+            return False
+        head = self.queue[0]
+        L = min(b for b in self.buckets if b >= len(head.tokens))
+        admitted: List[Request] = []
+        lens: List[int] = []
+        for req in list(self.queue):
+            if len(req.tokens) > L or len(admitted) == len(free):
+                break
+            plan = packing.plan_packing(lens + [len(req.tokens)], L,
+                                        self.policy)
+            if len(plan) > self.prefill_rows or \
+                    any(len(row) > self.max_segments for row in plan):
+                break
+            admitted.append(req)
+            lens.append(len(req.tokens))
+        if not admitted:
+            return False
+        if self._active_slots():
+            self.stats.midflight_refills += 1
+        for _ in admitted:          # admitted is always a queue prefix
+            self.queue.popleft()
+        pb = packing.pack([r.tokens for r in admitted], L,
+                          policy=self.policy, num_rows=self.prefill_rows)
+        ends = packing.segment_ends(pb, self.max_segments)
+        batch = {"tokens": pb.tokens, "positions": pb.positions,
+                 "segment_ids": pb.segment_ids}
+        logits, states, seg_lens = self._prefill(self.params, batch,
+                                                 ends=jnp.asarray(ends))
+        # (row, seg) → admitted request → slot; fixed-size scatter with the
+        # num_slots sentinel dropping unused entries (one compile per bucket)
+        K = self.prefill_rows * self.max_segments
+        src = np.zeros(K, np.int32)
+        dst = np.full(K, self.num_slots, np.int32)
+        slot_of = {}
+        for r, ids in enumerate(pb.seq_ids):
+            for s, qi in enumerate(ids):
+                slot = free[qi]
+                k = len(slot_of)
+                src[k] = r * self.max_segments + s
+                dst[k] = slot
+                slot_of[qi] = (slot, r, s)
+        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+        self.cache = self._scatter(self.cache, states, src_j, dst_j)
+        flat_lens = seg_lens.reshape(-1)
+        flat_tok = jnp.argmax(logits, -1).reshape(-1).astype(jnp.int32)
+        self.cache_len = self.cache_len.at[dst_j].set(
+            flat_lens[src_j], mode="drop")
+        self.cur_tok = self.cur_tok.at[dst_j].set(
+            flat_tok[src_j][:, None], mode="drop")
+        # host bookkeeping + the prefill's own greedy token
+        first = np.asarray(flat_tok)
+        for qi, req in enumerate(admitted):
+            slot, r, s = slot_of[qi]
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new
+            self._finish_token(slot, int(first[r * self.max_segments + s]))
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += sum(lens)
+        self.stats.buckets.add((self.prefill_rows, L))
+        return True
+
+    # --------------------------------------------------------------- decode
+    def _decode_step(self):
+        """One fused greedy step over every slot; per-slot termination."""
+        active = self._active_slots()
+        if not active:
+            return
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self.cur_tok, self.cache_len, None)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)       # (num_slots,)
+        act = np.zeros(self.num_slots, bool)
+        act[active] = True
+        self.cache_len = self.cache_len + jnp.asarray(act, jnp.int32)
+        self.cur_tok = nxt[:, None]
+        self.stats.decode_steps += 1
+        toks = np.asarray(nxt)
+        for i in active:
+            self._finish_token(i, int(toks[i]))
+
+    # ----------------------------------------------------------------- loop
+    def step(self) -> bool:
+        """One engine iteration: refill free slots, then one decode step.
+        Returns True while work remains."""
+        self._try_refill()
+        self._decode_step()
+        return bool(self.queue or self._active_slots())
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive until the queue and all slots drain; returns rid → tokens."""
+        while self.step():
+            pass
+        return self.outputs
+
+    # ------------------------------------------------- padded-wave baseline
+    def decode_batch(self, prompts, max_new, eos: int = -1):
+        """Padded-wave BASELINE (the paper's padding regime on the serving
+        path): ≤num_slots prompts left-padded to the batch max, one prefill,
+        synchronous decode. Kept for benchmarking against the continuous
+        path. ``max_new`` is an int or a per-prompt list; slots stop
+        accumulating tokens at ``eos`` or their budget (the EOS token itself
+        is kept) — but the WAVE only ends when every row is done, which is
+        exactly the drain cost continuous batching removes."""
+        B = self.num_slots
+        if len(prompts) > B:
+            raise ValueError(f"{len(prompts)} prompts > {B} slots")
+        if self._active_slots() or self.queue:
+            raise RuntimeError("decode_batch would clobber the live slot "
+                               "cache; drain the continuous engine first "
+                               "(or use a separate ServeEngine)")
+        budgets = [max_new] * len(prompts) if isinstance(max_new, int) \
+            else list(max_new)
         lens = [len(p) for p in prompts] + [1] * (B - len(prompts))
         maxp = max(lens)
         grid = np.zeros((B, maxp), np.int32)
@@ -49,14 +279,22 @@ class ServeEngine:
         seg[len(prompts):, 0] = 1              # idle slots: 1-token dummy
         batch = {"tokens": jnp.asarray(grid), "positions": jnp.asarray(pos),
                  "segment_ids": jnp.asarray(seg)}
-        logits, self.cache, lens_j = self.prefill(self.params, batch)
+        logits, self.cache, lens_j = self._wave_prefill(self.params, batch)
         outs = [[] for _ in range(B)]
+        done = [b >= len(prompts) for b in range(B)]
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        for i in range(max_new):
+        for i in range(max(budgets, default=0)):
+            toks = np.asarray(tok[:, 0])
             for b in range(len(prompts)):
-                outs[b].append(int(tok[b, 0]))
-            logits, self.cache = self.step(self.params, self.cache, tok,
-                                           lens_j + i, None)
+                if done[b]:
+                    continue
+                outs[b].append(int(toks[b]))
+                if int(toks[b]) == eos or len(outs[b]) >= budgets[b]:
+                    done[b] = True
+            if all(done):
+                break
+            logits, self.cache = self._step(self.params, self.cache, tok,
+                                            lens_j + i, None)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         return outs[:len(prompts)]
 
@@ -66,9 +304,12 @@ def main():
     ap.add_argument("--arch", default="mamba-110m")
     ap.add_argument("--tiny", action="store_true",
                     help="shrink the model for a CPU demo")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--policy", default="first_fit",
+                    choices=["first_fit", "sequential", "sorted_greedy"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -77,23 +318,25 @@ def main():
                                   dtype="float32", scan_chunk=64)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, args.batch, args.max_len)
+    engine = ServeEngine(model, params, args.slots, args.max_len,
+                         policy=args.policy)
 
     rng = np.random.default_rng(0)
+    lens = rng.integers(5, 40, size=args.requests)
     t0 = time.perf_counter()
-    n_reqs, n_toks = 0, 0
-    for round_i in range(2):                       # two waves of requests
-        prompts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
-                   for n in rng.integers(5, 20, size=args.batch)]
-        outs = engine.decode_batch(prompts, args.new_tokens)
-        for b, o in enumerate(outs):
-            print(f"wave{round_i} req{b}: prompt[{len(prompts[b])}] "
-                  f"-> {o[:8]}…")
-        n_reqs += len(prompts)
-        n_toks += sum(len(o) for o in outs)
+    for n in lens:
+        engine.submit(rng.integers(1, cfg.vocab, size=int(n)), # noqa: E501
+                      args.new_tokens)
+    outs = engine.run()
     dt = time.perf_counter() - t0
-    print(f"{n_reqs} requests, {n_toks} tokens in {dt:.2f}s "
-          f"({n_toks / dt:.1f} tok/s incl. compile)")
+    st = engine.stats
+    for rid in sorted(outs)[:4]:
+        print(f"req{rid}: prompt[{lens[rid]}] -> {outs[rid][:8]}…")
+    print(f"{len(outs)} requests, {st.generated} tokens in {dt:.2f}s "
+          f"({st.generated / dt:.1f} tok/s incl. compile) — "
+          f"{st.prefills} prefills ({st.midflight_refills} mid-flight), "
+          f"{st.decode_steps} decode steps, "
+          f"{len(st.buckets)} prefill shape(s) compiled")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,18 @@ plus decode cursor.
 Param leaves use conventional names (embed, head, wq, wkv, wo, w_gate, w_up,
 w_down, experts_*, conv_w, A_log, …) that distributed/sharding.py
 pattern-matches into PartitionSpecs.
+
+State handoff (serving): every state-bearing ``apply_<kind>`` supports two
+collect modes, selected by ``collect`` (= cache max_len) and
+``collect_ends``:
+  * per-ROW (``collect_ends=None``) — one right-padded sequence per row;
+    state is frozen across the padding and the row's final state handed off
+    (the historical ``model.prefill`` path).
+  * per-SEGMENT (``collect_ends`` (B, S) int32, −1 = absent) — a PACKED row
+    holds several prompts; the paper's reset rule makes the state at each
+    segment's last token that segment's final state, so one packed forward
+    hands off S caches per row (``model.prefill_packed``). State leaves gain
+    a (B, S, …) leading pair.
 """
 from __future__ import annotations
 
@@ -85,7 +97,8 @@ def _apply_rope(cfg, q, k, ctx: Ctx):
     return q, k
 
 
-def apply_attn(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def apply_attn(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+               collect_ends=None):
     B, L, d = x.shape
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     h = _norm(p["norm"], x, cfg.norm_eps)
@@ -106,6 +119,9 @@ def apply_attn(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
     if collect:
         S = collect if cfg.attn_window is None else \
             min(collect, cfg.attn_window)
+        if collect_ends is not None:
+            lens = _ends_lens(ctx, collect_ends)
+            return x + o, _ring_fill_ends(k, v, collect_ends, lens, S)
         lens = _valid(ctx, x).sum(-1)
         return x + o, _ring_fill(k, v, lens, S)
     return x + o
@@ -135,6 +151,27 @@ def _ring_fill(k, v, lens, S):
     return {"k": jnp.where(m, gk, 0), "v": jnp.where(m, gv, 0)}
 
 
+def _ring_fill_ends(k, v, ends, lens, S):
+    """Per-SEGMENT ring fill: slot s of segment (b, g) holds that segment's
+    last token with intra-segment position ≡ s (mod S) — the packed-prefill
+    generalization of ``_ring_fill``. Returns (B, Sg, S, Hkv, hd) K/V."""
+    B, L, Hkv, hd = k.shape
+    Sg = ends.shape[1]
+    s = jnp.arange(S)[None, None, :]                   # (1, 1, S)
+    nb = lens[..., None]                               # (B, Sg, 1)
+    p = s + ((nb - 1 - s) // S) * S                    # largest ≡ s (mod S)
+    ok = (s < nb) & (p >= 0) & (ends[..., None] >= 0)
+    t = ends[..., None] - (nb - 1) + p                 # global token index
+    tcl = jnp.clip(t, 0, L - 1).reshape(B, Sg * S)[..., None, None]
+    gk = jnp.take_along_axis(
+        k, jnp.broadcast_to(tcl, (B, Sg * S) + k.shape[2:]), axis=1)
+    gv = jnp.take_along_axis(
+        v, jnp.broadcast_to(tcl, (B, Sg * S) + v.shape[2:]), axis=1)
+    m = ok[..., None, None]
+    return {"k": jnp.where(m, gk.reshape(B, Sg, S, Hkv, hd), 0),
+            "v": jnp.where(m, gv.reshape(B, Sg, S, Hkv, hd), 0)}
+
+
 def _conv_tail(x_in, lens, W):
     """Last W-1 *valid* inputs per row → decode conv state (B, W-1, D)."""
     B, L, D = x_in.shape
@@ -151,6 +188,31 @@ def _valid(ctx: Ctx, x):
     if ctx.segment_ids is None:
         return jnp.ones(x.shape[:2], bool)
     return ctx.segment_ids != 0
+
+
+def _ends_lens(ctx: Ctx, ends):
+    """Per-segment length at each end index: positions[end] + 1 (0 = absent).
+
+    ends: (B, S) int32, −1 = absent. Returns (B, S) int32."""
+    L = ctx.positions.shape[1]
+    p = jnp.take_along_axis(ctx.positions, jnp.clip(ends, 0, L - 1), axis=1)
+    return jnp.where(ends >= 0, p + 1, 0)
+
+
+def _conv_tail_ends(x_in, ends, lens, W):
+    """Last W-1 in-SEGMENT inputs per segment end → (B, S, W-1, D).
+
+    Same layout as ``_conv_tail`` (zeros where the segment is shorter than
+    W-1), one tail per packed segment instead of one per row."""
+    B, L, D = x_in.shape
+    S = ends.shape[1]
+    j = jnp.arange(W - 1)[None, None, :]               # (1, 1, W-1)
+    t = ends[..., None] - (W - 1) + 1 + j              # (B, S, W-1) global
+    ok = (lens[..., None] - (W - 1) + j >= 0) & (ends[..., None] >= 0)
+    tcl = jnp.clip(t, 0, L - 1).reshape(B, S * (W - 1))[..., None]
+    g = jnp.take_along_axis(
+        x_in, jnp.broadcast_to(tcl, (B, S * (W - 1), D)), axis=1)
+    return jnp.where(ok[..., None], g.reshape(B, S, W - 1, D), 0)
 
 
 def step_attn(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
@@ -324,7 +386,8 @@ def init_mamba(key, cfg: ArchConfig) -> Dict[str, Any]:
     }
 
 
-def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+                collect_ends=None):
     B, L, d = x.shape
     di, N, dtr = cfg.d_inner, cfg.d_state, cfg.dtr
     backend = "pallas" if cfg.use_pallas else "xla"
@@ -340,6 +403,20 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
     delta = jax.nn.softplus(dt_low @ p["dt_w"].astype(h.dtype) +
                             p["dt_b"].astype(h.dtype))
     A = -jnp.exp(p["A_log"])
+    if collect and collect_ends is not None:
+        # per-SEGMENT handoff: resets already isolate segments, so the state
+        # sampled at each segment end IS its final state — no freezing, and
+        # padding (pos == 0 ⇒ reset) cannot leak into earlier samples.
+        y, h_ends = core_ssm.selective_scan(
+            x_c, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
+            method=cfg.scan_impl, chunk=cfg.scan_chunk,
+            intra=cfg.scan_intra, collect_ends=collect_ends)
+        state = {"conv": _conv_tail_ends(x_in, collect_ends,
+                                         _ends_lens(ctx, collect_ends),
+                                         cfg.d_conv),
+                 "ssm": h_ends}
+        y = y * jax.nn.silu(z)
+        return x + y @ p["out_proj"].astype(x.dtype), state
     if collect:
         # freeze state across right-padding: Δ=0 ⇒ Ā=1, B̄x=0. Padding
         # positions are 0, which would trigger the Ā→0 reset and zero the
@@ -405,7 +482,7 @@ def init_mamba2(key, cfg: ArchConfig) -> Dict[str, Any]:
     ks = jax.random.split(key, 6)
     # Mamba-2 init: A ~ U[1, 16] per head; A = -exp(A_log) < 0
     A = jax.random.uniform(ks[5], (H,), minval=1.0, maxval=16.0)
-    return {
+    out = {
         "norm": jnp.ones((d,)),
         "in_proj": _dense(ks[0], d, 2 * di),
         "conv_w": jax.random.normal(ks[1], (W, di)) * W ** -0.5,
@@ -419,6 +496,9 @@ def init_mamba2(key, cfg: ArchConfig) -> Dict[str, Any]:
         "D": jnp.ones((H,)),
         "out_proj": _dense(ks[4], di, d, scale=di ** -0.5),
     }
+    if cfg.ssm_norm == "rms_gate":
+        out["ssm_norm_w"] = jnp.ones((di,))
+    return out
 
 
 def _mamba2_gates(p, x_c, cfg: ArchConfig):
@@ -430,7 +510,19 @@ def _mamba2_gates(p, x_c, cfg: ArchConfig):
     return delta, Bm, Cm
 
 
-def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def _mamba2_gate_out(p, y, z, cfg: ArchConfig):
+    """Mamba-2 output gate: y·silu(z), with the optional RMSNorm-before-
+    out_proj variant (``ssm_norm="rms_gate"``: normalize the gated product
+    and rescale by a learned (d_inner,) weight — Mamba-2's `rmsnorm` knob,
+    which decouples out_proj's input scale from sequence statistics)."""
+    g = y * jax.nn.silu(z)
+    if "ssm_norm_w" in p:
+        g = _norm(p["ssm_norm_w"], g, cfg.norm_eps)
+    return g
+
+
+def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+                 collect_ends=None):
     B, L, d = x.shape
     di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_hd
     backend = "pallas" if cfg.use_pallas else "xla"
@@ -444,6 +536,19 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
     delta, Bm, Cm = _mamba2_gates(p, x_c, cfg)
     A = -jnp.exp(p["A_log"])
     u_h = x_c.reshape(B, L, H, P)
+    if collect and collect_ends is not None:
+        # per-SEGMENT handoff — same protocol as apply_mamba: no freezing,
+        # sample the head-structured state at each segment end.
+        y, h_ends = core_ssm.selective_scan_heads(
+            u_h, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
+            method="blocked", chunk=cfg.scan_chunk,
+            collect_ends=collect_ends)
+        state = {"conv": _conv_tail_ends(x_in, collect_ends,
+                                         _ends_lens(ctx, collect_ends),
+                                         cfg.d_conv),
+                 "ssm": h_ends}
+        y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
+        return x + y @ p["out_proj"].astype(x.dtype), state
     if collect:
         # freeze state across right-padding (Δ=0 ⇒ decay 1, b-term 0) and
         # neutralize the pos==0 reset at padding slots — same protocol as
@@ -456,7 +561,7 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
             method="blocked", chunk=cfg.scan_chunk, return_state=True)
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
-        y = y.reshape(B, L, di) * jax.nn.silu(z)
+        y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
         return x + y @ p["out_proj"].astype(x.dtype), state
     y = kops.selective_scan_heads(u_h, delta, A, Bm, Cm, p["D"],
                                   positions=ctx.positions, backend=backend,
@@ -464,7 +569,7 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
                                   xla_dtype=(None
                                              if cfg.scan_dtype == "float32"
                                              else cfg.scan_dtype))
-    y = y.reshape(B, L, di) * jax.nn.silu(z)
+    y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
     return x + y @ p["out_proj"].astype(x.dtype)
 
 
@@ -490,7 +595,7 @@ def step_mamba2(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
     y, ssm = core_ssm.selective_scan_heads_step(
         cache["ssm"], x_c.reshape(B, H, P), delta, A, Bm, Cm, p["D"],
         reset_t=ctx.reset_t)
-    y = y.reshape(B, di) * jax.nn.silu(z)
+    y = _mamba2_gate_out(p, y.reshape(B, di), z, cfg)
     out = y @ p["out_proj"].astype(x_t.dtype)
     return x_t + out[:, None], {"conv": conv_state, "ssm": ssm}
 
@@ -536,7 +641,8 @@ def _gate_blockdiag(x_c, w, nb):
     return jnp.einsum("blnc,ncd->blnd", xb, w).reshape(B, L, lw)
 
 
-def apply_rec(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def apply_rec(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+              collect_ends=None):
     backend = "pallas" if cfg.use_pallas else "xla"
     nb = cfg.lru_gate_blocks
     h = _norm(p["norm"], x, cfg.norm_eps)
@@ -547,6 +653,17 @@ def apply_rec(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
                            backend=backend)
     r = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_r"].astype(h.dtype), nb))
     i = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_i"].astype(h.dtype), nb))
+    cdt = None if cfg.scan_dtype == "float32" else cfg.scan_dtype
+    if collect and collect_ends is not None:
+        # per-SEGMENT handoff: the RG-LRU state trajectory is its output, so
+        # segment-end states are a free gather inside rglru — no freezing.
+        lru, _, h_ends = rglru(x_c, r, i, p["a_param"], ctx.positions,
+                               method="chunked", chunk=cfg.scan_chunk,
+                               compute_dtype=cdt, collect_ends=collect_ends)
+        out = (lru * y_branch) @ p["wo"].astype(x.dtype)
+        return x + out, {"conv": _conv_tail_ends(
+            x_branch, collect_ends, _ends_lens(ctx, collect_ends),
+            cfg.conv_width), "h": h_ends}
     pos_rec = ctx.positions
     if collect:
         # freeze across padding: r=0 ⇒ a=1, and then b = √(1-a²)·i·x = 0;
@@ -557,8 +674,7 @@ def apply_rec(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
         pos_rec = jnp.where(vmask, ctx.positions, 1)
     lru, h_last = rglru(x_c, r, i, p["a_param"], pos_rec,
                         method="chunked", chunk=cfg.scan_chunk,
-                        compute_dtype=(None if cfg.scan_dtype == "float32"
-                                       else cfg.scan_dtype))
+                        compute_dtype=cdt)
     out = (lru * y_branch) @ p["wo"].astype(x.dtype)
     if collect:
         lens = _valid(ctx, x).sum(-1)
@@ -614,7 +730,8 @@ def init_mlstm(key, cfg: ArchConfig) -> Dict[str, Any]:
     }
 
 
-def apply_mlstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def apply_mlstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+                collect_ends=None):
     B, L, d = x.shape
     H = cfg.n_heads
     pf = p["w_upx"].shape[1]
@@ -634,6 +751,34 @@ def apply_mlstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
     logi, f_pre = jnp.split(g, 2, axis=-1)
     logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
     logi = logi.astype(jnp.float32)
+    if collect and collect_ends is not None:
+        # per-SEGMENT handoff. The mLSTM matrix-state trajectory is never
+        # materialized (chunkwise form), so per-segment finals are computed
+        # by vmapping the freeze trick over segments: gates outside segment
+        # g are identity (f'=1, i'=0), so the row's FINAL state equals the
+        # state at g's last token. The big projections above run once; only
+        # the O(L·H·dk·dv) state update repeats S times.
+        y = mlstm(q, k, v, logf, logi, positions=ctx.positions,
+                  chunk=cfg.scan_chunk)
+
+        def one_seg(sid):
+            msk = ctx.segment_ids == sid
+            lf = jnp.where(msk[..., None], logf, 0.0)
+            li = jnp.where(msk[..., None], logi, -1e30)
+            ps = jnp.where(msk, ctx.positions, 1)
+            _, st = mlstm(q, k, v, lf, li, positions=ps,
+                          chunk=cfg.scan_chunk, return_state=True)
+            return st
+
+        nseg = collect_ends.shape[1]
+        Cs, ns, ms = jax.vmap(one_seg, out_axes=1)(
+            jnp.arange(1, nseg + 1, dtype=jnp.int32))
+        state = {"conv": _conv_tail_ends(x_in, collect_ends,
+                                         _ends_lens(ctx, collect_ends),
+                                         cfg.conv_width),
+                 "C": Cs, "n": ns, "m": ms}
+        y = y.reshape(B, L, pf) * jax.nn.silu(z)
+        return x + y @ p["w_down"].astype(x.dtype), state
     if collect:
         # freeze across padding: f'=1 (logf=0), i'=0 (logi=-inf); neutralize
         # the pos==0 reset at padding slots
@@ -703,12 +848,31 @@ def init_slstm(key, cfg: ArchConfig) -> Dict[str, Any]:
     }
 
 
-def apply_slstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0):
+def apply_slstm(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
+                collect_ends=None):
     B, L, d = x.shape
     H = cfg.n_heads
     dh = d // H
     h = _norm(p["norm"], x, cfg.norm_eps)
     pre = (h @ p["w_pre"].astype(h.dtype)).reshape(B, L, 4, H, dh)
+    if collect and collect_ends is not None:
+        # per-SEGMENT handoff: sLSTM is inherently sequential, so vmap its
+        # existing valid-freeze over segments (state frozen outside segment
+        # g ⇒ row-final state = state at g's last token).
+        y = slstm(pre, p["R"], positions=ctx.positions)
+
+        def one_seg(sid):
+            msk = ctx.segment_ids == sid
+            _, st = slstm(pre, p["R"],
+                          positions=jnp.where(msk, ctx.positions, 1),
+                          valid=msk, return_state=True)
+            return st
+
+        nseg = collect_ends.shape[1]
+        cs, ns, ms, hs = jax.vmap(one_seg, out_axes=1)(
+            jnp.arange(1, nseg + 1, dtype=jnp.int32))
+        out = x + y.reshape(B, L, d) @ p["w_out"].astype(x.dtype)
+        return out, {"c": cs, "n": ns, "m": ms, "h": hs}
     if collect:
         y, (c, n, m, hh) = slstm(pre, p["R"], positions=ctx.positions,
                                  valid=_valid(ctx, x), return_state=True)

@@ -69,16 +69,18 @@ _APPLY = {"attn": B.apply_attn, "mlp": B.apply_mlp, "moe": B.apply_moe,
           "rec": B.apply_rec, "mlstm": B.apply_mlstm, "slstm": B.apply_slstm}
 
 
-def _apply_sub(kind, p, x, ctx, cfg, collect: int = 0):
+def _apply_sub(kind, p, x, ctx, cfg, collect: int = 0, collect_ends=None):
     """Uniform (x, aux, state) return. ``collect`` (= cache max_len when
-    nonzero) asks state-bearing blocks to also emit their decode cache."""
+    nonzero) asks state-bearing blocks to also emit their decode cache —
+    per row, or per packed segment when ``collect_ends`` (B, S) is given."""
     if kind in ("mlp", "moe"):
         out = _APPLY[kind](p, x, ctx, cfg)
         if kind == "moe":
             return out[0], out[1], None
         return out, None, None
     if collect:
-        x, state = _APPLY[kind](p, x, ctx, cfg, collect=collect)
+        x, state = _APPLY[kind](p, x, ctx, cfg, collect=collect,
+                                collect_ends=collect_ends)
         return x, None, state
     return _APPLY[kind](p, x, ctx, cfg), None, None
 
@@ -310,6 +312,82 @@ class LM:
         W = self._head_t(params)
         logits = (xlast @ W.astype(xlast.dtype)).astype(jnp.float32)
         return logits, cache, lens
+
+    def prefill_packed(self, params, batch, max_len: int, ends):
+        """Packed multi-prompt prefill: ONE forward over PACKED rows (many
+        prompts laid back-to-back per row, core/packing.py layout) that
+        hands off a decode cache for EVERY packed segment — the
+        continuous-batching admission path. ``ends`` (B, S) int32 is each
+        segment's last-token index in its row (−1 = absent segment; S is the
+        static per-row segment capacity).
+
+        The paper's reset rule makes each segment's state independent of its
+        neighbors, so per-segment finals are trajectory samples at ``ends``
+        (see models/blocks.py docstring) — no replay, no per-prompt rows.
+
+        Returns (logits (B, S, V) at segment ends, states pytree whose
+        leaves carry (B, S, …) leading dims ((n_units, B, S, …) for
+        unit-stacked layers), seg_lens (B, S) int32 — 0 where absent).
+        Feed the states to ``scatter_into_cache`` to land them in decode
+        slots."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        ctx = self._ctx(batch)
+
+        def unit_body(x, unit_p):
+            states = {}
+            for name, kind in self.layout:
+                x, _, st = _apply_sub(kind, unit_p[name], x, ctx, cfg,
+                                      collect=max_len, collect_ends=ends)
+                if st is not None:
+                    states[name] = st
+            return x, states
+
+        states: Dict[str, Any] = {}
+        if self.n_units:
+            x, unit_states = jax.lax.scan(unit_body, x, params["units"])
+            states["units"] = unit_states
+        if self.n_tail:
+            tail_states = {}
+            for name, kind in self.tail_layout:
+                x, _, st = _apply_sub(kind, params["tail"][name], x, ctx,
+                                      cfg, collect=max_len, collect_ends=ends)
+                if st is not None:
+                    tail_states[name] = st
+            states["tail"] = tail_states
+        x = B._norm(params["final_norm"], x, cfg.norm_eps)
+        Bsz, L, d = x.shape
+        S = ends.shape[1]
+        idx = jnp.clip(ends, 0, L - 1)[..., None]
+        xe = jnp.take_along_axis(x, jnp.broadcast_to(idx, (Bsz, S, d)),
+                                 axis=1)
+        W = self._head_t(params)
+        logits = (xe @ W.astype(xe.dtype)).astype(jnp.float32)
+        logits = jnp.where((ends >= 0)[..., None], logits, 0.0)
+        seg_lens = B._ends_lens(ctx, ends)
+        return logits, states, seg_lens
+
+    def scatter_into_cache(self, cache, states, src, dst):
+        """Land harvested per-segment states in arbitrary decode slots.
+
+        cache: slot-major decode cache (``init_cache`` layout); states: the
+        pytree from ``prefill_packed`` ((B, S, …) leading dims); src (M,)
+        int32 flat indices into the flattened B·S segment axis; dst (M,)
+        int32 target slot rows. Entries with dst outside [0, n_slots) are
+        DROPPED (use n_slots as a sentinel), so a fixed M compiles once
+        regardless of how many slots a round actually refills.
+
+        Returns the updated cache (jit/donate-friendly: pure function)."""
+        def one(path, c, s):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            if stacked:                     # (n_units, B, S, …) leaves
+                flat = s.reshape((s.shape[0], -1) + s.shape[3:])
+                return c.at[:, dst].set(flat[:, src].astype(c.dtype),
+                                        mode="drop")
+            flat = s.reshape((-1,) + s.shape[2:])
+            return c.at[dst].set(flat[src].astype(c.dtype), mode="drop")
+
+        return jax.tree_util.tree_map_with_path(one, cache, states)
 
     # ----------------------------------------------------------- decode
     def init_cache(self, batch_size: int, max_len: int) -> Dict[str, Any]:

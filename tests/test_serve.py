@@ -1,0 +1,355 @@
+"""Packed-prefill serving handoff + continuous-batching engine.
+
+Parity contract (the tentpole's acceptance bar): a packed multi-prompt
+prefill (``model.prefill_packed``) must hand off per-segment decode caches
+and segment-end logits that match N individual ``model.prefill`` calls, for
+every cached block kind (attn full + windowed, mamba, mamba2, rec, mlstm,
+slstm). The engine tests then cover EOS termination, mid-flight slot refill
+and agreement with per-request reference decoding.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import packing
+from repro.launch.serve import ServeEngine
+from repro.models.lm import build_model
+
+
+def _pack_prompts(prompts, rows, cap, max_segments):
+    """first-fit pack + ends; returns (batch dict, ends, (row, seg) map)."""
+    pb = packing.pack(prompts, cap, policy="first_fit", num_rows=rows)
+    ends = packing.segment_ends(pb, max_segments)
+    where = {}
+    for r, ids in enumerate(pb.seq_ids):
+        for s, i in enumerate(ids):
+            where[i] = (r, s)
+    batch = {"tokens": pb.tokens, "positions": pb.positions,
+             "segment_ids": pb.segment_ids}
+    return batch, jnp.asarray(ends), where
+
+
+# xlstm's chunkwise-parallel mLSTM re-associates its f32 reductions when a
+# segment sits at a different offset, and the error compounds over depth —
+# same reason tests/test_prefill.py uses 2e-3 on logits. Everything else
+# meets the 1e-5 handoff bar.
+CASES = [("stablelm-1.6b", None, 1e-5), ("stablelm-1.6b",
+                                         {"attn_window": 5}, 1e-5),
+         ("mamba-110m", None, 1e-5), ("mamba2-370m", None, 1e-5),
+         ("mamba2-370m", {"ssm_norm": "rms_gate"}, 1e-5),
+         ("recurrentgemma-2b", None, 1e-5), ("xlstm-125m", None, 5e-4)]
+
+
+@pytest.mark.parametrize("arch,mod,atol", CASES)
+def test_packed_prefill_matches_per_prompt(arch, mod, atol, rng):
+    cfg = get_config(arch).reduced()
+    if mod:
+        cfg = dataclasses.replace(cfg, **mod)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plens = (9, 14, 5, 11)
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in plens]
+    batch, ends, where = _pack_prompts(prompts, rows=2, cap=24,
+                                       max_segments=3)
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = jnp.asarray(
+            np.repeat(np.asarray(batch["positions"])[..., None], 3, axis=-1))
+    max_len = 32
+    logits, states, seg_lens = model.prefill_packed(params, batch, max_len,
+                                                    ends)
+    for i, prompt in enumerate(prompts):
+        r, s = where[i]
+        n = len(prompt)
+        assert int(seg_lens[r, s]) == n
+        single = {"tokens": jnp.asarray(prompt)[None],
+                  "positions": jnp.arange(n, dtype=jnp.int32)[None],
+                  "segment_ids": jnp.ones((1, n), jnp.int32)}
+        lg_ref, cache_ref, clen = model.prefill(params, single, max_len)
+        np.testing.assert_allclose(logits[r, s], lg_ref[0], atol=atol,
+                                   rtol=1e-4, err_msg=f"{arch} prompt {i}")
+
+        def check(path, packed_leaf, ref_leaf):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            got = packed_leaf[:, r, s] if stacked else packed_leaf[r, s]
+            want = ref_leaf[:, 0] if stacked else ref_leaf[0]
+            np.testing.assert_allclose(
+                got, want, atol=atol, rtol=1e-4,
+                err_msg=f"{arch} prompt {i} leaf "
+                        f"{'/'.join(str(getattr(p, 'key', p)) for p in path)}")
+
+        jax.tree_util.tree_map_with_path(check, states, cache_ref)
+
+
+def test_absent_segments_zero_and_logits_masked(rng):
+    """ends == -1 entries yield zero states and zero logits."""
+    cfg = get_config("mamba-110m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [rng.integers(1, cfg.vocab, size=7).astype(np.int32)]
+    batch, ends, _ = _pack_prompts(prompts, rows=2, cap=16, max_segments=2)
+    logits, states, seg_lens = model.prefill_packed(params, batch, 24, ends)
+    assert np.asarray(ends)[0, 1] == -1          # absent segment exists
+    np.testing.assert_array_equal(logits[0, 1], 0.0)
+    np.testing.assert_array_equal(logits[1], 0.0)    # empty row
+    assert int(seg_lens[0, 1]) == 0
+
+    def zero(path, leaf):
+        np.testing.assert_array_equal(leaf[:, 0, 1], 0.0)
+
+    jax.tree_util.tree_map_with_path(zero, states)
+
+
+def test_scatter_into_cache_slots_and_sentinel(rng):
+    """Scatter lands states in the addressed slots only; the num_slots
+    sentinel drops an entry; untouched slots stay intact."""
+    cfg = get_config("mamba-110m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (6, 9)]
+    batch, ends, where = _pack_prompts(prompts, rows=1, cap=16,
+                                       max_segments=2)
+    _, states, _ = model.prefill_packed(params, batch, 24, ends)
+    nslots = 4
+    marker = jax.tree.map(lambda a: jnp.full_like(a, 7.0),
+                          model.init_cache(nslots, 24))
+    src = jnp.asarray([1, 0, 0], jnp.int32)      # seg1 → slot 0, seg0 → 2
+    dst = jnp.asarray([0, 2, nslots], jnp.int32)     # third entry dropped
+    out = model.scatter_into_cache(marker, states, src, dst)
+
+    def check(path, got, st):
+        stacked = any(getattr(p, "key", None) == "units" for p in path)
+        if stacked:
+            np.testing.assert_allclose(got[:, 0], st[:, 0, 1], atol=0)
+            np.testing.assert_allclose(got[:, 2], st[:, 0, 0], atol=0)
+            np.testing.assert_array_equal(got[:, 1], 7.0)
+            np.testing.assert_array_equal(got[:, 3], 7.0)
+        else:
+            np.testing.assert_allclose(got[0], st[0, 1], atol=0)
+            np.testing.assert_array_equal(got[1], 7.0)
+
+    jax.tree_util.tree_map_with_path(check, out, states)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _reference_decode(model, params, prompt, max_new, max_len, eos=-1):
+    n = len(prompt)
+    batch = {"tokens": jnp.asarray(prompt)[None],
+             "positions": jnp.arange(n, dtype=jnp.int32)[None],
+             "segment_ids": jnp.ones((1, n), jnp.int32)}
+    lg, cache, clen = model.prefill(params, batch, max_len)
+    out = [int(jnp.argmax(lg[0]))]
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    for t in range(max_new - 1):
+        if out[-1] == eos:
+            break
+        lg, cache = model.decode_step(params, cache, tok, clen + t)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_model():
+    cfg = get_config("mamba-110m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_mixed_lengths_midflight_refill(tiny_engine_model, rng):
+    """More requests than slots, mixed prompt AND output lengths: every
+    request matches its per-request reference, refills happen while other
+    slots are mid-decode, and prefill compiles stay bucket-bounded."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(4, 30, size=10)]
+    budgets = [int(b) for b in rng.integers(3, 9, size=10)]
+    engine = ServeEngine(model, params, num_slots=3, max_len=64,
+                         prefill_rows=2, buckets=(32,), max_segments=2,
+                         refill_threshold=1)
+    for p, b in zip(prompts, budgets):
+        engine.submit(p, b)
+    outs = engine.run()
+    assert sorted(outs) == list(range(10))
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        assert len(outs[i]) == b
+        ref = _reference_decode(model, params, p, b, 64)
+        assert outs[i] == ref, f"request {i}"
+    st = engine.stats
+    assert st.midflight_refills > 0          # refilled without draining
+    assert st.buckets == {(2, 32)}           # one compiled prefill shape
+    assert not engine._active_slots() and not engine.queue
+
+
+def test_engine_eos_terminates_slot(tiny_engine_model, rng):
+    """A request stops the moment greedy decode emits its EOS token (the
+    EOS itself is kept), freeing the slot for the queue."""
+    cfg, model, params = tiny_engine_model
+    prompt = rng.integers(1, cfg.vocab, size=11).astype(np.int32)
+    free_run = _reference_decode(model, params, prompt, 8, 64)
+    eos = free_run[2]                        # a token greedy decode emits
+    hit = free_run.index(eos)                # first time it appears
+    engine = ServeEngine(model, params, num_slots=2, max_len=64,
+                         prefill_rows=1, buckets=(16,), max_segments=1)
+    rid = engine.submit(prompt, 8, eos=eos)
+    outs = engine.run()
+    assert outs[rid] == free_run[:hit + 1]
+    assert outs[rid][-1] == eos
+    assert len(outs[rid]) < len(free_run)
+
+
+def test_decode_batch_eos_stops_appending(tiny_engine_model, rng):
+    """Satellite: the padded-wave baseline terminates rows on EOS instead
+    of ignoring the argument."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (7, 12)]
+    engine = ServeEngine(model, params, num_slots=2, max_len=64)
+    free = engine.decode_batch(prompts, 8)
+    assert all(len(o) == 8 for o in free)
+    eos = free[0][1]
+    engine2 = ServeEngine(model, params, num_slots=2, max_len=64)
+    outs = engine2.decode_batch(prompts, 8, eos=eos)
+    assert outs[0] == free[0][:2] and outs[0][-1] == eos
+    ref1 = [t for t in free[1]]
+    cut = ref1.index(eos) + 1 if eos in ref1 else len(ref1)
+    assert outs[1] == ref1[:cut]
+
+
+def test_engine_per_request_budgets_decode_batch(tiny_engine_model, rng):
+    """decode_batch honours per-prompt budgets (list form)."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 6)]
+    engine = ServeEngine(model, params, num_slots=3, max_len=64)
+    outs = engine.decode_batch(prompts, [2, 5, 3])
+    assert [len(o) for o in outs] == [2, 5, 3]
+
+
+def test_engine_matches_wave_outputs(tiny_engine_model, rng):
+    """Continuous engine and padded-wave baseline produce identical greedy
+    tokens for the same requests (same handoff numerics, different
+    batching schedule)."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (8, 15, 4)]
+    wave = ServeEngine(model, params, num_slots=3, max_len=64)
+    wave_outs = wave.decode_batch(prompts, 6)
+    engine = ServeEngine(model, params, num_slots=3, max_len=64,
+                         prefill_rows=2, buckets=(16, 32), max_segments=2)
+    rids = [engine.submit(p, 6) for p in prompts]
+    outs = engine.run()
+    for rid, w in zip(rids, wave_outs):
+        assert outs[rid] == w
+
+
+def test_submit_validation(tiny_engine_model):
+    cfg, model, params = tiny_engine_model
+    engine = ServeEngine(model, params, num_slots=2, max_len=32,
+                         buckets=(16,))
+    with pytest.raises(ValueError):
+        engine.submit(np.ones(20, np.int32), 4)      # > largest bucket
+    with pytest.raises(ValueError):
+        engine.submit(np.ones(10, np.int32), 30)     # prompt+new > max_len
+    with pytest.raises(ValueError):
+        engine.submit(np.ones(0, np.int32), 4)       # empty prompt
+    with pytest.raises(ValueError):
+        engine.submit(np.ones(5, np.int32), 0)       # no token budget
+    engine.submit(np.ones(5, np.int32), 2)
+    with pytest.raises(RuntimeError):                # would clobber slots
+        engine.decode_batch([np.ones(5, np.int32)], 2)
+    engine.run()
+    engine.decode_batch([np.ones(5, np.int32)], 2)   # drained: fine
+
+
+# ---------------------------------------------------------------------------
+# satellites: rms_gate variant, sharding rules, packing helper
+# ---------------------------------------------------------------------------
+
+def test_mamba2_rms_gate_param_and_effect(rng):
+    cfg = dataclasses.replace(get_config("mamba2-370m").reduced(),
+                              ssm_norm="rms_gate")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    unit0 = jax.tree.map(lambda a: a[0], params["units"])
+    name = next(n for n in unit0 if n.endswith("mamba2"))
+    assert "ssm_norm_w" in unit0[name]
+    assert unit0[name]["ssm_norm_w"].shape == (cfg.d_inner,)
+    # apply vs step parity (full-seq forward == token-by-token decode)
+    n = 9
+    toks = rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks)[None],
+             "positions": jnp.arange(n, dtype=jnp.int32)[None],
+             "segment_ids": jnp.ones((1, n), jnp.int32)}
+    full = model.forward(params, batch)
+    cache = model.init_cache(1, 16)
+    for t in range(n):
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[toks[t]]]),
+            jnp.asarray([t]), jnp.asarray([t == 0]))
+    np.testing.assert_allclose(lg[0], full[0, -1], atol=2e-4, rtol=1e-4)
+    # the knob actually changes the function
+    cfg2 = dataclasses.replace(cfg, ssm_norm="none")
+    model2 = build_model(cfg2)
+    params2 = jax.tree.map(lambda a: a,
+                           {k: v for k, v in params.items()})
+    params2["units"] = jax.tree.map(
+        lambda a: a, {name: {k: v for k, v in params["units"][name].items()
+                             if k != "ssm_norm_w"}
+                      for name in params["units"]})
+    out2 = model2.forward(params2, batch)
+    assert float(jnp.abs(out2 - full).max()) > 1e-3
+
+
+def test_sharding_rules_serve_states():
+    from repro.distributed.sharding import (param_pspecs, packed_state_pspecs,
+                                            cache_pspecs)
+    from jax.sharding import Mesh, PartitionSpec as P
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    cfg = dataclasses.replace(get_config("mamba2-370m").reduced(),
+                              ssm_norm="rms_gate")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_pspecs(params, mesh)
+    unit0 = specs["units"]
+    name = next(n for n in unit0 if n.endswith("mamba2"))
+    assert isinstance(unit0[name]["ssm_norm_w"], P)
+    # packed prefill states: (n_units, B, S, …) leaves get a replicated
+    # segment axis and cache-like specs elsewhere
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "positions": jnp.zeros((2, 16), jnp.int32),
+             "segment_ids": jnp.zeros((2, 16), jnp.int32)}
+    ends = jnp.zeros((2, 3), jnp.int32)
+    _, states, _ = jax.eval_shape(
+        lambda p, b, e: model.prefill_packed(p, b, 24, e),
+        params, batch, ends)
+    sspecs = packed_state_pspecs(states, mesh)
+    cspecs = cache_pspecs(jax.eval_shape(lambda: model.init_cache(4, 24)),
+                          mesh, 4)
+    for (pth, sspec), (_, cspec) in zip(
+            jax.tree_util.tree_leaves_with_path(sspecs),
+            jax.tree_util.tree_leaves_with_path(cspecs)):
+        assert len(sspec) == len(cspec) + 1     # extra segment axis
+        assert sspec[2] is None                 # segments replicated
+
+
+def test_segment_ends_helper(rng):
+    prompts = [rng.integers(1, 50, size=n).astype(np.int32)
+               for n in (4, 6, 3)]
+    pb = packing.pack(prompts, 12, policy="first_fit", num_rows=2)
+    ends = packing.segment_ends(pb, 3)
+    assert ends.shape == (2, 3)
+    # row 0: segs of 4 and 6 → ends 3, 9
+    np.testing.assert_array_equal(ends[0], [3, 9, -1])
+    with pytest.raises(ValueError):
+        packing.segment_ends(pb, 1)
