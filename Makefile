@@ -10,25 +10,42 @@ OLD ?= BENCH_scan.json
 NEW ?= BENCH_scan.new.json
 SERVE_OLD ?= BENCH_serve.json
 SERVE_NEW ?= BENCH_serve.new.json
+# the shape-keyed scan-autotuning cache (repro/tune). bench-tune refreshes
+# it; tune-check verifies the committed file loads under this machine's
+# fingerprint (a clean STALE report on any other machine).
+TUNE ?= TUNE_CACHE.json
 
-.PHONY: verify bench-scan bench-serve bench-compare quickstart
+.PHONY: verify bench-scan bench-serve bench-tune tune-check bench-compare \
+	quickstart
 
 verify:
 	$(PY) -m pytest -x -q
 
-# regenerate the scan-schedule matrix into $(NEW)
+# regenerate the scan-schedule matrix into $(NEW) (fig2 also warms $(TUNE)
+# for any of its shape keys the bounded sweep hasn't covered yet)
 bench-scan:
-	BENCH_SCAN_JSON=$(NEW) $(PY) -m benchmarks.run fig2
+	BENCH_SCAN_JSON=$(NEW) REPRO_TUNE_CACHE=$(TUNE) $(PY) -m benchmarks.run fig2
 
 # regenerate the serving padded-vs-packed throughput rows into $(SERVE_NEW)
 bench-serve:
 	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve
 
-# gate on the perf trajectories: exits nonzero on >10% regressions
-# (serve compare is skipped if a side wasn't regenerated)
-bench-compare:
-	$(PY) benchmarks/compare.py $(OLD) $(NEW)
-	$(PY) benchmarks/compare.py $(SERVE_OLD) $(SERVE_NEW) --allow-missing
+# bounded autotune sweep over the benchmark-matrix shapes -> $(TUNE)
+bench-tune:
+	REPRO_TUNE_CACHE=$(TUNE) $(PY) -m repro.tune.runner --out $(TUNE)
+
+# committed cache loads under the current fingerprint, or cleanly reports
+# stale (exit 1 only when missing/corrupt)
+tune-check:
+	$(PY) -m repro.tune --check $(TUNE)
+
+# gate on the perf trajectories: one invocation, every offender across both
+# files in one report; exits nonzero on >10% regressions. The scan pair is
+# REQUIRED (a missing regeneration fails the gate); the serve pair is
+# skipped if a side wasn't regenerated.
+bench-compare: tune-check
+	$(PY) benchmarks/compare.py --pair $(OLD) $(NEW) \
+		--optional-pair $(SERVE_OLD) $(SERVE_NEW)
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,16 +1,24 @@
-"""Diff two benchmark JSON files (BENCH_scan.json / BENCH_serve.json) and
-flag regressions.
+"""Diff benchmark JSON files (BENCH_scan.json / BENCH_serve.json) and report
+every regression in one run.
 
     PYTHONPATH=src python benchmarks/compare.py OLD.json NEW.json [--pct 10]
+    PYTHONPATH=src python benchmarks/compare.py \
+        --pair BENCH_scan.json BENCH_scan.new.json \
+        --optional-pair BENCH_serve.json BENCH_serve.new.json
 
-Rows are joined on (op, shape, schedule). For every pair the us_per_call
-delta is printed; rows slower by more than ``--pct`` percent are flagged as
-REGRESSION and the exit code is nonzero (so `make bench-compare` can gate a
-PR on the scan-schedule AND serve-throughput perf trajectories). Rows
-present in only one file are listed as added/removed, never flagged — new
-schedules (e.g. the mamba2 rows) must be able to land. ``--allow-missing``
-turns an absent file into a no-op (exit 0) so one gate can cover benchmark
-files that a given run didn't regenerate.
+Rows are joined on (op, shape, schedule) and printed as an aligned delta
+table — every pair, every row, never stopping at the first offender — then
+a summary block lists ALL rows slower by more than ``--pct`` percent across
+all pairs. The exit code is nonzero iff that list is non-empty (so
+`make bench-compare` gates a PR on the scan-schedule AND serve-throughput
+trajectories while still showing a multi-row regression in full).
+
+Rows present in only one file are listed as added/removed, never flagged —
+new schedules (e.g. the tuned/dual rows) must be able to land.
+``--pair`` files are required (missing → nonzero exit: the primary gate
+cannot pass vacuously); ``--optional-pair`` skips a pair whose files are
+absent, so one gate can also cover benchmark files a given run didn't
+regenerate.
 """
 from __future__ import annotations
 
@@ -31,51 +39,88 @@ def load(path):
 
 
 def compare(old_path: str, new_path: str, pct: float = 10.0):
-    """Returns (report lines, regression count)."""
+    """One pair → (table lines, [(row, old_us, new_us, delta_pct), ...])."""
     old, new = load(old_path), load(new_path)
-    lines, regressions = [], 0
-    for k in sorted(old.keys() | new.keys()):
+    keys = sorted(old.keys() | new.keys())
+    width = max([len("/".join(k)) for k in keys] + [4])
+    lines = [f"  {'status':<10} {'row':<{width}} {'old_us':>10} "
+             f"{'new_us':>10} {'delta':>8}"]
+    offenders = []
+    for k in keys:
         name = "/".join(k)
         if k not in new:
-            lines.append(f"  removed   {name}")
+            lines.append(f"  {'removed':<10} {name:<{width}}")
             continue
+        n = new[k]["us_per_call"]
         if k not in old:
-            lines.append(f"  added     {name}  "
-                         f"{new[k]['us_per_call']:.1f}us")
+            lines.append(f"  {'added':<10} {name:<{width}} {'—':>10} "
+                         f"{n:>10.1f}")
             continue
-        o, n = old[k]["us_per_call"], new[k]["us_per_call"]
+        o = old[k]["us_per_call"]
         delta = (n - o) / o * 100 if o else 0.0
-        tag = "ok        "
+        tag = "ok"
         if delta > pct:
             tag = "REGRESSION"
-            regressions += 1
+            offenders.append((name, o, n, delta))
         elif delta < -pct:
-            tag = "improved  "
-        lines.append(f"  {tag} {name}  {o:.1f} -> {n:.1f}us "
-                     f"({delta:+.1f}%)")
-    return lines, regressions
+            tag = "improved"
+        lines.append(f"  {tag:<10} {name:<{width}} {o:>10.1f} {n:>10.1f} "
+                     f"{delta:>+7.1f}%")
+    return lines, offenders
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("old")
-    ap.add_argument("new")
+    ap.add_argument("old", nargs="?")
+    ap.add_argument("new", nargs="?")
+    ap.add_argument("--pair", nargs=2, action="append", default=[],
+                    metavar=("OLD", "NEW"),
+                    help="a required baseline/candidate file pair "
+                         "(repeatable; missing files fail the gate)")
+    ap.add_argument("--optional-pair", nargs=2, action="append", default=[],
+                    metavar=("OLD", "NEW"),
+                    help="like --pair but skipped when a file is absent "
+                         "(for benchmark files a run didn't regenerate)")
     ap.add_argument("--pct", type=float, default=10.0,
                     help="regression threshold in percent (default 10)")
     ap.add_argument("--allow-missing", action="store_true",
-                    help="exit 0 (no-op) if either file is absent")
+                    help="treat EVERY pair as optional")
     args = ap.parse_args()
-    if args.allow_missing and not (os.path.exists(args.old) and
-                                   os.path.exists(args.new)):
-        missing = [p for p in (args.old, args.new) if not os.path.exists(p)]
-        print(f"# skipping compare: missing {', '.join(missing)}")
-        return
-    lines, regressions = compare(args.old, args.new, args.pct)
-    print(f"# {args.old} -> {args.new} (threshold {args.pct:.0f}%)")
-    for ln in lines:
-        print(ln)
-    if regressions:
-        print(f"# {regressions} regression(s) > {args.pct:.0f}%")
+    pairs = [(o, n, False) for o, n in args.pair] + \
+            [(o, n, True) for o, n in args.optional_pair]
+    if args.old or args.new:
+        if not (args.old and args.new):
+            ap.error("positional usage needs both OLD and NEW")
+        pairs.insert(0, (args.old, args.new, False))
+    if not pairs:
+        ap.error("nothing to compare: pass OLD NEW or --pair")
+
+    all_offenders = []
+    missing_required = []
+    for old, new, optional in pairs:
+        missing = [p for p in (old, new) if not os.path.exists(p)]
+        if missing:
+            if optional or args.allow_missing:
+                print(f"# skipping compare: missing {', '.join(missing)}")
+            else:
+                # fail the gate, but keep comparing the remaining pairs so
+                # ONE run still surfaces every offender
+                print(f"# MISSING required {', '.join(missing)}")
+                missing_required += missing
+            continue
+        lines, offenders = compare(old, new, args.pct)
+        print(f"# {old} -> {new} (threshold {args.pct:.0f}%)")
+        for ln in lines:
+            print(ln)
+        all_offenders += [(f"{old}->{new}",) + o for o in offenders]
+    if all_offenders:
+        print(f"# {len(all_offenders)} regression(s) > {args.pct:.0f}%:")
+        for pair, name, o, n, delta in all_offenders:
+            print(f"#   {name}  {o:.1f} -> {n:.1f}us ({delta:+.1f}%)  "
+                  f"[{pair}]")
+    if missing_required:
+        print(f"# missing required file(s): {', '.join(missing_required)}")
+    if all_offenders or missing_required:
         sys.exit(1)
     print("# no regressions")
 

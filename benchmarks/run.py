@@ -27,16 +27,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import interleaved_min_of_rounds
+
 
 def _timeit(fn, *args, reps=3, warmup=1):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return min(ts) * 1e6        # us
+    best, _ = interleaved_min_of_rounds(
+        [("cell", lambda: fn(*args))], rounds=reps, warmup=warmup)
+    return best["cell"]         # us
 
 
 def _row(name, us, derived=""):
@@ -84,6 +81,14 @@ def fig2_ssm_operator_profile():
                       matrix is (T,T) per head and the chunk evaluates as
                       one (T,T)·(T,dh·N) matmul
                       (core/ssm.py::selective_scan_heads)
+      mamba2_dual     same schedule, C·Bᵀ attention-like dual-form in-chunk
+                      evaluator (intra="dual")
+      mamba2w_*       wide-head family (H=2, dh=128) at matched channels
+                      with a small chunk (T=16) — the dh ≫ T regime where
+                      the dual form's T²·(dh+N) beats quad's T²·dh·N
+      *tuned*         knobs resolved from the shape-keyed tuning cache
+                      (repro/tune; fig2 warms TUNE_CACHE.json for its own
+                      shapes, so tuned rows are the measured winners)
 
     The blocked_noreset row repeats `blocked` with reset-free positions:
     its delta vs `blocked` is the cost of PackMamba reset-correctness
@@ -94,16 +99,23 @@ def fig2_ssm_operator_profile():
     """
     print("# fig2: selective_scan duration vs seqlen x schedule "
           "(B=1, D=256, N=16, packed segments ~300; mamba2 rows: H=4 "
-          "dh=64 at matched channels)")
+          "dh=64, mamba2w rows: H=2 dh=128, both at matched channels)")
     from repro.core.ssm import selective_scan, selective_scan_heads
+    from repro.tune import get_cache
+    from repro.tune import runner as tune_runner
     rng = np.random.default_rng(0)
     D, N = 256, 16
     H2 = 4
     P2 = D // H2
+    H2w, P2w = 2, D // 2            # wide heads: dh = 128 ≫ T = 16
     A = -jnp.exp(jnp.asarray(rng.normal(size=(D, N)), jnp.float32))
     A2 = -jnp.exp(jnp.asarray(rng.normal(size=(H2,)), jnp.float32))
+    A2w = -jnp.exp(jnp.asarray(rng.normal(size=(H2w,)), jnp.float32))
     Dk = jnp.ones((D,), jnp.float32)
     D2k = jnp.ones((H2,), jnp.float32)
+    D2wk = jnp.ones((H2w,), jnp.float32)
+    cache = get_cache()             # TUNE_CACHE.json when present
+    warmed = False
     scheds = [
         ("chunked", dict(method="chunked", chunk=256)),
         ("blocked", dict(method="blocked", chunk=128)),
@@ -111,6 +123,7 @@ def fig2_ssm_operator_profile():
                                 intra="matmul")),
         ("fused_seq", dict(method="fused_seq")),
     ]
+
     for L in [256, 512, 1024, 2048, 4096]:
         u = jnp.asarray(rng.normal(size=(1, L, D)), jnp.float32)
         dt = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, D)), jnp.float32)
@@ -118,6 +131,8 @@ def fig2_ssm_operator_profile():
         Cm = jnp.asarray(rng.normal(size=(1, L, N)), jnp.float32)
         u2 = u.reshape(1, L, H2, P2)
         dt2 = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, H2)), jnp.float32)
+        u2w = u.reshape(1, L, H2w, P2w)
+        dt2w = jnp.asarray(rng.uniform(0.1, 0.5, (1, L, H2w)), jnp.float32)
         pos = _packed_positions(L)
         pos_flat = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (1, L))
         shape = f"B1_L{L}_D{D}_N{N}"
@@ -127,10 +142,19 @@ def fig2_ssm_operator_profile():
                            selective_scan(u, dt, A, Bm, Cm, Dk, pos,
                                           **dict(kw)))
 
-        def mk2(kw):
+        def mk2(kw, A2=A2, D2k=D2k):
             return jax.jit(lambda u, dt, Bm, Cm, pos, kw=tuple(kw.items()):
                            selective_scan_heads(u, dt, A2, Bm, Cm, D2k, pos,
                                                 **dict(kw)))
+
+        # warm the tuning cache for this L's three shape families (no-op
+        # when `make bench-tune` already measured them)
+        warmed |= tune_runner.ensure("selective_scan", B=1, L=L, D=D, N=N,
+                                     cache=cache)
+        warmed |= tune_runner.ensure("selective_scan_heads", B=1, L=L,
+                                     H=H2, dh=P2, N=N, cache=cache)
+        warmed |= tune_runner.ensure("selective_scan_heads", B=1, L=L,
+                                     H=H2w, dh=P2w, N=N, cache=cache)
 
         # each cell: (name, jitted fn, args)
         cells = [(name, mk1(kw), (u, dt, Bm, Cm, pos))
@@ -138,24 +162,43 @@ def fig2_ssm_operator_profile():
         cells.append(("blocked_noreset",
                       mk1(dict(method="blocked", chunk=128)),
                       (u, dt, Bm, Cm, pos_flat)))
+        # tuned rows resolve through the SAME trace-time resolver models
+        # use (tune= → core/ssm.py; xla winners only on this cell's core
+        # path, explicit args the miss fallback) — no parallel re-mapping
+        cells.append(("tuned",
+                      mk1(dict(method="blocked", chunk=128, tune=cache)),
+                      (u, dt, Bm, Cm, pos)))
         cells.append(("mamba2_blocked",
                       mk2(dict(method="blocked", chunk=64)),
+                      (u2, dt2, Bm, Cm, pos)))
+        cells.append(("mamba2_dual",
+                      mk2(dict(method="blocked", chunk=64, intra="dual")),
                       (u2, dt2, Bm, Cm, pos)))
         cells.append(("mamba2_noreset",
                       mk2(dict(method="blocked", chunk=64)),
                       (u2, dt2, Bm, Cm, pos_flat)))
-        best = {}
-        for name, fn, args in cells:
-            jax.block_until_ready(fn(*args))                     # compile
-            best[name] = float("inf")
+        cells.append(("mamba2_tuned",
+                      mk2(dict(method="blocked", chunk=64, tune=cache)),
+                      (u2, dt2, Bm, Cm, pos)))
+        # the dh ≫ T regime: quad must pay T²·dh·N, dual only T²·(dh+N)
+        cells.append(("mamba2w_quad",
+                      mk2(dict(method="blocked", chunk=16, intra="quad"),
+                          A2w, D2wk),
+                      (u2w, dt2w, Bm, Cm, pos)))
+        cells.append(("mamba2w_dual",
+                      mk2(dict(method="blocked", chunk=16, intra="dual"),
+                          A2w, D2wk),
+                      (u2w, dt2w, Bm, Cm, pos)))
+        cells.append(("mamba2w_tuned",
+                      mk2(dict(method="blocked", chunk=16, intra="quad",
+                               tune=cache), A2w, D2wk),
+                      (u2w, dt2w, Bm, Cm, pos)))
         # interleave schedules round-robin: min-of-rounds is robust to the
         # machine-load drift that would bias per-schedule timing blocks
-        for _ in range(7):
-            for name, fn, args in cells:
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(*args))
-                best[name] = min(best[name],
-                                 (time.perf_counter() - t0) * 1e6)
+        # (shared protocol: benchmarks/timing.py, also used by the tuner)
+        best, _ = interleaved_min_of_rounds(
+            [(name, (lambda fn=fn, args=args: fn(*args)))
+             for name, fn, args in cells], rounds=7)
         for name, fn, args in cells:
             us = best[name]
             tag = " (reset-free baseline)" if name.endswith("noreset") \
@@ -163,6 +206,9 @@ def fig2_ssm_operator_profile():
             _row(f"fig2/ssm_{name}_L{L}", us,
                  f"{L / (us / 1e6):.0f} tok/s{tag}")
             _bench("selective_scan", shape, name, us, L)
+    if warmed:
+        print(f"# fig2 tune: warmed {cache.save()} "
+              f"({len(cache.entries)} entries)")
     # ---- peak-memory evidence: no (B, L, D, N) buffer in the blocked HLO
     L = 2048
     u = jnp.asarray(rng.normal(size=(1, L, D)), jnp.float32)
@@ -388,20 +434,16 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
              ("packed_continuous", run_packed,
               ServeEngine(model, params, slots, max_len,
                           buckets=(32, 64, 128), max_segments=4))]
-    results = {name: float("inf") for name, _, _ in modes}
-    gens = {}
     for name, runner, eng in modes:            # warm-up: compile all shapes
         runner(eng)
         eng.stats = type(eng.stats)()          # count the timed rounds only
     # interleave timed rounds (min-of-rounds, same protocol as fig2 — CPU
     # wall clock is noisy and the two modes must not sit in different
-    # load regimes)
-    for _ in range(3):
-        for name, runner, eng in modes:
-            t0 = time.perf_counter()
-            gen = runner(eng)
-            results[name] = min(results[name], time.perf_counter() - t0)
-            gens[name] = gen
+    # load regimes); warm-up already happened above so stats stay clean
+    best, gens = interleaved_min_of_rounds(
+        [(name, (lambda runner=runner, eng=eng: runner(eng)))
+         for name, runner, eng in modes], rounds=3, warmup=0)
+    results = {name: best[name] / 1e6 for name, _, _ in modes}
     for name, runner, eng in modes:
         dt = results[name]
         gen = gens[name]

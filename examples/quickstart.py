@@ -80,6 +80,27 @@ def main():
           f"({engine.stats.generated} tokens, "
           f"{engine.stats.prefills} packed prefills, "
           f"{len(engine.stats.buckets)} prefill shape(s) compiled)")
+
+    # 6. autotuning: every scan-schedule knob above (blocked chunk, in-chunk
+    #    evaluator, Pallas subtile, backend) is a measured, shape-keyed
+    #    decision when scan_tune != "off". `make bench-tune` sweeps the
+    #    candidate spaces once per machine into TUNE_CACHE.json
+    #    (fingerprinted by device/jax version; `make tune-check` audits it);
+    #    a model with scan_tune="auto" then resolves its knobs from the
+    #    cache at trace time, and launch/train.py / launch/serve.py warm the
+    #    cache for their exact shape buckets at startup (--scan-tune auto).
+    #    The default scan_tune="off" keeps the hard-coded paths bit-for-bit.
+    from repro.tune import TuneCache, tuned
+    demo = TuneCache()     # normally loaded from TUNE_CACHE.json
+    from repro.tune import shape_key
+    demo.put(shape_key("selective_scan", B=1, L=256, D=cfg.d_inner,
+                       N=cfg.d_state),
+             {"backend": "xla", "method": "blocked", "chunk": 32,
+              "intra": "assoc"}, us=1234.0)
+    knobs = tuned("selective_scan", B=1, L=256, D=cfg.d_inner,
+                  N=cfg.d_state, cache=demo)
+    print(f"tuned scan knobs for (B=1, L=256): {knobs} "
+          f"(cfg: scan_tune='auto' applies these at trace time)")
     print("done.")
 
 

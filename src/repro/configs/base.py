@@ -82,8 +82,20 @@ class ArchConfig:
                                       # block-parallel schedule, the default
                                       # hot path — see core/scan.py)
     scan_intra: Optional[str] = None  # blocked in-chunk evaluator: None =
-                                      # auto (matmul on TPU, assoc on CPU),
-                                      # or force "matmul" | "assoc"
+                                      # auto (mamba1: matmul on TPU, assoc
+                                      # on CPU; mamba2: quad). Force
+                                      # "matmul" | "assoc" (mamba1) or
+                                      # "quad" | "dual" (mamba2; dual = the
+                                      # C·Bᵀ attention-like form, wins when
+                                      # head dim ≫ chunk)
+    scan_tune: str = "off"            # shape-keyed autotuning (repro/tune):
+                                      # "off" = the knobs above stand as-is
+                                      # (bit-identical HLO); "auto" = resolve
+                                      # measured winners from the process-
+                                      # default TUNE_CACHE.json; a path =
+                                      # resolve from that cache file.
+                                      # launch/train.py + launch/serve.py
+                                      # warm the cache for their shapes.
     scan_dtype: str = "float32"       # recurrence compute dtype (bf16 halves
                                       # the scan's HBM traffic on the XLA path)
     act_pspec: Optional[Tuple] = None  # sharding constraint on the residual

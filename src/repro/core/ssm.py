@@ -56,9 +56,33 @@ from repro.core.scan import segmented_scan, scan_step, gather_state_ends
 from repro.core.scan import _combine as _scan_combine
 
 _MATMUL_CHUNK_CAP = 32    # blocked/matmul intra: bounds the T²·D·N operand
-_HEADS_CHUNK_CAP = 64     # blocked heads: bounds the (T, T, H) decay matrix
-#   and the T× FLOP multiplier of the single-matmul step (SSD picks T ≈ dh
-#   so the (T,T)·(T,dh·N) matmul stays square-ish and compute-balanced)
+_HEADS_CHUNK_CAP = 64     # blocked heads (quad): bounds the (T, T, H) decay
+#   matrix and the T× FLOP multiplier of the single-matmul step (SSD picks
+#   T ≈ dh so the (T,T)·(T,dh·N) matmul stays square-ish)
+_HEADS_DUAL_CHUNK_CAP = 128  # dual form: the T² term is only (dh + N) wide,
+#   so a larger T pays off — but the (B, T, T, H) Gram/decay matrices still
+#   grow as T², hence a cap of their own
+# The caps bound worst-case memory whatever the tuner asks for; WITHIN them
+# the chunk is a measured per-shape decision of repro/tune, not a constant.
+
+
+def _tuned_knobs(op, tune, *, B, L, D=0, N=0, H=0, dh=0, dtype,
+                 positions):
+    """Resolve measured xla-path knobs for one call site (or {} on miss).
+
+    ``tune``: "auto" (process-default cache), a cache path, or a TuneCache.
+    Resolution is trace-time Python over static shapes — nothing here ever
+    blocks a traced computation; a cache miss falls through to the caller's
+    explicit arguments. Winners recorded for the pallas backend are ignored
+    at this (xla-only) level — kernels/ops.py resolves those.
+    """
+    from repro.tune import tuned       # lazy: repro.tune imports this module
+    kn = tuned(op, cache=None if tune == "auto" else tune,
+               B=B, L=L, D=D, N=N, H=H, dh=dh, dtype=dtype,
+               reset_density=None if positions is not None else 0.0)
+    if not kn or kn.get("backend", "xla") != "xla":
+        return {}
+    return kn
 
 
 def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
@@ -69,7 +93,8 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                    method: str = "chunked", chunk: int = 256,
                    return_state: bool = False,
                    compute_dtype=None, intra: Optional[str] = None,
-                   collect_ends: Optional[jnp.ndarray] = None):
+                   collect_ends: Optional[jnp.ndarray] = None,
+                   tune=None):
     """Mamba-1 surface: u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
 
     The degenerate head-structured case H = D, dh = 1 — dispatches through
@@ -82,6 +107,9 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
     default picks 'matmul' on TPU, 'assoc' elsewhere — see _blocked_ssm).
     collect_ends: (B, S) int32 segment-end indices (−1 = absent) — per-
     segment serving handoff (module docstring).
+    tune: None (off — use the explicit arguments as-is) | "auto" | cache
+    path | TuneCache: resolve (method, chunk, intra) from the shape-keyed
+    tuning cache, explicit arguments serving as the miss fallback.
     Returns y (B, L, D) [, h_last (B, D, N)] [, h_ends (B, S, D, N)].
     """
     out = selective_scan_heads(
@@ -89,7 +117,7 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
         h0=None if h0 is None else h0[:, :, None, :],
         method=method, chunk=chunk, return_state=return_state,
         compute_dtype=compute_dtype, intra=intra,
-        collect_ends=collect_ends)
+        collect_ends=collect_ends, tune=tune)
     if not (return_state or collect_ends is not None):
         return out[..., 0]
     out = list(out)
@@ -107,7 +135,8 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                          method: str = "blocked", chunk: int = 64,
                          return_state: bool = False,
                          compute_dtype=None, intra: Optional[str] = None,
-                         collect_ends: Optional[jnp.ndarray] = None):
+                         collect_ends: Optional[jnp.ndarray] = None,
+                         tune=None):
     """Unified head-structured state-space interface (module docstring).
 
     u: (B, L, H, dh); delta: (B, L, H); B, C: (B, L, N) (shared across the
@@ -117,17 +146,35 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
 
     ``A`` selects the variant:
       * (H,)   — Mamba-2/SSD scalar per-head decay. ``method``:
-                 'blocked' (single (T,T)·(T,dh·N) matmul per head per chunk
-                 — the hot path) | 'sequential' (reference / short L).
+                 'blocked' (single-matmul chunk evaluation — the hot path)
+                 | 'sequential' (reference / short L). ``intra`` picks the
+                 blocked in-chunk form: 'quad' (state-form dec @ b, the
+                 default) | 'dual' (C·Bᵀ attention-like contraction straight
+                 to outputs — wins when dh ≫ T; see _blocked_ssm_heads).
       * (H, N) — Mamba-1 per-(channel, state) decay; requires dh == 1 and
                  accepts every per-channel ``method`` ('blocked' | 'chunked'
                  | 'fused_seq' | 'sequential' | 'associative', plus
-                 ``intra`` for 'blocked').
+                 ``intra`` ∈ ('matmul', 'assoc') for 'blocked').
+
+    ``tune``: None (off) | "auto" | cache path | TuneCache — resolve
+    (method, chunk, intra) from the shape-keyed tuning cache at trace time;
+    the explicit arguments are the miss fallback (repro/tune).
 
     Returns y (B, L, H, dh) [, h_last (B, H, dh, N)]
     [, h_ends (B, S, H, dh, N)].
     """
     Bsz, L, H, P = u.shape
+    if tune is not None:
+        kn = _tuned_knobs(
+            "selective_scan" if A.ndim == 2 else "selective_scan_heads",
+            tune, B=Bsz, L=L, D=(H if A.ndim == 2 else 0),
+            N=B.shape[-1], H=(0 if A.ndim == 2 else H),
+            dh=(0 if A.ndim == 2 else P), dtype=u.dtype,
+            positions=positions)
+        if kn:
+            method = kn.get("method", method)
+            chunk = kn.get("chunk", chunk)
+            intra = kn.get("intra", intra)
     if A.ndim == 2:
         # Mamba-1 degenerate case: fold dh into the channel axis and run the
         # per-channel evaluators.
@@ -146,7 +193,8 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
         jnp.promote_types(u.dtype, jnp.float32)
     if method == "blocked":
         y, h_last, h_ends = _blocked_ssm_heads(
-            u, delta, A, B, C, D, positions, h0, cdt, chunk, collect_ends)
+            u, delta, A, B, C, D, positions, h0, cdt, chunk, collect_ends,
+            intra=intra)
     elif method == "sequential":
         y, h_last, h_ends = _seq_scan_heads(
             u, delta, A, B, C, D, positions, h0, cdt, collect_ends)
@@ -374,7 +422,7 @@ def _fused_seq_scan(u, delta, A, B, C, D, positions, h0, cdt,
 # ---------------------------------------------------------------------------
 
 def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
-                       cdt, chunk, collect_ends=None):
+                       cdt, chunk, collect_ends=None, intra=None):
     """Block-parallel schedule, per-head scalar decay — the SSD hot path.
 
     The same schedule as ``_blocked_ssm`` but the decay depends only on
@@ -382,20 +430,46 @@ def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
 
         dec[i,j] = exp(s_i − s_j)·[j ≤ i]·[no reset in (j, i]]   (s = cumsum Δ·A)
 
-    is a single (T, T) matrix per (b, h) — NOT (T, T, D, N) — and every
-    in-chunk state is produced by ONE matmul-shaped contraction
+    is a single (T, T) matrix per (b, h) — NOT (T, T, D, N). ``intra``
+    selects how the in-chunk operator is evaluated against it:
 
-        h[i, p, n] = Σ_j dec[i,j] · (Δ·u ⊗ B)[j, p, n]        ((T,T)·(T,dh·N))
+      * ``"quad"`` (default, ``None``) — the state form: every in-chunk
+        state is produced by ONE matmul-shaped contraction
 
-    per head, with y = C·h fused in the chunk body. No per-(d, n) batching
-    anywhere: the MXU sees dense (T, T) × (T, dh·N) work. The (B, L, H, dh, N)
-    state trajectory is never materialized — only the current chunk's
-    (B, T, H, dh, N) slice is live, and the chunk body is checkpointed so
-    backward residuals stay at the raw inputs.
+          h[i, p, n] = Σ_j dec[i,j] · (Δ·u ⊗ B)[j, p, n]    ((T,T)·(T,dh·N))
+
+        per head, with y = C·h fused in the chunk body. T²·dh·N FLOPs per
+        head per chunk; the in-chunk (T, dh, N) states are live (and are
+        what ``collect_ends`` samples).
+      * ``"dual"`` — the attention-like form (structured-state-space
+        duality, the 'quadratic mode' of SSD): contract straight to outputs
+        through the (T, T) Gram matrix
+
+          G[i,j]    = dec[i,j] · (C_i · B_j)
+          y[i,p]    = Σ_j G[i,j] · (Δ·u)[j,p]  +  cin_i · (C_i · h_in)[p]
+
+        plus one decay-weighted reduction for the chunk-final carry state.
+        T²·(dh + N) + T·dh·N FLOPs — beats quad when dh ≫ T (the in-chunk
+        states are never formed, so their T·dh·N cost disappears from the
+        T² term). Segment-end samples for ``collect_ends`` are rebuilt only
+        at the (B, S) sampled rows.
+
+    Both forms evaluate the identical operator (parity to f32 tolerance).
+    The (B, L, H, dh, N) state trajectory is never materialized either way,
+    and the chunk body is checkpointed so backward residuals stay at the
+    raw inputs.
+
+    ``intra="quad"`` is an exact pin of the default path (same
+    ``_HEADS_CHUNK_CAP`` clamp, same trace); ``"dual"`` clamps at its own
+    ``_HEADS_DUAL_CHUNK_CAP``. Within those bounds the chunk is the
+    autotuner's (repro/tune) measured decision.
     """
+    if intra not in (None, "quad", "dual"):
+        raise ValueError(f"unknown heads blocked intra mode {intra!r}")
     Bsz, L, H, P = u.shape
     N = B.shape[-1]
-    T = min(chunk, L, _HEADS_CHUNK_CAP)
+    T = min(chunk, L, _HEADS_DUAL_CHUNK_CAP if intra == "dual"
+            else _HEADS_CHUNK_CAP)
     A32 = A.astype(cdt)
     reset = (positions == 0) if positions is not None else \
         jnp.zeros((Bsz, L), bool)
@@ -445,11 +519,54 @@ def _blocked_ssm_heads(u, delta, A, B, C, D, positions, h0,
         y = jnp.einsum("bihpn,bin->bihp", h, Cc.astype(cdt))
         return (h[:, -1], acc), y
 
+    @jax.checkpoint
+    def chunk_step_dual(carry, xs):
+        h_in, acc = carry
+        uc, dc, Bc, Cc, rc, ci = xs  # (B,T,H,P), (B,T,H), (B,T,N)×2, (B,T)
+        d32 = dc.astype(cdt)
+        la = d32 * A32                                   # (B,T,H) log decay
+        s = jnp.cumsum(la, axis=1)
+        rid = jnp.cumsum(rc.astype(jnp.int32), axis=1)   # resets ≤ i
+        m = (rid[:, :, None] == rid[:, None, :]) & tril[None]    # (B,T,T)
+        mm = m[..., None]
+        diff = s[:, :, None] - s[:, None, :]             # (B,T,T,H)
+        dec = jnp.where(mm, jnp.exp(jnp.where(mm, diff, 0.0)), 0.0)
+        B32 = Bc.astype(cdt)
+        C32 = Cc.astype(cdt)
+        du = d32[..., None] * uc.astype(cdt)             # (B,T,H,P)  Δ·u
+        # dual form: fold the (C_i · B_j) Gram matrix into the decay and
+        # contract straight to outputs — the (B,T,H,dh,N) in-chunk states
+        # are never formed
+        G = dec * jnp.einsum("bin,bjn->bij", C32, B32)[..., None]  # (B,T,T,H)
+        y = jnp.einsum("bijh,bjhp->bihp", G, du)
+        cin = jnp.where((rid == 0)[..., None], jnp.exp(s), 0.0)    # (B,T,H)
+        y = y + cin[..., None] * jnp.einsum("bhpn,bin->bihp", h_in, C32)
+        # chunk-final carry state: one decay-weighted reduction per head
+        h_out = jnp.einsum("bjh,bjhp,bjn->bhpn", dec[:, -1], du, B32) + \
+            cin[:, -1][..., None, None] * h_in
+        if collect:
+            # rebuild states only at the sampled segment-end rows: gather
+            # the (B, S) rows of dec/cin and redo the (S, T) contraction
+            local = collect_ends - ci * T                # (B, S)
+            ok = (local >= 0) & (local < T)
+            lcl = jnp.clip(local, 0, T - 1)
+            dec_e = jnp.take_along_axis(
+                dec, jnp.broadcast_to(lcl[:, :, None, None],
+                                      (Bsz, nseg, T, H)), axis=1)
+            cin_e = jnp.take_along_axis(
+                cin, jnp.broadcast_to(lcl[:, :, None], (Bsz, nseg, H)),
+                axis=1)
+            sel = jnp.einsum("bsjh,bjhp,bjn->bshpn", dec_e, du, B32) + \
+                cin_e[..., None, None] * h_in[:, None]
+            acc = acc + jnp.where(ok[..., None, None, None], sel, 0)
+        return (h_out, acc), y
+
     xs = tuple(jnp.moveaxis(x.reshape((Bsz, nc, T) + x.shape[2:]), 1, 0)
                for x in (u, delta, B, C, reset))
     acc0 = jnp.zeros((Bsz, nseg, H, P, N), cdt) if collect else \
         jnp.zeros((), cdt)
-    (h_last, h_ends), ys = jax.lax.scan(chunk_step, (h0, acc0),
+    body = chunk_step_dual if intra == "dual" else chunk_step
+    (h_last, h_ends), ys = jax.lax.scan(body, (h0, acc0),
                                         xs + (jnp.arange(nc),))
     y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Lp, H, P)[:, :L]
     if D is not None:

@@ -42,25 +42,27 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0):
 # selective scan
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
-def _scan_padded(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _scan_padded(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule,
+                 sub_t):
     y, _ = _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk,
-                          schedule)
+                          schedule, sub_t)
     return y
 
 
-def _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule):
+def _scan_fwd_rule(u, delta, At, B, C, Dp, pos, block_d, chunk, schedule,
+                   sub_t):
     y, ckpts = scan_k.selective_scan_fwd_pallas(
         u, delta, At, B, C, Dp, pos, block_d=block_d, chunk=chunk,
-        schedule=schedule)
+        schedule=schedule, sub_t=sub_t)
     return y, (u, delta, At, B, C, Dp, pos, ckpts)
 
 
-def _scan_bwd_rule(block_d, chunk, schedule, res, dy):
+def _scan_bwd_rule(block_d, chunk, schedule, sub_t, res, dy):
     u, delta, At, B, C, Dp, pos, ckpts = res
     du, ddelta, dB_p, dC_p, dA_p, dD_p = scan_k.selective_scan_bwd_pallas(
         u, delta, At, B, C, Dp, pos, ckpts, dy, block_d=block_d, chunk=chunk,
-        schedule=schedule)
+        schedule=schedule, sub_t=sub_t)
     return (du.astype(u.dtype), ddelta.astype(delta.dtype),
             dA_p.sum(0).astype(At.dtype), dB_p.sum(1).astype(B.dtype),
             dC_p.sum(1).astype(C.dtype), dD_p.sum(0).astype(Dp.dtype),
@@ -70,21 +72,54 @@ def _scan_bwd_rule(block_d, chunk, schedule, res, dy):
 _scan_padded.defvjp(_scan_fwd_rule, _scan_bwd_rule)
 
 
+def _resolve_tune(op, tune, *, B, L, D=0, N=0, H=0, dh=0, dtype, positions):
+    """Resolve the measured winner for one call site from the tuning cache.
+
+    Unlike the xla-only resolver in core/ssm.py, this level owns the
+    backend decision too: a pallas winner flips ``backend`` and carries
+    (schedule, pchunk, sub_t); an xla winner carries (method, chunk, intra).
+    Returns {} on miss (→ the caller's explicit arguments stand).
+    """
+    from repro.tune import tuned       # lazy: repro.tune imports this module
+    return tuned(op, cache=None if tune == "auto" else tune,
+                 B=B, L=L, D=D, N=N, H=H, dh=dh, dtype=dtype,
+                 reset_density=None if positions is not None else 0.0) or {}
+
+
 def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
                    backend: str = "xla", block_d: int = scan_k.DEF_BLOCK_D,
                    chunk: int = scan_k.DEF_CHUNK_T, xla_chunk: int = 256,
                    xla_method: str = "blocked", xla_dtype=None,
-                   xla_intra=None, schedule: str = "blocked"):
+                   xla_intra=None, schedule: str = "blocked",
+                   sub_t=None, tune=None):
     """Fused segmented selective scan. See kernels/ref.py for semantics.
 
     u, delta: (B, L, Dm) | A: (Dm, N) | B, C: (B, L, N) | D: (Dm,) |
     positions: (B, L) i32 (reset where == 0) → y (B, L, Dm).
 
     ``schedule`` (pallas backend): 'blocked' (SSD-style subtile contraction,
-    the default hot path) | 'step' (per-step reference walk). Both wire the
-    same custom_vjp; ``xla_method='blocked'`` (+ optional ``xla_intra``) is
-    the XLA twin.
+    the default hot path; ``sub_t`` overrides its subtile) | 'step'
+    (per-step reference walk). Both wire the same custom_vjp;
+    ``xla_method='blocked'`` (+ optional ``xla_intra``) is the XLA twin.
+
+    ``tune``: None (off) | "auto" | cache path | TuneCache — resolve every
+    knob above (backend included) from the shape-keyed tuning cache; the
+    explicit arguments are the miss fallback (repro/tune).
     """
+    if tune is not None:
+        kn = _resolve_tune("selective_scan", tune, B=u.shape[0],
+                           L=u.shape[1], D=u.shape[2], N=A.shape[-1],
+                           dtype=u.dtype, positions=positions)
+        if kn:
+            backend = kn.get("backend", backend)
+            if backend == "pallas":
+                schedule = kn.get("schedule", schedule)
+                chunk = kn.get("pchunk", chunk)
+                sub_t = kn.get("sub_t", sub_t)
+            else:
+                xla_method = kn.get("method", xla_method)
+                xla_chunk = kn.get("chunk", xla_chunk)
+                xla_intra = kn.get("intra", xla_intra)
     if backend == "xla":
         return core_ssm.selective_scan(u, delta, A, B, C, D,
                                        positions=positions,
@@ -107,7 +142,7 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
     pos = positions if positions is not None else \
         jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
     posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
-    y = _scan_padded(up, dtp, At, Bp, Cp, Dp, posp, bd, T, schedule)
+    y = _scan_padded(up, dtp, At, Bp, Cp, Dp, posp, bd, T, schedule, sub_t)
     return y[:, :L, :Dm]
 
 
@@ -115,23 +150,29 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
 # head-structured selective scan (Mamba-2 / SSD, scalar per-head decay)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
-def _scan_heads_padded(u, delta, Ah, B, C, Dp, pos, chunk):
-    y, _ = _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _scan_heads_padded(u, delta, Ah, B, C, Dp, pos, chunk, schedule, sub_t):
+    y, _ = _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk,
+                                schedule, sub_t)
     return y
 
 
-def _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk):
+def _scan_heads_fwd_rule(u, delta, Ah, B, C, Dp, pos, chunk, schedule,
+                         sub_t):
     y, ckpts = scan_k.selective_scan_heads_fwd_pallas(
-        u, delta, Ah, B, C, Dp, pos, chunk=chunk)
+        u, delta, Ah, B, C, Dp, pos, chunk=chunk, schedule=schedule,
+        sub_t=sub_t)
     return y, (u, delta, Ah, B, C, Dp, pos, ckpts)
 
 
-def _scan_heads_bwd_rule(chunk, res, dy):
+def _scan_heads_bwd_rule(chunk, schedule, sub_t, res, dy):
+    # one backward serves both forward schedules: the ckpt contract is
+    # identical and the adjoint math is schedule-independent
     u, delta, Ah, B, C, Dp, pos, ckpts = res
     du, ddelta, dB_p, dC_p, dA_p, dD_p = \
         scan_k.selective_scan_heads_bwd_pallas(
-            u, delta, Ah, B, C, Dp, pos, ckpts, dy, chunk=chunk)
+            u, delta, Ah, B, C, Dp, pos, ckpts, dy, chunk=chunk,
+            sub_t=sub_t)
     return (du.astype(u.dtype), ddelta.astype(delta.dtype),
             dA_p.sum(0).astype(Ah.dtype), dB_p.sum(1).astype(B.dtype),
             dC_p.sum(1).astype(C.dtype), dD_p.sum(0).astype(Dp.dtype),
@@ -145,7 +186,9 @@ def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
                          backend: str = "xla",
                          chunk: int = scan_k.DEF_CHUNK_T,
                          xla_chunk: int = 64, xla_method: str = "blocked",
-                         xla_dtype=None, schedule: str = "blocked_heads"):
+                         xla_dtype=None, xla_intra=None,
+                         schedule: str = "blocked_heads",
+                         sub_t=None, tune=None):
     """Fused head-structured segmented selective scan (scalar per-head
     decay — Mamba-2/SSD). See core/ssm.py::selective_scan_heads for
     semantics; this wrapper adds backend dispatch.
@@ -153,20 +196,38 @@ def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
     u: (B, L, H, dh) | delta: (B, L, H) | A: (H,) | B, C: (B, L, N) |
     D: (H,) | positions: (B, L) i32 (reset where == 0) → y (B, L, H, dh).
 
-    ``backend='xla'`` routes to the core evaluators; ``backend='pallas'``
-    transposes to the head-major kernel layout ((B, H, L, dh)), pads L to
-    the chunk, and runs the ``blocked_heads`` kernels through a custom_vjp
-    (the transpose-contraction backward).
+    ``backend='xla'`` routes to the core evaluators (``xla_intra``:
+    'quad' | 'dual' in-chunk form); ``backend='pallas'`` transposes to the
+    head-major kernel layout ((B, H, L, dh)), pads L to the chunk, and runs
+    the ``schedule`` kernels ('blocked_heads' | 'blocked_heads_dual', with
+    optional subtile ``sub_t``) through a custom_vjp (the shared
+    transpose-contraction backward). ``tune`` resolves every knob —
+    backend included — from the shape-keyed tuning cache (repro/tune).
     """
+    if tune is not None:
+        kn = _resolve_tune("selective_scan_heads", tune, B=u.shape[0],
+                           L=u.shape[1], N=B.shape[-1], H=u.shape[2],
+                           dh=u.shape[3], dtype=u.dtype, positions=positions)
+        if kn:
+            backend = kn.get("backend", backend)
+            if backend == "pallas":
+                schedule = kn.get("schedule", schedule)
+                chunk = kn.get("pchunk", chunk)
+                sub_t = kn.get("sub_t", sub_t)
+            else:
+                xla_method = kn.get("method", xla_method)
+                xla_chunk = kn.get("chunk", xla_chunk)
+                xla_intra = kn.get("intra", xla_intra)
     if backend == "xla":
         return core_ssm.selective_scan_heads(u, delta, A, B, C, D,
                                              positions=positions,
                                              method=xla_method,
                                              chunk=xla_chunk,
-                                             compute_dtype=xla_dtype)
+                                             compute_dtype=xla_dtype,
+                                             intra=xla_intra)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
-    if schedule != "blocked_heads":
+    if schedule not in ("blocked_heads", "blocked_heads_dual"):
         raise ValueError(f"unknown heads schedule {schedule!r}")
     Bz, L, H, P = u.shape
     T = min(chunk, L)
@@ -181,7 +242,7 @@ def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
     pos = positions if positions is not None else \
         jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (Bz, L))
     posp = _pad_to(pos.astype(jnp.int32), 1, T, value=1)
-    y = _scan_heads_padded(uh, dth, Ah, Bp, Cp, Dp, posp, T)
+    y = _scan_heads_padded(uh, dth, Ah, Bp, Cp, Dp, posp, T, schedule, sub_t)
     return jnp.moveaxis(y, 1, 2)[:, :L]
 
 

@@ -58,6 +58,16 @@ Three schedules share this grid/BlockSpec structure (`schedule=` knob):
                   grads vectorized over the chunk, per-head dA/dD scalar
                   accumulators. Operands arrive head-major ((B, H, L, dh) /
                   (B, H, L)); ops.py does the layout transpose.
+  * ``blocked_heads_dual`` — the attention-like dual form of
+                  ``blocked_heads`` (structured-state-space duality): the
+                  (Tt, Tt) decay folds into a C·Bᵀ Gram matrix and outputs
+                  come straight from (Tt, Tt) @ (Tt, dh) matmuls without
+                  forming the in-chunk (Tt, dh, N) states — Tt²·(dh + N)
+                  FLOPs vs the quad form's Tt²·dh·N, the measured winner at
+                  dh ≫ Tt. Shares the ``blocked_heads`` backward kernel
+                  (identical ckpt contract; adjoint math is schedule-free).
+                  The quad-vs-dual pick, chunk, and subtile are shape-keyed
+                  autotuner decisions (repro/tune), not constants.
 """
 from __future__ import annotations
 
@@ -74,11 +84,25 @@ from repro.kernels.compat import tpu_compiler_params
 DEF_BLOCK_D = 128
 DEF_CHUNK_T = 256
 DEF_SUB_T = 16     # blocked schedule: in-chunk subtile for the M contraction
+#   (the *default* — every kernel entry takes an explicit ``sub_t`` so the
+#   shape-keyed autotuner (repro/tune) can sweep measured subtiles instead)
 INTERPRET = True   # flipped by ops.configure_for_tpu() on real hardware
 
 
-def _pick_subtile(T: int) -> int:
-    """Largest supported subtile length dividing the chunk."""
+def _pick_subtile(T: int, sub_t=None) -> int:
+    """Subtile length for a chunk of length T: the explicit (tuned) request
+    when given, else the largest supported default dividing the chunk.
+
+    A requested ``sub_t`` that does not divide T degrades to the largest
+    divisor ≤ the request instead of raising: tuned knobs resolve through
+    bucketed/nearest-key cache lookups, so a winner measured at one L can
+    legally arrive at a chunk it does not divide — the tuner must never
+    turn a working call into a trace-time error."""
+    if sub_t:
+        st = min(int(sub_t), T)
+        while T % st:
+            st -= 1
+        return st
     for tt in (DEF_SUB_T, 8, 4, 2, 1):
         if T % tt == 0:
             return tt
@@ -241,19 +265,95 @@ def _fwd_kernel_blocked_heads(pos_ref, u_ref, dt_ref, A_ref, Bm_ref, Cm_ref,
     jax.lax.fori_loop(0, nsub, sub, ())
 
 
+# ---------------------------------------------------------------------------
+# forward kernel — blocked_heads_dual (C·Bᵀ attention-like) schedule
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel_blocked_heads_dual(pos_ref, u_ref, dt_ref, A_ref, Bm_ref,
+                                   Cm_ref, Dp_ref, y_ref, ckpt_ref, h_ref, *,
+                                   sub_t):
+    """Dual-form twin of ``_fwd_kernel_blocked_heads`` (same grid, block
+    shapes, carry semantics, and ckpt output — so the quad backward kernel
+    serves both). Per subtile the masked decay folds into the (Tt, Tt)
+    C·Bᵀ Gram matrix and the outputs come straight from two matmuls,
+    without forming the (Tt, P, N) in-chunk states:
+
+        G        = dec ⊙ (C @ Bᵀ)                 (Tt, Tt)
+        y        = G @ (Δ·u)  +  cin·(C @ h_inᵀ)  (Tt,Tt)@(Tt,P)
+        h_new    = dec[last,:] @ bterm  +  cin[last]·h_in
+
+    FLOPs Tt²·(N + P) + Tt·P·N vs the quad form's Tt²·P·N — the measured
+    winner when dh ≫ Tt (see repro/tune; core/ssm.py has the XLA math).
+    """
+    T = u_ref.shape[2]
+    P = u_ref.shape[3]
+    N = Bm_ref.shape[2]
+    nsub = T // sub_t
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    ckpt_ref[0, 0, 0] = h_ref[...]
+    A = A_ref[0, 0]                                    # per-head scalar
+    Dp = Dp_ref[0, 0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (sub_t, sub_t), 1)
+    causal = ii >= jj
+
+    def sub(si, _):
+        t0 = si * sub_t
+        dt = dt_ref[0, 0, pl.ds(t0, sub_t)].astype(jnp.float32)   # (Tt,)
+        u_t = u_ref[0, 0, pl.ds(t0, sub_t), :].astype(jnp.float32)  # (Tt,P)
+        Bv = Bm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)   # (Tt, N)
+        Cv = Cm_ref[0, pl.ds(t0, sub_t), :].astype(jnp.float32)
+        r = pos_ref[0, pl.ds(t0, sub_t)] == 0                     # (Tt,)
+        s = jnp.cumsum(dt * A)                                    # (Tt,)
+        rid = jnp.cumsum(r.astype(jnp.int32))
+        m = (rid[:, None] == rid[None, :]) & causal               # (Tt, Tt)
+        diff = s[:, None] - s[None, :]
+        dec = jnp.where(m, jnp.exp(jnp.where(m, diff, 0.0)), 0.0)
+        du = dt[:, None] * u_t                                    # (Tt, P)
+        h_in = h_ref[...]                                         # (P, N)
+        G = dec * jnp.dot(Cv, Bv.T, preferred_element_type=jnp.float32)
+        cin = jnp.where(rid == 0, jnp.exp(s), 0.0)                # (Tt,)
+        y = jnp.dot(G, du, preferred_element_type=jnp.float32)
+        y = y + cin[:, None] * jnp.dot(Cv, h_in.T,
+                                       preferred_element_type=jnp.float32)
+        bt = Bv[:, None, :] * du[:, :, None]                      # (Tt,P,N)
+        h_new = jnp.dot(dec[-1][None, :], bt.reshape(sub_t, P * N),
+                        preferred_element_type=jnp.float32).reshape(P, N)
+        h_ref[...] = h_new + cin[-1] * h_in
+        y_ref[0, 0, pl.ds(t0, sub_t), :] = (y + Dp * u_t).astype(
+            y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, nsub, sub, ())
+
+
+_HEADS_FWD_KERNELS = {"blocked_heads": _fwd_kernel_blocked_heads,
+                      "blocked_heads_dual": _fwd_kernel_blocked_heads_dual}
+
+
 def selective_scan_heads_fwd_pallas(u, delta, Ah, Bm, Cm, Dp, positions,
                                     chunk: int = DEF_CHUNK_T,
+                                    schedule: str = "blocked_heads",
+                                    sub_t: Optional[int] = None,
                                     interpret: Optional[bool] = None):
     """Head-major shapes (already padded/transposed by ops.py):
     u (B, H, L, P); delta (B, H, L); Ah, Dp (H, 1); Bm, Cm (B, L, N);
-    positions (B, L) i32. Returns (y (B, H, L, P), ckpts (B, H, L/T, P, N))."""
+    positions (B, L) i32. ``schedule``: 'blocked_heads' (quad/state form) |
+    'blocked_heads_dual' (C·Bᵀ attention-like form; same ckpt contract).
+    Returns (y (B, H, L, P), ckpts (B, H, L/T, P, N))."""
     Bz, H, L, P = u.shape
     N = Bm.shape[-1]
     T = chunk
     nL = L // T
     grid = (Bz, H, nL)
-    kernel = functools.partial(_fwd_kernel_blocked_heads,
-                               sub_t=_pick_subtile(T))
+    if schedule not in _HEADS_FWD_KERNELS:
+        raise ValueError(f"unknown heads schedule {schedule!r}")
+    kernel = functools.partial(_HEADS_FWD_KERNELS[schedule],
+                               sub_t=_pick_subtile(T, sub_t))
     out_shape = (
         jax.ShapeDtypeStruct((Bz, H, L, P), u.dtype),
         jax.ShapeDtypeStruct((Bz, H, nL, P, N), jnp.float32),
@@ -287,11 +387,13 @@ def selective_scan_fwd_pallas(u, delta, At, Bm, Cm, Dp, positions,
                               block_d: int = DEF_BLOCK_D,
                               chunk: int = DEF_CHUNK_T,
                               schedule: str = "step",
+                              sub_t: Optional[int] = None,
                               interpret: Optional[bool] = None):
     """Shapes (already padded by ops.py): u, delta (B, L, Dm); At (N, Dm);
     Bm, Cm (B, L, N); Dp (1, Dm); positions (B, L) i32.
     ``schedule``: 'step' (per-step VPU walk) | 'blocked' (SSD-style subtile
-    contraction). Returns (y (B, L, Dm), ckpts (B, L/T, N, Dm))."""
+    contraction; ``sub_t`` overrides the default subtile).
+    Returns (y (B, L, Dm), ckpts (B, L/T, N, Dm))."""
     Bz, L, Dm = u.shape
     N = At.shape[0]
     T, bd = chunk, block_d
@@ -299,7 +401,7 @@ def selective_scan_fwd_pallas(u, delta, At, Bm, Cm, Dp, positions,
     grid = (Bz, nD, nL)
     if schedule == "blocked":
         kernel = functools.partial(_fwd_kernel_blocked,
-                                   sub_t=_pick_subtile(T))
+                                   sub_t=_pick_subtile(T, sub_t))
     elif schedule == "step":
         kernel = _fwd_kernel
     else:
@@ -640,10 +742,14 @@ def _bwd_kernel_blocked_heads(pos_ref, u_ref, dt_ref, A_ref, Bm_ref, Cm_ref,
 def selective_scan_heads_bwd_pallas(u, delta, Ah, Bm, Cm, Dp, positions,
                                     ckpts, dy,
                                     chunk: int = DEF_CHUNK_T,
+                                    sub_t: Optional[int] = None,
                                     interpret: Optional[bool] = None):
     """Head-major shapes as in the forward. Returns (du (B,H,L,P),
     ddelta (B,H,L), dB_partial (B,H,L,N), dC_partial (B,H,L,N),
-    dA_partial (B,H,1), dD_partial (B,H,1))."""
+    dA_partial (B,H,1), dD_partial (B,H,1)).
+
+    Serves BOTH forward schedules: the adjoint math is schedule-independent
+    and the dual forward writes the same chunk-entry ckpts."""
     Bz, H, L, P = u.shape
     N = Bm.shape[-1]
     T = chunk
@@ -652,7 +758,7 @@ def selective_scan_heads_bwd_pallas(u, delta, Ah, Bm, Cm, Dp, positions,
     rev = lambda l: nL - 1 - l                 # walk the L dimension backwards
     f32 = jnp.float32
     kernel = functools.partial(_bwd_kernel_blocked_heads,
-                               sub_t=_pick_subtile(T))
+                               sub_t=_pick_subtile(T, sub_t))
     scratch = [
         pltpu.VMEM((T + 1, P, N), f32),        # recomputed h trajectory
         pltpu.VMEM((T, P, N), f32),            # adjoint trajectory g
@@ -703,6 +809,7 @@ def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
                               block_d: int = DEF_BLOCK_D,
                               chunk: int = DEF_CHUNK_T,
                               schedule: str = "step",
+                              sub_t: Optional[int] = None,
                               interpret: Optional[bool] = None):
     """Returns (du, ddelta, dB_partial (B,nD,L,N), dC_partial (B,nD,L,N),
     dA_partial (B,N,Dm), dD_partial (B,1,Dm))."""
@@ -715,7 +822,7 @@ def selective_scan_bwd_pallas(u, delta, At, Bm, Cm, Dp, positions, ckpts, dy,
     f32 = jnp.float32
     if schedule == "blocked":
         kernel = functools.partial(_bwd_kernel_blocked,
-                                   sub_t=_pick_subtile(T))
+                                   sub_t=_pick_subtile(T, sub_t))
         scratch = [
             pltpu.VMEM((T + 1, N, bd), f32),   # recomputed h trajectory
             pltpu.VMEM((T, N, bd), f32),       # adjoint trajectory g

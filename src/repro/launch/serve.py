@@ -94,6 +94,14 @@ class ServeEngine:
         self.refill_threshold = max(1, num_slots // 2) \
             if refill_threshold is None else refill_threshold
 
+        cfg = getattr(model, "cfg", None)
+        if cfg is not None and getattr(cfg, "scan_tune", "off") != "off":
+            # warm the scan autotuning cache for every prefill shape this
+            # engine can compile — (prefill_rows, bucket) — so the packed
+            # forwards resolve measured schedule winners at trace time
+            from repro.tune import warm_for_config
+            warm_for_config(cfg, [(prefill_rows, b) for b in self.buckets])
+
         self.cache = model.init_cache(num_slots, max_len)
         self.cache_len = jnp.zeros((num_slots,), jnp.int32)
         self.cur_tok = jnp.zeros((num_slots, 1), jnp.int32)
@@ -310,12 +318,18 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--policy", default="first_fit",
                     choices=["first_fit", "sequential", "sorted_greedy"])
+    ap.add_argument("--scan-tune", default="off",
+                    help="off | auto | <cache path>: shape-keyed scan "
+                         "autotuning (the engine warms the cache for its "
+                         "prefill buckets at startup)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.tiny:
         cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, vocab=512,
                                   dtype="float32", scan_chunk=64)
+    if args.scan_tune != "off":
+        cfg = dataclasses.replace(cfg, scan_tune=args.scan_tune)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, args.slots, args.max_len,

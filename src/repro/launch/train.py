@@ -48,6 +48,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--model-axis", type=int, default=1,
                     help="TP size on the local mesh")
+    ap.add_argument("--scan-tune", default="off",
+                    help="off | auto | <cache path>: shape-keyed scan "
+                         "autotuning (repro/tune); the cache is warmed for "
+                         "the training shape before the first step")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower+compile on the 16x16 production mesh")
     args = ap.parse_args()
@@ -61,6 +65,13 @@ def main():
             f"{args.arch} --shape train_4k --mesh both")
 
     cfg = get_config(args.arch)
+    if args.scan_tune != "off":
+        # measure-or-load the scan schedule winners for THIS run's shape
+        # bucket before any step compiles — the model then resolves its
+        # scan knobs from the cache at trace time (configs/base.py)
+        cfg = dataclasses.replace(cfg, scan_tune=args.scan_tune)
+        from repro.tune import warm_for_config
+        warm_for_config(cfg, [(args.rows, args.seq_len)])
     model = build_model(cfg)
     corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=0))
     loader = PackingLoader(corpus, LoaderConfig(

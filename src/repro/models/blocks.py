@@ -386,6 +386,13 @@ def init_mamba(key, cfg: ArchConfig) -> Dict[str, Any]:
     }
 
 
+def _cfg_tune(cfg: ArchConfig):
+    """ArchConfig.scan_tune → the ``tune=`` argument of the scan entry
+    points (None keeps every call site bit-identical to the pre-tuner
+    code path)."""
+    return None if cfg.scan_tune == "off" else cfg.scan_tune
+
+
 def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                 collect_ends=None):
     B, L, d = x.shape
@@ -410,7 +417,8 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         y, h_ends = core_ssm.selective_scan(
             x_c, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
             method=cfg.scan_impl, chunk=cfg.scan_chunk,
-            intra=cfg.scan_intra, collect_ends=collect_ends)
+            intra=cfg.scan_intra, collect_ends=collect_ends,
+            tune=_cfg_tune(cfg))
         state = {"conv": _conv_tail_ends(x_in, collect_ends,
                                          _ends_lens(ctx, collect_ends),
                                          cfg.d_conv),
@@ -427,7 +435,7 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         y, h_last = core_ssm.selective_scan(
             x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
             method=cfg.scan_impl, chunk=cfg.scan_chunk, return_state=True,
-            intra=cfg.scan_intra)
+            intra=cfg.scan_intra, tune=_cfg_tune(cfg))
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
         y = y * jax.nn.silu(z)
@@ -439,7 +447,8 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                             xla_dtype=(None if cfg.scan_dtype == "float32"
                                        else cfg.scan_dtype),
                             xla_intra=cfg.scan_intra,
-                            schedule=cfg.pallas_schedule)
+                            schedule=cfg.pallas_schedule,
+                            tune=_cfg_tune(cfg))
     y = y * jax.nn.silu(z)
     return x + y @ p["out_proj"].astype(x.dtype)
 
@@ -541,8 +550,8 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         # sample the head-structured state at each segment end.
         y, h_ends = core_ssm.selective_scan_heads(
             u_h, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
-            method="blocked", chunk=cfg.scan_chunk,
-            collect_ends=collect_ends)
+            method="blocked", chunk=cfg.scan_chunk, intra=cfg.scan_intra,
+            collect_ends=collect_ends, tune=_cfg_tune(cfg))
         state = {"conv": _conv_tail_ends(x_in, collect_ends,
                                          _ends_lens(ctx, collect_ends),
                                          cfg.d_conv),
@@ -558,7 +567,8 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         pos_nz = jnp.where(valid, ctx.positions, 1)
         y, h_last = core_ssm.selective_scan_heads(
             u_h, delta, A, Bm, Cm, p["D"], positions=pos_nz,
-            method="blocked", chunk=cfg.scan_chunk, return_state=True)
+            method="blocked", chunk=cfg.scan_chunk, return_state=True,
+            intra=cfg.scan_intra, tune=_cfg_tune(cfg))
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
         y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
@@ -568,7 +578,9 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                                   xla_chunk=cfg.scan_chunk,
                                   xla_dtype=(None
                                              if cfg.scan_dtype == "float32"
-                                             else cfg.scan_dtype))
+                                             else cfg.scan_dtype),
+                                  xla_intra=cfg.scan_intra,
+                                  tune=_cfg_tune(cfg))
     y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
     return x + y @ p["out_proj"].astype(x.dtype)
 

@@ -1,0 +1,116 @@
+"""Shape-keyed autotuning for the scan hot path.
+
+PackMamba's core move is picking the best parallelization per tensor shape
+(paper §4); this package replaces the repo's frozen guesses (``DEF_SUB_T``,
+the matmul-intra chunk cap, ``_HEADS_CHUNK_CAP``, the CPU-vs-MXU intra
+auto-pick) with *measured, cached* decisions:
+
+  space.py   the declarative tunable space per operator + shape-key buckets
+  runner.py  interleaved min-of-rounds measurement sweeps per shape key
+  cache.py   persistent ``TUNE_CACHE.json`` — fingerprinted by device kind /
+             platform / jax version, bucketed lookup, nearest-key fallback
+
+``tuned()`` below is the one resolver every call site threads through
+(core/ssm.py, kernels/ops.py via their ``tune=`` argument; model configs
+via ``ArchConfig.scan_tune``). It is trace-time Python over static shapes:
+a cache miss falls back to the caller's defaults and *never* blocks —
+measurement happens only in explicit ``warm_for_config`` / runner sweeps.
+
+    cfg = dataclasses.replace(cfg, scan_tune="auto")   # or a cache path
+    # launch/train.py and launch/serve.py warm the cache for their shape
+    # buckets at startup; `make bench-tune` runs the standalone sweep.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.tune.space import (OPS, ShapeKey, shape_key, space_for,  # noqa: F401
+                              candidate_name, l_bucket, reset_bucket)
+from repro.tune.cache import (TuneCache, fingerprint, get_cache,  # noqa: F401
+                              set_cache, reset_caches, default_path)
+
+
+def tuned(op: str, *, B: int, L: int, D: int = 0, N: int = 0, H: int = 0,
+          dh: int = 0, dtype="float32", reset_density: Optional[float] = None,
+          cache=None, default: Optional[Dict] = None) -> Dict:
+    """Measured knobs for one operator invocation, or the defaults on miss.
+
+    ``cache``: a TuneCache, a path, or None (process-default cache —
+    $REPRO_TUNE_CACHE or ./TUNE_CACHE.json). Lookup is exact on the
+    bucketed key, then nearest-key within the op, then ``default`` (or {});
+    a stale cache (fingerprint mismatch) always misses.
+    """
+    c = cache if isinstance(cache, TuneCache) else get_cache(cache)
+    key = shape_key(op, dtype=dtype, B=B, L=L, D=D, N=N, H=H, dh=dh,
+                    reset_density=reset_density)
+    knobs, _how = c.lookup(key)
+    if knobs is None:
+        return dict(default) if default else {}
+    return {**(default or {}), **knobs}
+
+
+def config_shape_args(cfg, B: int, L: int) -> Optional[Dict]:
+    """Map an ArchConfig's scan operator to ``tuned()`` shape kwargs.
+
+    Returns None for families without a selective-scan hot path."""
+    kinds = set(cfg.unit)
+    if "mamba2" in kinds:
+        return dict(op="selective_scan_heads", B=B, L=L, N=cfg.d_state,
+                    H=cfg.n_ssm_heads, dh=cfg.ssm_hd, dtype=cfg.dtype)
+    if "mamba" in kinds:
+        return dict(op="selective_scan", B=B, L=L, D=cfg.d_inner,
+                    N=cfg.d_state, dtype=cfg.dtype)
+    return None
+
+
+def tuned_config_overrides(cfg, B: int, L: int, cache=None) -> Dict:
+    """Cache winner for ``cfg``'s scan op at (B, L) as ArchConfig override
+    fields — what launch/perf.py's ``tuned`` hillclimb variant applies
+    instead of hand-picked knob combinations. {} when nothing is cached."""
+    args = config_shape_args(cfg, B, L)
+    if args is None:
+        return {}
+    op = args.pop("op")
+    kn = tuned(op, cache=cache, **args)
+    if not kn:
+        return {}
+    out: Dict = {}
+    if kn.get("backend") == "pallas":
+        out["use_pallas"] = True
+        if op == "selective_scan" and "schedule" in kn:
+            out["pallas_schedule"] = kn["schedule"]
+    else:
+        if "method" in kn:
+            out["scan_impl"] = kn["method"]
+        if "chunk" in kn:
+            out["scan_chunk"] = kn["chunk"]
+        if "intra" in kn:
+            out["scan_intra"] = kn["intra"]
+    return out
+
+
+def warm_for_config(cfg, shapes, cache: Optional[TuneCache] = None,
+                    rounds: int = 3, save: bool = True, verbose: bool = True):
+    """Warm the tuning cache for a config's scan shapes at launcher startup.
+
+    ``shapes``: iterable of (rows, seq_len) the launcher will actually run
+    (training batch shape, serve prefill buckets, …). Shapes whose bucketed
+    key is already cached are skipped; new winners are measured with the
+    runner and saved back to the cache file. Returns the cache (None when
+    the config has no scan hot path or tuning is off)."""
+    if getattr(cfg, "scan_tune", "off") == "off":
+        return None
+    from repro.tune import runner
+    path = None if cfg.scan_tune == "auto" else cfg.scan_tune
+    c = cache if cache is not None else get_cache(path)
+    touched = False
+    for rows, L in shapes:
+        args = config_shape_args(cfg, rows, L)
+        if args is None:
+            return None
+        op = args.pop("op")
+        touched |= runner.ensure(op, cache=c, rounds=rounds,
+                                 verbose=verbose, **args)
+    if touched and save:
+        c.save()
+    return c

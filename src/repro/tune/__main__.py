@@ -1,0 +1,7 @@
+"""``python -m repro.tune --check [TUNE_CACHE.json]`` — cache health check
+(delegates to cache._main; a dedicated entry avoids runpy re-executing the
+already-imported cache module)."""
+from repro.tune.cache import _main
+
+if __name__ == "__main__":
+    _main()

@@ -1,0 +1,220 @@
+"""Persistent shape-keyed tuning cache (``TUNE_CACHE.json``).
+
+The cache maps ``ShapeKey`` → measured-best knob dict. It is fingerprinted
+by (device kind, platform, jax version): measurements from a v5e are
+meaningless on a CPU host, so a fingerprint mismatch marks the cache
+*stale* — entries are kept for reporting but never served, which forces a
+re-tune (``lookup`` misses, ``tuned()`` falls back to defaults).
+
+Lookup never blocks on an unseen shape: exact bucketed hit first, then the
+nearest key for the same operator (log-distance over the shape axes), then
+``None`` — the caller's hard-coded defaults. Tuning is something launchers
+do at startup (``warm``), not something the hot path ever waits on.
+
+CLI (the ``make tune-check`` gate):
+
+    PYTHONPATH=src python -m repro.tune.cache --check [TUNE_CACHE.json]
+
+exits 0 with an OK/STALE report (stale is a clean, expected state on any
+machine other than the one that tuned), 1 only when the file is missing or
+unreadable.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.tune.space import ShapeKey
+
+SCHEMA = 1
+DEFAULT_PATH = "TUNE_CACHE.json"
+ENV_PATH = "REPRO_TUNE_CACHE"
+
+
+def fingerprint() -> Dict[str, str]:
+    import jax
+    dev = jax.devices()[0]
+    return {"schema": SCHEMA, "device_kind": str(dev.device_kind),
+            "platform": str(dev.platform), "jax": jax.__version__}
+
+
+class TuneCache:
+    """In-memory view of one tuning-cache file."""
+
+    def __init__(self, fp: Optional[Dict] = None):
+        self.fp = dict(fp) if fp is not None else fingerprint()
+        self.entries: Dict[str, Dict] = {}     # key.encode() -> record
+        self.stale_entries: Dict[str, Dict] = {}
+        self.stale_fp: Optional[Dict] = None   # fingerprint of the above
+        self.path: Optional[str] = None
+
+    # ------------------------------------------------------------ mutation
+    def put(self, key: ShapeKey, knobs: Dict, us: float,
+            candidates: int = 0) -> None:
+        self.entries[key.encode()] = {
+            "knobs": dict(knobs), "us": round(float(us), 1),
+            "candidates": int(candidates)}
+
+    # ------------------------------------------------------------- lookup
+    def get(self, key: ShapeKey) -> Optional[Dict]:
+        rec = self.entries.get(key.encode())
+        return dict(rec["knobs"]) if rec else None
+
+    def lookup(self, key: ShapeKey, nearest: bool = True,
+               max_distance: float = 4.0
+               ) -> Tuple[Optional[Dict], Optional[str]]:
+        """Returns (knobs, how) — how ∈ {"exact", "nearest", None}.
+
+        The nearest-key fallback is bounded by ``max_distance``: knob
+        winners are regime-specific (e.g. the whole-trajectory
+        'associative' method is only offered at short L because it
+        materializes (B, L, D, N)), so serving them to an arbitrarily
+        distant shape could trade a miss for an OOM. Beyond the cutoff the
+        lookup misses and the caller's defaults stand — the documented
+        never-blocks contract. At the default weights, 4.0 ≈ two octaves
+        of L or four octaves of a secondary axis."""
+        hit = self.get(key)
+        if hit is not None:
+            return hit, "exact"
+        if not nearest:
+            return None, None
+        best, best_d = None, math.inf
+        for ks, rec in self.entries.items():
+            k = ShapeKey.decode(ks)
+            if k.op != key.op:
+                continue
+            d = _distance(key, k)
+            if d < best_d:
+                best, best_d = rec, d
+        if best is None or best_d > max_distance:
+            return None, None
+        return dict(best["knobs"]), "nearest"
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: Optional[str] = None) -> str:
+        """Write the cache. Quarantined foreign-fingerprint entries are
+        written back under a ``stale`` section — saving on machine B must
+        not destroy machine A's measurements in a shared/committed file
+        (A's ``load`` resurrects them from the stale section)."""
+        path = path or self.path or DEFAULT_PATH
+        doc = {"fingerprint": self.fp,
+               "entries": {k: self.entries[k] for k in sorted(self.entries)}}
+        if self.stale_entries:
+            doc["stale"] = {"fingerprint": self.stale_fp,
+                            "entries": {k: self.stale_entries[k]
+                                        for k in sorted(self.stale_entries)}}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        self.path = path
+        return path
+
+    @property
+    def stale(self) -> bool:
+        return bool(self.stale_entries)
+
+    @classmethod
+    def load(cls, path: str, fp: Optional[Dict] = None) -> "TuneCache":
+        """Load ``path``; entries measured under a different fingerprint are
+        quarantined in ``stale_entries`` (lookup never serves them, save
+        preserves them). A ``stale`` section whose fingerprint matches the
+        CURRENT machine is resurrected as live entries — round-tripping a
+        shared cache file through a foreign machine loses nothing."""
+        with open(path) as f:
+            doc = json.load(f)
+        current = dict(fp) if fp is not None else fingerprint()
+        cache = cls(fp=current)
+        cache.path = path
+        buckets = [(doc.get("fingerprint"), dict(doc.get("entries", {})))]
+        st = doc.get("stale")
+        if st:
+            buckets.append((st.get("fingerprint"),
+                            dict(st.get("entries", {}))))
+        for bfp, entries in buckets:
+            if bfp == current:
+                cache.entries.update(entries)
+            elif entries:
+                cache.stale_entries.update(entries)
+                cache.stale_fp = bfp
+        return cache
+
+
+def _distance(a: ShapeKey, b: ShapeKey) -> float:
+    """Log-scale shape distance for the nearest-key fallback."""
+    def lg(x, y):
+        return abs(math.log2(max(x, 1)) - math.log2(max(y, 1)))
+    d = 2.0 * lg(a.Lb, b.Lb)            # schedule winners flip fastest in L
+    d += lg(a.D, b.D) + lg(a.N, b.N) + lg(a.H, b.H) + lg(a.dh, b.dh)
+    d += 0.5 * lg(a.B, b.B)
+    if a.resets != b.resets:
+        d += 0.5
+    if a.dtype != b.dtype:
+        d += 0.25
+    return d
+
+
+# ---------------------------------------------------------------------------
+# process-wide cache registry (what ``tuned()`` resolves against)
+# ---------------------------------------------------------------------------
+
+_CACHES: Dict[str, TuneCache] = {}
+
+
+def default_path() -> str:
+    return os.environ.get(ENV_PATH, DEFAULT_PATH)
+
+
+def get_cache(path: Optional[str] = None) -> TuneCache:
+    """Memoized cache handle for ``path`` (default: $REPRO_TUNE_CACHE or
+    ./TUNE_CACHE.json). A missing file yields an empty, writable cache."""
+    path = path or default_path()
+    if path not in _CACHES:
+        if os.path.exists(path):
+            _CACHES[path] = TuneCache.load(path)
+        else:
+            c = TuneCache()
+            c.path = path
+            _CACHES[path] = c
+    return _CACHES[path]
+
+
+def set_cache(cache: TuneCache, path: Optional[str] = None) -> None:
+    _CACHES[path or cache.path or default_path()] = cache
+
+
+def reset_caches() -> None:
+    """Drop all memoized handles (tests)."""
+    _CACHES.clear()
+
+
+def _main():
+    import argparse
+    ap = argparse.ArgumentParser(description="tune-cache health check")
+    ap.add_argument("path", nargs="?", default=None)
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+    path = args.path or default_path()
+    if not os.path.exists(path):
+        print(f"# tune-check: MISSING {path} (run `make bench-tune`)")
+        raise SystemExit(1)
+    try:
+        cache = TuneCache.load(path)
+    except Exception as e:  # corrupt file
+        print(f"# tune-check: UNREADABLE {path}: {e}")
+        raise SystemExit(1)
+    fp = cache.fp
+    if cache.stale:
+        print(f"# tune-check: STALE {path} — {len(cache.stale_entries)} "
+              f"entry(ies) measured under a different fingerprint; current "
+              f"{fp['platform']}/{fp['device_kind']}/jax-{fp['jax']}. "
+              f"Re-tune with `make bench-tune` to use them here.")
+    else:
+        print(f"# tune-check: OK {path} — {len(cache.entries)} entry(ies) "
+              f"valid for {fp['platform']}/{fp['device_kind']}/"
+              f"jax-{fp['jax']}")
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,0 +1,182 @@
+"""Declarative tunable space per scan operator + shape-key bucketing.
+
+PackMamba's method is shape analysis: the winning parallelization for the
+bottleneck operators flips with (L, D, N, H, dh) and device, so every knob
+the repo used to hard-code (``DEF_SUB_T``, the matmul-intra chunk cap, the
+heads chunk cap, the CPU-vs-MXU ``intra`` auto-pick) is expressed here as a
+*candidate list* the runner can measure. A candidate is a plain JSON-able
+dict of knobs:
+
+  backend   "xla" | "pallas"
+  method    xla scan schedule ("blocked" | "chunked" | "fused_seq" |
+            "sequential" | "associative")
+  chunk     xla chunk length T
+  intra     blocked in-chunk evaluator — per-channel op: "matmul" | "assoc";
+            heads op: "quad" (state-form dec @ b) | "dual" (C·Bᵀ
+            attention-like form, wins when dh ≫ T)
+  schedule  pallas kernel ("step" | "blocked" | "blocked_heads" |
+            "blocked_heads_dual")
+  pchunk    pallas chunk length
+  sub_t     pallas in-chunk subtile (None = kernel default)
+
+Shape keys bucket the continuous axes so one measurement serves a
+neighborhood: L to the next power of two, reset density to four named
+bands. Everything else (B, D, N, H, dh, dtype) is kept exact — the
+nearest-key fallback in cache.py absorbs the remaining variation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+OPS = ("selective_scan", "selective_scan_heads")
+
+# reset-density bands: resets per token. "none" is the unpacked case; packed
+# training with paper-like segment lengths (~100-600 tokens) lands in "mid".
+RESET_BANDS = (("none", 0.0), ("sparse", 1 / 256), ("mid", 1 / 32),
+               ("dense", 1.0))
+
+
+def l_bucket(L: int) -> int:
+    """Next power of two ≥ L (floor 16) — the sequence-length bucket."""
+    L = max(int(L), 16)
+    return 1 << (L - 1).bit_length()
+
+
+def reset_bucket(density: Optional[float]) -> str:
+    """Map a resets-per-token density to its named band.
+
+    ``None`` means "packed, density unknown at trace time" → "mid" (the
+    typical training regime); pass 0.0 explicitly for reset-free inputs.
+    """
+    if density is None:
+        return "mid"
+    for name, hi in RESET_BANDS:
+        if density <= hi:
+            return name
+    return "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeKey:
+    """Bucketed shape identity of one operator invocation."""
+    op: str
+    dtype: str
+    B: int
+    Lb: int          # l_bucket(L)
+    D: int           # per-channel width (0 for the heads op)
+    N: int           # state size
+    H: int           # heads (0 for the per-channel op)
+    dh: int          # head dim (0 for the per-channel op)
+    resets: str      # reset-density band
+
+    def encode(self) -> str:
+        return (f"{self.op}|{self.dtype}|B{self.B}|L{self.Lb}|D{self.D}|"
+                f"N{self.N}|H{self.H}|dh{self.dh}|{self.resets}")
+
+    @classmethod
+    def decode(cls, s: str) -> "ShapeKey":
+        op, dtype, B, Lb, D, N, H, dh, resets = s.split("|")
+        return cls(op, dtype, int(B[1:]), int(Lb[1:]), int(D[1:]),
+                   int(N[1:]), int(H[1:]), int(dh[2:]), resets)
+
+
+def shape_key(op: str, *, dtype="float32", B: int, L: int, D: int = 0,
+              N: int = 0, H: int = 0, dh: int = 0,
+              reset_density: Optional[float] = None) -> ShapeKey:
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; have {OPS}")
+    import numpy as np
+    dt = np.dtype(dtype).name if dtype is not None else "float32"
+    return ShapeKey(op, dt, int(B), l_bucket(L), int(D), int(N), int(H),
+                    int(dh), reset_bucket(reset_density))
+
+
+# ---------------------------------------------------------------------------
+# candidate spaces
+# ---------------------------------------------------------------------------
+
+def _xla(method, chunk=None, intra=None) -> Dict:
+    c = {"backend": "xla", "method": method}
+    if chunk is not None:
+        c["chunk"] = int(chunk)
+    if intra is not None:
+        c["intra"] = intra
+    return c
+
+
+def _pallas(schedule, pchunk, sub_t=None) -> Dict:
+    c = {"backend": "pallas", "schedule": schedule, "pchunk": int(pchunk)}
+    if sub_t is not None:
+        c["sub_t"] = int(sub_t)
+    return c
+
+
+def space_for(key: ShapeKey, include_pallas: bool = False) -> List[Dict]:
+    """Bounded candidate list for one shape key.
+
+    ``include_pallas`` should be True only where pallas timings mean
+    something (real TPU, kernels not in interpret mode) — the runner decides.
+    """
+    L = key.Lb
+    out: List[Dict] = []
+    if key.op == "selective_scan_heads":
+        # the heads chunk (frozen at cap 64 pre-tuner) and the quad-vs-dual
+        # in-chunk evaluator are the two real discrete decisions here.
+        # Candidate chunks stop at each form's safety cap (core/ssm.py
+        # _HEADS_CHUNK_CAP / _HEADS_DUAL_CHUNK_CAP): anything larger would
+        # silently clamp and mislabel the cached winner.
+        for chunk in (16, 32, 64, 128):
+            if chunk > max(16, 2 * L):
+                continue
+            if chunk <= 64:
+                out.append(_xla("blocked", chunk, "quad"))
+            out.append(_xla("blocked", chunk, "dual"))
+        if L <= 128:
+            out.append(_xla("sequential"))
+        if include_pallas:
+            for sched in ("blocked_heads", "blocked_heads_dual"):
+                for pchunk in (128, 256):
+                    for sub_t in (16, 32):
+                        out.append(_pallas(sched, min(pchunk, L), sub_t))
+    else:
+        # per-channel: the matmul-intra chunk cap (frozen at 32) vs the
+        # assoc-tree chunk, plus the legacy whole-trajectory schedules
+        for chunk in (8, 16, 32):
+            out.append(_xla("blocked", chunk, "matmul"))
+        for chunk in (64, 128, 256):
+            out.append(_xla("blocked", min(chunk, L), "assoc"))
+        out.append(_xla("chunked", min(256, L)))
+        out.append(_xla("fused_seq"))
+        if L <= 1024:      # materializes (B, L, D, N): only viable when small
+            out.append(_xla("associative"))
+        if include_pallas:
+            for sched in ("step", "blocked"):
+                for pchunk in (128, 256):
+                    c = _pallas(sched, min(pchunk, L))
+                    if sched == "blocked":
+                        for sub_t in (8, 16):
+                            out.append({**c, "sub_t": sub_t})
+                    else:
+                        out.append(c)
+    # dedup (chunk clamping can collide candidates at small L)
+    seen, uniq = set(), []
+    for c in out:
+        k = tuple(sorted(c.items()))
+        if k not in seen:
+            seen.add(k)
+            uniq.append(c)
+    return uniq
+
+
+def candidate_name(c: Dict) -> str:
+    if c.get("backend") == "pallas":
+        st = c.get("sub_t")
+        return f"pallas/{c['schedule']}/T{c['pchunk']}" + \
+            (f"/t{st}" if st else "")
+    parts = [c["method"]]
+    if "chunk" in c:
+        parts.append(f"T{c['chunk']}")
+    if c.get("intra"):
+        parts.append(c["intra"])
+    return "xla/" + "/".join(parts)
