@@ -15,11 +15,27 @@ SERVE_NEW ?= BENCH_serve.new.json
 # fingerprint (a clean STALE report on any other machine).
 TUNE ?= TUNE_CACHE.json
 
-.PHONY: verify bench-scan bench-serve bench-tune tune-check bench-compare \
-	quickstart
+# bench-smoke scratch outputs (gitignored experiments/): structure-checked,
+# never compared against the committed baselines
+SMOKE_SCAN ?= experiments/smoke_scan.json
+SMOKE_SERVE ?= experiments/smoke_serve.json
+SMOKE_TUNE ?= experiments/smoke_tune_cache.json
+
+.PHONY: verify verify-fast ci bench-scan bench-serve bench-tune tune-check \
+	bench-compare bench-smoke bench-accept quickstart
 
 verify:
 	$(PY) -m pytest -x -q
+
+# the CI lane: skip tests marked `slow` (fig2-grid sweeps, serve-engine
+# round-trips — see pytest.ini); `make verify` stays the full local default
+verify-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# one-shot CI bundle (what .github/workflows/ci.yml runs): fast tier-1 lane,
+# tune-cache audit, and a bounded bench smoke whose JSON structure — never
+# its timings — is checked
+ci: verify-fast tune-check bench-smoke
 
 # regenerate the scan-schedule matrix into $(NEW) (fig2 also warms $(TUNE)
 # for any of its shape keys the bounded sweep hasn't covered yet)
@@ -46,6 +62,24 @@ tune-check:
 bench-compare: tune-check
 	$(PY) benchmarks/compare.py --pair $(OLD) $(NEW) \
 		--optional-pair $(SERVE_OLD) $(SERVE_NEW)
+
+# promote freshly-written staging files ($(NEW)/$(SERVE_NEW)) over the
+# committed baselines and delete them — prints the delta table first, but
+# accepting is the operator's call so regressions never fail this target
+bench-accept:
+	$(PY) benchmarks/compare.py --pair $(OLD) $(NEW) \
+		--optional-pair $(SERVE_OLD) $(SERVE_NEW) --accept
+
+# tiny-shape benchmark pass for CI: exercises fig2 + serve end to end and
+# validates the emitted JSON structure; timings are NOT gated (CI machines
+# are noisy), and the scratch tune cache keeps the committed TUNE_CACHE.json
+# untouched
+bench-smoke:
+	mkdir -p experiments
+	BENCH_SMOKE=1 BENCH_SCAN_JSON=$(SMOKE_SCAN) \
+		BENCH_SERVE_JSON=$(SMOKE_SERVE) REPRO_TUNE_CACHE=$(SMOKE_TUNE) \
+		$(PY) -m benchmarks.run fig2 serve
+	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE)
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -19,12 +19,26 @@ new schedules (e.g. the tuned/dual rows) must be able to land.
 cannot pass vacuously); ``--optional-pair`` skips a pair whose files are
 absent, so one gate can also cover benchmark files a given run didn't
 regenerate.
+
+``--accept`` promotes each pair's candidate over its baseline (copy NEW →
+OLD, delete the staging file) after printing the delta table — the
+human-in-the-loop step that keeps ``*.new.json`` staging files out of the
+repo (`make bench-accept`). Accepting never fails on regressions: the
+table shows them, the operator is choosing to take them.
+
+``--schema FILE...`` is a structural check used by the CI bench smoke:
+each file must be a JSON list of records with string op/shape/schedule,
+positive numeric us_per_call/tok_per_s, numeric ttft_* fields when
+present, and no duplicate (op, shape, schedule) keys. Timings are NOT
+judged — CI machines are too noisy to gate on; the schema check catches a
+benchmark that silently stopped emitting rows.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
 import sys
 
 
@@ -69,6 +83,49 @@ def compare(old_path: str, new_path: str, pct: float = 10.0):
     return lines, offenders
 
 
+REQUIRED_STR = ("op", "shape", "schedule")
+REQUIRED_NUM = ("us_per_call", "tok_per_s")
+OPTIONAL_NUM_PREFIXES = ("ttft_",)
+
+
+def schema_errors(path):
+    """Structural violations in one benchmark JSON file (see module doc)."""
+    errs = []
+    try:
+        with open(path) as f:
+            recs = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(recs, list) or not recs:
+        return [f"{path}: expected a non-empty JSON list of records"]
+    seen = set()
+    for i, r in enumerate(recs):
+        if not isinstance(r, dict):
+            errs.append(f"{path}[{i}]: not an object")
+            continue
+        for k in REQUIRED_STR:
+            if not isinstance(r.get(k), str) or not r.get(k):
+                errs.append(f"{path}[{i}]: missing/empty string field {k!r}")
+        for k in REQUIRED_NUM:
+            v = r.get(k)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v <= 0:
+                errs.append(f"{path}[{i}]: field {k!r} must be a positive "
+                            f"number, got {v!r}")
+        for k, v in r.items():
+            if any(k.startswith(p) for p in OPTIONAL_NUM_PREFIXES) and (
+                    not isinstance(v, (int, float)) or isinstance(v, bool)
+                    or v < 0):
+                errs.append(f"{path}[{i}]: field {k!r} must be a "
+                            f"non-negative number, got {v!r}")
+        if all(isinstance(r.get(k), str) for k in REQUIRED_STR):
+            key = _key(r)
+            if key in seen:
+                errs.append(f"{path}[{i}]: duplicate row {'/'.join(key)}")
+            seen.add(key)
+    return errs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("old", nargs="?")
@@ -85,7 +142,32 @@ def main():
                     help="regression threshold in percent (default 10)")
     ap.add_argument("--allow-missing", action="store_true",
                     help="treat EVERY pair as optional")
+    ap.add_argument("--accept", action="store_true",
+                    help="promote each pair's NEW file over its baseline "
+                         "(copy NEW -> OLD, delete the staging file) after "
+                         "showing the delta table; never fails on "
+                         "regressions")
+    ap.add_argument("--schema", nargs="+", metavar="FILE", default=None,
+                    help="structural check of benchmark JSON files "
+                         "(required fields/types, no duplicate rows); "
+                         "timings are not judged")
     args = ap.parse_args()
+
+    if args.schema is not None:
+        errs = []
+        for path in args.schema:
+            e = schema_errors(path)
+            errs += e
+            if e:
+                print(f"# schema {path}: {len(e)} error(s)")
+            else:
+                with open(path) as f:
+                    print(f"# schema {path}: OK, {len(json.load(f))} "
+                          f"records")
+        for msg in errs:
+            print(f"#   {msg}")
+        sys.exit(1 if errs else 0)
+
     pairs = [(o, n, False) for o, n in args.pair] + \
             [(o, n, True) for o, n in args.optional_pair]
     if args.old or args.new:
@@ -97,7 +179,27 @@ def main():
 
     all_offenders = []
     missing_required = []
+    promoted = []
     for old, new, optional in pairs:
+        if args.accept:
+            # accepting only needs the candidate; a first-ever baseline is
+            # a plain promotion (nothing to diff against)
+            if not os.path.exists(new):
+                if optional or args.allow_missing:
+                    print(f"# skipping accept: no staging file {new}")
+                else:
+                    print(f"# MISSING staging file {new}")
+                    missing_required.append(new)
+                continue
+            if os.path.exists(old):
+                lines, _ = compare(old, new, args.pct)
+                print(f"# {old} -> {new} (threshold {args.pct:.0f}%)")
+                for ln in lines:
+                    print(ln)
+            shutil.copyfile(new, old)
+            os.remove(new)
+            promoted.append((new, old))
+            continue
         missing = [p for p in (old, new) if not os.path.exists(p)]
         if missing:
             if optional or args.allow_missing:
@@ -113,6 +215,8 @@ def main():
         for ln in lines:
             print(ln)
         all_offenders += [(f"{old}->{new}",) + o for o in offenders]
+    for new, old in promoted:
+        print(f"# accepted: {new} promoted to {old} (staging file removed)")
     if all_offenders:
         print(f"# {len(all_offenders)} regression(s) > {args.pct:.0f}%:")
         for pair, name, o, n, delta in all_offenders:
@@ -122,7 +226,8 @@ def main():
         print(f"# missing required file(s): {', '.join(missing_required)}")
     if all_offenders or missing_required:
         sys.exit(1)
-    print("# no regressions")
+    if not promoted:
+        print("# no regressions")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,15 @@
 Packing–Unpacking Invariance end to end.
 
     PYTHONPATH=src python examples/quickstart.py
+
+CI: `.github/workflows/ci.yml` runs `make ci` on every push — the fast
+tier-1 lane (`pytest -m "not slow"`; the slow-marked engine round-trips
+and grid sweeps stay in the full local `make verify`), the tune-cache
+audit (`make tune-check`), and a tiny-shape benchmark smoke whose JSON
+structure is schema-checked while its timings are never gated
+(`make bench-smoke`). Benchmark baselines are refreshed locally with
+`make bench-scan` / `make bench-serve` and promoted via
+`make bench-accept` (the *.new.json staging files never get committed).
 """
 import dataclasses
 import sys
@@ -68,18 +77,29 @@ def main():
     #    each prompt's final recurrent state off to a decode slot
     #    (model.prefill_packed -> model.scatter_into_cache), and refills
     #    slots mid-flight as requests finish — continuous batching with a
-    #    bucket-bounded number of compiled prefill shapes.
+    #    bucket-bounded number of compiled prefill shapes. Refill prefills
+    #    are dispatched ASYNCHRONOUSLY (overlap=True: decode keeps stepping
+    #    while the packed forward is in flight), admission is latency-aware
+    #    (target_ttft_ms bounds the head-of-line wait; stats.ttft_ms /
+    #    itl_ms / ttft_percentiles() expose the resulting latencies), and
+    #    submit() takes per-request temperature / top_k / top_p sampled in
+    #    the fused decode step (temperature=0 → exact greedy).
     #    (see examples/serve_packed.py and `python -m repro.launch.serve`)
     from repro.launch.serve import ServeEngine
     engine = ServeEngine(model, state["params"], num_slots=4, max_len=64,
-                         buckets=(32,), max_segments=2)
-    for s in seqs[:6]:
-        engine.submit(s[:20], max_new=8)
+                         buckets=(32,), max_segments=2,
+                         overlap=True, target_ttft_ms=100.0)
+    for i, s in enumerate(seqs[:6]):
+        engine.submit(s[:20], max_new=8,
+                      temperature=0.0 if i < 3 else 0.8, top_k=16)
     outs = engine.run()
+    pct = engine.stats.ttft_percentiles()
     print(f"served {len(outs)} requests "
           f"({engine.stats.generated} tokens, "
           f"{engine.stats.prefills} packed prefills, "
-          f"{len(engine.stats.buckets)} prefill shape(s) compiled)")
+          f"{engine.stats.overlapped_prefills} overlapped, "
+          f"{len(engine.stats.buckets)} prefill shape(s) compiled; "
+          f"TTFT p50 {pct['p50']:.0f}ms incl. compiles)")
 
     # 6. autotuning: every scan-schedule knob above (blocked chunk, in-chunk
     #    evaluator, Pallas subtile, backend) is a measured, shape-keyed

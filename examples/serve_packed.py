@@ -1,4 +1,5 @@
-"""Continuous-batching serving demo: packed prefill → per-slot decode.
+"""Continuous-batching serving demo: overlapped packed prefill → per-slot
+decode with batched sampling.
 
 The serving-side application of the paper's packing: variable-length
 prompts are packed back-to-back into shape-bucketed prefill buffers, ONE
@@ -6,7 +7,10 @@ forward harvests every prompt's decode state at its segment end
 (`model.prefill_packed`), and the states are scattered into per-request
 decode slots (`model.scatter_into_cache`). Slots that finish (EOS or token
 budget) are refilled from the queue mid-flight — no synchronous waves, no
-per-length recompiles.
+per-length recompiles. The refill prefill is dispatched ASYNCHRONOUSLY and
+lands while other slots keep decoding (`overlap=True`), admission is
+TTFT-aware (`target_ttft_ms`), and each request carries its own
+temperature/top-k/top-p knobs sampled in the fused decode step.
 
     PYTHONPATH=src python examples/serve_packed.py
 """
@@ -32,9 +36,13 @@ def main():
     rng = np.random.default_rng(0)
 
     # --- continuous engine: 4 slots, 12 requests with mixed prompt sizes
-    # AND mixed token budgets — the regime where padded waves waste steps
+    # AND mixed token budgets — the regime where padded waves waste steps.
+    # overlap=True keeps decode stepping while each refill prefill is in
+    # flight; target_ttft_ms bounds how long a queued request can wait
+    # before admission stops batching for throughput and refills anyway.
     engine = ServeEngine(model, params, num_slots=4, max_len=128,
-                         prefill_rows=2, buckets=(32, 64), max_segments=3)
+                         prefill_rows=2, buckets=(32, 64), max_segments=3,
+                         overlap=True, target_ttft_ms=100.0)
     lens = rng.integers(5, 40, size=12)
     budgets = rng.integers(4, 16, size=12)
     rids = [engine.submit(rng.integers(1, cfg.vocab, size=int(n)), int(b))
@@ -44,10 +52,27 @@ def main():
         print(f"req{rid}: prompt[{lens[rid]}] budget {budgets[rid]} "
               f"-> {outs[rid]}")
     st = engine.stats
+    pct = st.ttft_percentiles()
     print(f"stats: {st.generated} tokens, {st.prefills} packed prefills "
-          f"({st.midflight_refills} mid-flight), {st.decode_steps} decode "
-          f"steps, {len(st.buckets)} prefill shape(s) compiled for "
+          f"({st.midflight_refills} mid-flight, {st.overlapped_prefills} "
+          f"overlapped, {st.early_admits} TTFT-forced), {st.decode_steps} "
+          f"decode steps, {len(st.buckets)} prefill shape(s) compiled for "
           f"{len(set(map(int, lens)))} distinct prompt lengths")
+    print(f"latency: TTFT p50 {pct['p50']:.0f}ms p95 {pct['p95']:.0f}ms "
+          f"(incl. compiles), {len(st.itl_ms)} inter-token intervals "
+          f"tracked")
+
+    # --- batched sampling: per-request temperature/top-k/top-p, sampled
+    # inside the fused decode step with a (seed, rid)-keyed stream — the
+    # same request sampled twice gives the same tokens, and greedy
+    # (temperature=0, the default) is exactly argmax
+    probe2 = rng.integers(1, cfg.vocab, size=12)
+    r_greedy = engine.submit(probe2, 6)
+    r_hot = engine.submit(probe2, 6, temperature=0.9, top_k=8)
+    r_nuc = engine.submit(probe2, 6, temperature=0.9, top_p=0.7)
+    souts = engine.run()
+    print(f"sampling: greedy {souts[r_greedy]} | top-k8 {souts[r_hot]} | "
+          f"top-p0.7 {souts[r_nuc]}")
 
     # --- EOS termination: pick a token greedy decode emits and serve with
     # it as EOS — the slot frees early and the queue takes over

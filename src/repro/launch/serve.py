@@ -1,4 +1,5 @@
-"""Continuous-batching serve engine: packed prefill → per-slot decode.
+"""Overlapped continuous-batching serve engine: async packed prefill →
+per-slot decode with batched sampling.
 
 PackMamba's packing is applied to the SERVING path: instead of left-padding
 every prompt to the batch max and decoding in synchronous waves (the padded
@@ -11,19 +12,43 @@ one fused step per token over all slots; a slot that hits EOS or its token
 budget is released and refilled from the admission queue *mid-flight* —
 the decode batch stays full without draining a wave.
 
+Three serving-loop mechanisms on top of the PR-3 engine:
+
+* **Prefill/decode overlap** (``overlap=True``): the packed prefill is
+  dispatched asynchronously (JAX async dispatch; the decode-step jit donates
+  its cache buffers) and the engine keeps issuing decode steps on the live
+  slots while the prefill result is in flight. The target slots are merely
+  *reserved* while pending; only when the device signals completion
+  (``jax.Array.is_ready``) are the harvested states scattered into the
+  decode cache — so the decode dependency chain never stalls on the packed
+  forward. Per-slot token streams are identical either way: the engines
+  differ only in *when* independent computations are enqueued.
+* **Latency-aware admission** (``target_ttft_ms``): the fixed
+  ``refill_threshold`` batches admissions for throughput (a decode step
+  costs the same idle or full, so single-slot refills waste prefills). The
+  TTFT policy overrides it: when the queue's *oldest* request has waited
+  longer than the target, a prefill is issued even for a single free slot.
+  ``ServeStats`` tracks per-request submit→first-token (TTFT) and
+  inter-token latencies so the trade is measurable.
+* **Batched sampling** (per-request ``temperature`` / ``top_k`` /
+  ``top_p``): one fixed-shape jitted step (``model.decode_step_sample``)
+  decodes AND samples every slot, with per-slot ``jax.random`` key streams
+  derived from (engine seed, request id) — a request samples identically
+  wherever its slot lands. ``temperature=0`` (the default) is exact greedy.
+
 Compile discipline: decode is one fixed shape; prefill shapes are bounded
 by the bucket list (rows × bucket-capacity), NOT by the number of distinct
 prompt lengths — ``stats.buckets`` counts the shapes actually compiled.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba-110m --tiny \
-      --slots 8 --requests 24 --new-tokens 16
+      --slots 8 --requests 24 --new-tokens 16 --temperature 0.8 --top-k 40
 """
 import argparse
 import collections
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -31,6 +56,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.core import packing
+from repro.models import blocks as B
 from repro.models.lm import build_model
 
 
@@ -39,37 +65,65 @@ class Request:
     rid: int
     tokens: np.ndarray         # 1-D int32 prompt
     max_new: int
-    eos: int = -1              # -1 = never matches (greedy runs to budget)
+    eos: int = -1              # -1 = never matches (runs to budget)
+    temperature: float = 0.0   # 0 = greedy
+    top_k: int = 0             # 0 = full vocab
+    top_p: float = 1.0         # 1 = full mass
+    submit_t: float = 0.0      # engine clock at submit()
 
 
 @dataclasses.dataclass
-class EngineStats:
+class ServeStats:
     prefills: int = 0              # packed prefill rounds issued
     prefill_tokens: int = 0        # real prompt tokens prefilled
     decode_steps: int = 0          # fused all-slot decode steps
     generated: int = 0             # tokens handed back to requests
     midflight_refills: int = 0     # prefills issued while slots were decoding
+    overlapped_prefills: int = 0   # prefills that stayed in flight across
+    #                                ≥1 decode step before landing
+    early_admits: int = 0          # admissions forced by the TTFT policy
+    #                                below the refill threshold
     buckets: Optional[set] = None  # distinct (rows, L) prefill shapes used
+    ttft_ms: Optional[List[float]] = None   # per request: submit→first token
+    itl_ms: Optional[List[float]] = None    # per decode token: inter-token
 
     def __post_init__(self):
         if self.buckets is None:
             self.buckets = set()
+        if self.ttft_ms is None:
+            self.ttft_ms = []
+        if self.itl_ms is None:
+            self.itl_ms = []
+
+    def ttft_percentiles(self) -> Dict[str, float]:
+        """{'p50': ms, 'p95': ms} over recorded TTFTs ({} when none)."""
+        if not self.ttft_ms:
+            return {}
+        return {"p50": float(np.percentile(self.ttft_ms, 50)),
+                "p95": float(np.percentile(self.ttft_ms, 95))}
+
+
+# back-compat alias (pre-overlap name)
+EngineStats = ServeStats
 
 
 class ServeEngine:
-    """Slot-based continuous batching with a packed-prefill admission path.
+    """Slot-based continuous batching with an async packed-prefill admission
+    path and batched per-slot sampling.
 
-    * ``submit()`` enqueues requests; ``run()`` drives admission + decode
-      until everything drains (``step()`` exposes one iteration for custom
-      loops).
+    * ``submit()`` enqueues requests (each with its own budget, EOS and
+      sampling knobs); ``run()`` drives admission + decode until everything
+      drains (``step()`` exposes one iteration for custom loops).
     * Admission packs queued prompts (FIFO, ``policy``) into a
       (prefill_rows, bucket) buffer — the smallest bucket that fits the
       head-of-line prompt — capped by free slots and ``max_segments`` per
-      row, then scatters the harvested per-segment states into the free
-      slots. Requests never wait for a wave boundary.
-    * The decode batch is one jitted ``decode_step`` over ALL slots; idle
-      slots ride along (their state is fully overwritten at refill, so the
-      garbage they accumulate is harmless and the shape never changes).
+      row. The prefill is DISPATCHED and, with ``overlap=True``, left in
+      flight while decode keeps stepping; its states land in the reserved
+      slots once ready. Requests never wait for a wave boundary.
+    * The decode batch is one jitted ``decode_step_sample`` over ALL slots
+      (forward + temperature/top-k/top-p sampling fused; idle slots ride
+      along — their state is fully overwritten at refill, so the garbage
+      they accumulate is harmless and the shape never changes).
     * Per-slot termination: a slot is released the moment its request emits
       ``eos`` or exhausts ``max_new`` — the EOS token itself is kept.
     """
@@ -77,7 +131,11 @@ class ServeEngine:
     def __init__(self, model, params, num_slots: int, max_len: int, *,
                  prefill_rows: int = 2, buckets=(64, 128, 256),
                  max_segments: int = 4, policy: str = "first_fit",
-                 eos: int = -1, refill_threshold: Optional[int] = None):
+                 eos: int = -1, refill_threshold: Optional[int] = None,
+                 overlap: bool = True,
+                 target_ttft_ms: Optional[float] = None,
+                 sample_seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -87,10 +145,15 @@ class ServeEngine:
         self.max_segments = max_segments
         self.policy = policy
         self.eos = eos
+        self.overlap = overlap
+        self.target_ttft_ms = target_ttft_ms
+        self.sample_seed = sample_seed
+        self._clock = clock
         # A decode step costs the same whether a slot is active or idle
         # (fixed batch), so single-slot refills waste a whole prefill
         # forward to activate one slot. Batch admissions: only refill once
-        # this many slots are free (or nothing is decoding at all).
+        # this many slots are free (or nothing is decoding at all) — unless
+        # the head-of-line wait blows the TTFT target (see _admission_due).
         self.refill_threshold = max(1, num_slots // 2) \
             if refill_threshold is None else refill_threshold
 
@@ -105,8 +168,33 @@ class ServeEngine:
         self.cache = model.init_cache(num_slots, max_len)
         self.cache_len = jnp.zeros((num_slots,), jnp.int32)
         self.cur_tok = jnp.zeros((num_slots, 1), jnp.int32)
-        self._step = jax.jit(model.decode_step)
-        self._scatter = jax.jit(model.scatter_into_cache)
+        # per-slot sampling state, scattered at refill like the cache
+        self.slot_keys = jnp.zeros((num_slots, 2), jnp.uint32)
+        self.slot_temp = jnp.zeros((num_slots,), jnp.float32)
+        self.slot_topk = jnp.zeros((num_slots,), jnp.int32)
+        self.slot_topp = jnp.ones((num_slots,), jnp.float32)
+        # the decode chain and the scatter both rewrite the whole slot
+        # cache every call — donate it so the engine holds ONE cache's
+        # worth of device memory (and XLA can update in place), which is
+        # what lets an overlapped prefill allocate its activations beside
+        # the live decode loop instead of on top of two cache copies
+        self._step = jax.jit(model.decode_step_sample, donate_argnums=(1,))
+
+        # all-greedy steps skip the sampling tail (full-vocab sort + gumbel
+        # per slot) — with temperature=0 the default, the common serving
+        # regime decodes on the plain argmax step; slots only pay for
+        # sampling on steps where some ACTIVE request actually samples
+        # (key streams stay aligned: a sampling request keeps every one of
+        # its steps on the sampled path)
+        def greedy_step(params, cache, toks, clen):
+            logits, cache = model.decode_step(params, cache, toks, clen,
+                                              None)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._step_greedy = jax.jit(greedy_step, donate_argnums=(1,))
+        self._scatter = jax.jit(model.scatter_into_cache,
+                                donate_argnums=(0,))
+        self._sample_flat = jax.jit(model.sample_tokens)
         self._prefill = jax.jit(
             functools.partial(model.prefill_packed, max_len=max_len))
         self._wave_prefill = jax.jit(
@@ -115,32 +203,50 @@ class ServeEngine:
         self.queue: collections.deque = collections.deque()
         self.slot_req: List[Optional[Request]] = [None] * num_slots
         self.slot_remaining = [0] * num_slots
+        self.slot_pending = [False] * num_slots   # reserved by in-flight
+        self.slot_last_t = [0.0] * num_slots      # last token host-observed
+        self._inflight: Optional[dict] = None     # one pending prefill
         self.outputs: Dict[int, List[int]] = {}
-        self.stats = EngineStats()
+        self.stats = ServeStats()
         self._next_rid = 0
 
     # ------------------------------------------------------------ admission
-    def submit(self, tokens, max_new: int, eos: Optional[int] = None) -> int:
+    def submit(self, tokens, max_new: int, eos: Optional[int] = None,
+               temperature: float = 0.0, top_k: int = 0,
+               top_p: float = 1.0) -> int:
         tokens = np.asarray(tokens, np.int32)
-        if len(tokens) == 0:
-            raise ValueError("empty prompt")
+        if tokens.ndim != 1 or len(tokens) == 0:
+            raise ValueError(
+                f"prompt must be a non-empty 1-D token array, got shape "
+                f"{tokens.shape} — every request needs ≥ 1 prompt token")
         if max_new < 1:
-            raise ValueError(f"max_new must be >= 1, got {max_new}")
+            raise ValueError(f"max_new must be >= 1, got {max_new} — a "
+                             f"request must generate at least one token")
         if len(tokens) > self.buckets[-1]:
             raise ValueError(f"prompt length {len(tokens)} exceeds largest "
                              f"prefill bucket {self.buckets[-1]}")
         if len(tokens) + max_new > self.max_len:
             raise ValueError(f"prompt {len(tokens)} + max_new {max_new} "
                              f"exceeds slot capacity {self.max_len}")
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = full vocab), "
+                             f"got {top_k}")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, tokens, max_new,
-                                  self.eos if eos is None else eos))
+                                  self.eos if eos is None else eos,
+                                  temperature, int(top_k), top_p,
+                                  self._clock()))
         self.outputs[rid] = []
         return rid
 
     def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+        return [i for i, r in enumerate(self.slot_req)
+                if r is None and not self.slot_pending[i]]
 
     def _active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -154,16 +260,33 @@ class ServeEngine:
         if tok == req.eos or self.slot_remaining[slot] <= 0:
             self.slot_req[slot] = None
 
+    def _admission_due(self, free: List[int]) -> bool:
+        """Throughput rule (enough free slots, or nothing decoding) with a
+        latency override: admit below the threshold when the head-of-line
+        request's wait already exceeds ``target_ttft_ms``."""
+        if not free or not self.queue or self._inflight is not None:
+            return False
+        if not self._active_slots():
+            return True
+        if len(free) >= self.refill_threshold:
+            return True
+        if self.target_ttft_ms is not None:
+            wait_ms = (self._clock() - self.queue[0].submit_t) * 1e3
+            if wait_ms >= self.target_ttft_ms:
+                self.stats.early_admits += 1
+                return True
+        return False
+
     def _try_refill(self) -> bool:
         """Admit queued prompts into free slots via one packed prefill.
 
         Bucket choice is head-of-line: the smallest bucket holding the
         oldest prompt; younger prompts join only if they fit the same
-        bucket (FIFO within a round, no starvation across rounds)."""
+        bucket (FIFO within a round, no starvation across rounds). The
+        prefill is dispatched asynchronously; with ``overlap`` on and other
+        slots decoding, it is left in flight (see _land_prefill)."""
         free = self._free_slots()
-        if not free or not self.queue:
-            return False
-        if len(free) < self.refill_threshold and self._active_slots():
+        if not self._admission_due(free):
             return False
         head = self.queue[0]
         L = min(b for b in self.buckets if b >= len(head.tokens))
@@ -197,6 +320,10 @@ class ServeEngine:
         K = self.prefill_rows * self.max_segments
         src = np.zeros(K, np.int32)
         dst = np.full(K, self.num_slots, np.int32)
+        rids = np.zeros(K, np.int32)
+        temp = np.zeros(K, np.float32)
+        topk = np.zeros(K, np.int32)
+        topp = np.ones(K, np.float32)
         slot_of = {}
         for r, ids in enumerate(pb.seq_ids):
             for s, qi in enumerate(ids):
@@ -205,51 +332,126 @@ class ServeEngine:
                 src[k] = r * self.max_segments + s
                 dst[k] = slot
                 slot_of[qi] = (slot, r, s)
-        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
-        self.cache = self._scatter(self.cache, states, src_j, dst_j)
-        flat_lens = seg_lens.reshape(-1)
-        flat_tok = jnp.argmax(logits, -1).reshape(-1).astype(jnp.int32)
-        self.cache_len = self.cache_len.at[dst_j].set(
-            flat_lens[src_j], mode="drop")
-        self.cur_tok = self.cur_tok.at[dst_j].set(
-            flat_tok[src_j][:, None], mode="drop")
-        # host bookkeeping + the prefill's own greedy token
-        first = np.asarray(flat_tok)
-        for qi, req in enumerate(admitted):
-            slot, r, s = slot_of[qi]
-            self.slot_req[slot] = req
-            self.slot_remaining[slot] = req.max_new
-            self._finish_token(slot, int(first[r * self.max_segments + s]))
+                req = admitted[qi]
+                fk = r * self.max_segments + s
+                rids[fk] = req.rid
+                temp[fk] = req.temperature
+                topk[fk] = req.top_k
+                topp[fk] = req.top_p
+        # the prefill's own first token, sampled per segment with each
+        # request's (seed, rid)-derived key stream — flat (K, V) so the
+        # sample jit compiles once, independent of the bucket
+        keys0 = B.request_keys(self.sample_seed, rids)
+        flat_lg = logits.reshape(K, -1)
+        flat_tok, keys1 = self._sample_flat(flat_lg, keys0,
+                                            jnp.asarray(temp),
+                                            jnp.asarray(topk),
+                                            jnp.asarray(topp))
+        for qi in slot_of:                       # reserve target slots
+            self.slot_pending[slot_of[qi][0]] = True
+        self._inflight = {
+            "tok": flat_tok, "keys": keys1, "states": states,
+            "seg_lens": seg_lens, "src": jnp.asarray(src),
+            "dst": jnp.asarray(dst), "admitted": admitted,
+            "slot_of": slot_of, "temp": temp, "topk": topk, "topp": topp,
+            "steps_waited": 0}
         self.stats.prefills += 1
         self.stats.prefill_tokens += sum(lens)
         self.stats.buckets.add((self.prefill_rows, L))
+        if not self.overlap or not self._active_slots():
+            self._land_prefill(block=True)
+        return True
+
+    def _prefill_ready(self, inflight: dict) -> bool:
+        """Device-side completion probe for an in-flight prefill (split out
+        so tests can script the overlap window)."""
+        tok = inflight["tok"]
+        ready = getattr(tok, "is_ready", None)
+        return ready() if ready is not None else True
+
+    def _land_prefill(self, block: bool = False) -> bool:
+        """Scatter a completed prefill's states into the reserved slots and
+        activate them. With ``block=False`` this is a no-op while the
+        prefill is still in flight — decode keeps the device busy and the
+        states land on a later engine step."""
+        inf = self._inflight
+        if inf is None:
+            return False
+        if not block and not self._prefill_ready(inf):
+            return False
+        src_j, dst_j = inf["src"], inf["dst"]
+        self.cache = self._scatter(self.cache, inf["states"], src_j, dst_j)
+        flat_lens = inf["seg_lens"].reshape(-1)
+        self.cache_len = self.cache_len.at[dst_j].set(
+            flat_lens[src_j], mode="drop")
+        self.cur_tok = self.cur_tok.at[dst_j].set(
+            inf["tok"][src_j][:, None], mode="drop")
+        self.slot_keys = self.slot_keys.at[dst_j].set(
+            inf["keys"][src_j], mode="drop")
+        self.slot_temp = self.slot_temp.at[dst_j].set(
+            jnp.asarray(inf["temp"])[src_j], mode="drop")
+        self.slot_topk = self.slot_topk.at[dst_j].set(
+            jnp.asarray(inf["topk"])[src_j], mode="drop")
+        self.slot_topp = self.slot_topp.at[dst_j].set(
+            jnp.asarray(inf["topp"])[src_j], mode="drop")
+        # host bookkeeping + the prefill's own first token (the np.asarray
+        # is the host sync point — TTFT is measured where the token becomes
+        # observable, not where the prefill was dispatched)
+        first = np.asarray(inf["tok"])
+        now = self._clock()
+        for qi, req in enumerate(inf["admitted"]):
+            slot, r, s = inf["slot_of"][qi]
+            self.slot_pending[slot] = False
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new
+            self.slot_last_t[slot] = now
+            self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
+            self._finish_token(slot, int(first[r * self.max_segments + s]))
+        if inf["steps_waited"] > 0:
+            self.stats.overlapped_prefills += 1
+        self._inflight = None
         return True
 
     # --------------------------------------------------------------- decode
     def _decode_step(self):
-        """One fused greedy step over every slot; per-slot termination."""
+        """One fused decode+sample step over every slot; per-slot
+        termination and inter-token latency accounting."""
         active = self._active_slots()
         if not active:
             return
-        logits, self.cache = self._step(self.params, self.cache,
-                                        self.cur_tok, self.cache_len, None)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)       # (num_slots,)
+        if any(self.slot_req[i].temperature > 0.0 for i in active):
+            tok, _, self.cache, self.slot_keys = self._step(
+                self.params, self.cache, self.cur_tok, self.cache_len,
+                self.slot_keys, self.slot_temp, self.slot_topk,
+                self.slot_topp, None)
+        else:
+            tok, self.cache = self._step_greedy(
+                self.params, self.cache, self.cur_tok, self.cache_len)
         act = np.zeros(self.num_slots, bool)
         act[active] = True
         self.cache_len = self.cache_len + jnp.asarray(act, jnp.int32)
-        self.cur_tok = nxt[:, None]
+        self.cur_tok = tok[:, None]
         self.stats.decode_steps += 1
-        toks = np.asarray(nxt)
+        if self._inflight is not None:
+            self._inflight["steps_waited"] += 1
+        toks = np.asarray(tok)
+        now = self._clock()
         for i in active:
+            self.stats.itl_ms.append((now - self.slot_last_t[i]) * 1e3)
+            self.slot_last_t[i] = now
             self._finish_token(i, int(toks[i]))
 
     # ----------------------------------------------------------------- loop
     def step(self) -> bool:
-        """One engine iteration: refill free slots, then one decode step.
-        Returns True while work remains."""
+        """One engine iteration: land a finished prefill, refill free slots,
+        then one decode step. Returns True while work remains."""
+        self._land_prefill(block=False)
         self._try_refill()
+        if self._inflight is not None and not self._active_slots():
+            self._land_prefill(block=True)    # nothing else to overlap with
         self._decode_step()
-        return bool(self.queue or self._active_slots())
+        return bool(self.queue or self._active_slots()
+                    or self._inflight is not None)
 
     def run(self) -> Dict[int, List[int]]:
         """Drive until the queue and all slots drain; returns rid → tokens."""
@@ -258,28 +460,32 @@ class ServeEngine:
         return self.outputs
 
     # ------------------------------------------------- padded-wave baseline
-    def decode_batch(self, prompts, max_new, eos: int = -1):
+    def decode_batch(self, prompts, max_new, eos: int = -1,
+                     temperature: float = 0.0, top_k: int = 0,
+                     top_p: float = 1.0):
         """Padded-wave BASELINE (the paper's padding regime on the serving
         path): ≤num_slots prompts left-padded to the batch max, one prefill,
         synchronous decode. Kept for benchmarking against the continuous
-        path. ``max_new`` is an int or a per-prompt list; slots stop
-        accumulating tokens at ``eos`` or their budget (the EOS token itself
-        is kept) — but the WAVE only ends when every row is done, which is
-        exactly the drain cost continuous batching removes."""
-        B = self.num_slots
-        if len(prompts) > B:
-            raise ValueError(f"{len(prompts)} prompts > {B} slots")
-        if self._active_slots() or self.queue:
+        path — it shares the fused decode+sample step (uniform sampling
+        knobs across the wave), so the two modes stay comparable under any
+        sampling regime. ``max_new`` is an int or a per-prompt list; slots
+        stop accumulating tokens at ``eos`` or their budget (the EOS token
+        itself is kept) — but the WAVE only ends when every row is done,
+        which is exactly the drain cost continuous batching removes."""
+        Bz = self.num_slots
+        if len(prompts) > Bz:
+            raise ValueError(f"{len(prompts)} prompts > {Bz} slots")
+        if self._active_slots() or self.queue or self._inflight is not None:
             raise RuntimeError("decode_batch would clobber the live slot "
                                "cache; drain the continuous engine first "
                                "(or use a separate ServeEngine)")
         budgets = [max_new] * len(prompts) if isinstance(max_new, int) \
             else list(max_new)
-        lens = [len(p) for p in prompts] + [1] * (B - len(prompts))
+        lens = [len(p) for p in prompts] + [1] * (Bz - len(prompts))
         maxp = max(lens)
-        grid = np.zeros((B, maxp), np.int32)
-        seg = np.zeros((B, maxp), np.int32)
-        pos = np.zeros((B, maxp), np.int32)
+        grid = np.zeros((Bz, maxp), np.int32)
+        seg = np.zeros((Bz, maxp), np.int32)
+        pos = np.zeros((Bz, maxp), np.int32)
         for b, p in enumerate(prompts):
             grid[b, :len(p)] = p
             seg[b, :len(p)] = 1
@@ -288,9 +494,18 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(grid), "positions": jnp.asarray(pos),
                  "segment_ids": jnp.asarray(seg)}
         logits, self.cache, lens_j = self._wave_prefill(self.params, batch)
-        outs = [[] for _ in range(B)]
-        done = [b >= len(prompts) for b in range(B)]
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        sampling = temperature > 0.0
+        temp = jnp.full((Bz,), temperature, jnp.float32)
+        topk = jnp.full((Bz,), int(top_k), jnp.int32)
+        topp = jnp.full((Bz,), top_p, jnp.float32)
+        keys = B.request_keys(self.sample_seed, np.arange(Bz))
+        outs = [[] for _ in range(Bz)]
+        done = [b >= len(prompts) for b in range(Bz)]
+        if sampling:
+            tok, keys = self._sample_flat(logits, keys, temp, topk, topp)
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok = tok[:, None]
         for i in range(max(budgets, default=0)):
             toks = np.asarray(tok[:, 0])
             for b in range(len(prompts)):
@@ -301,9 +516,14 @@ class ServeEngine:
                     done[b] = True
             if all(done):
                 break
-            logits, self.cache = self._step(self.params, self.cache, tok,
-                                            lens_j + i, None)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            if sampling:
+                tok, _, self.cache, keys = self._step(
+                    self.params, self.cache, tok, lens_j + i, keys, temp,
+                    topk, topp, None)
+            else:
+                tok, self.cache = self._step_greedy(
+                    self.params, self.cache, tok, lens_j + i)
+            tok = tok[:, None]
         return outs[:len(prompts)]
 
 
@@ -318,6 +538,16 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--policy", default="first_fit",
                     choices=["first_fit", "sequential", "sorted_greedy"])
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="block on each packed prefill instead of decoding "
+                         "through it")
+    ap.add_argument("--target-ttft-ms", type=float, default=None,
+                    help="admit below the refill threshold once the oldest "
+                         "queued request has waited this long")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for every request (0=greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--scan-tune", default="off",
                     help="off | auto | <cache path>: shape-keyed scan "
                          "autotuning (the engine warms the cache for its "
@@ -333,24 +563,32 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, args.slots, args.max_len,
-                         policy=args.policy)
+                         policy=args.policy, overlap=not args.no_overlap,
+                         target_ttft_ms=args.target_ttft_ms)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(5, 40, size=args.requests)
     t0 = time.perf_counter()
     for n in lens:
-        engine.submit(rng.integers(1, cfg.vocab, size=int(n)), # noqa: E501
-                      args.new_tokens)
+        engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
+                      args.new_tokens, temperature=args.temperature,
+                      top_k=args.top_k, top_p=args.top_p)
     outs = engine.run()
     dt = time.perf_counter() - t0
     st = engine.stats
     for rid in sorted(outs)[:4]:
         print(f"req{rid}: prompt[{lens[rid]}] -> {outs[rid][:8]}…")
+    pct = st.ttft_percentiles()
     print(f"{len(outs)} requests, {st.generated} tokens in {dt:.2f}s "
           f"({st.generated / dt:.1f} tok/s incl. compile) — "
-          f"{st.prefills} prefills ({st.midflight_refills} mid-flight), "
+          f"{st.prefills} prefills ({st.midflight_refills} mid-flight, "
+          f"{st.overlapped_prefills} overlapped, {st.early_admits} early), "
           f"{st.decode_steps} decode steps, "
           f"{len(st.buckets)} prefill shape(s) compiled")
+    itl = f"{np.percentile(st.itl_ms, 50):.2f}ms" if st.itl_ms else "n/a"
+    print(f"TTFT p50 {pct.get('p50', 0):.1f}ms p95 {pct.get('p95', 0):.1f}ms "
+          f"over {len(st.ttft_ms)} requests; "
+          f"ITL p50 {itl} over {len(st.itl_ms)} decode tokens")
 
 
 if __name__ == "__main__":

@@ -921,6 +921,66 @@ def step_slstm(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
 
 
 # ===========================================================================
+# batched sampling (serving decode)
+# ===========================================================================
+# Key plumbing is raw-uint32 (B, 2) arrays so per-slot keys live as ordinary
+# pytree leaves inside jitted engine steps (scatter/carry like any other slot
+# state); `request_keys` derives a request's stream from (seed, rid) so a
+# request samples identically wherever its slot lands.
+
+def request_keys(seed, rids):
+    """Per-request PRNG keys: fold each rid into a base seed. rids (K,) int32
+    → (K, 2) uint32 key batch."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.asarray(rids, jnp.int32))
+
+
+def split_keys(keys):
+    """Advance a (B, 2) key batch one step: returns (carry, subkey), each
+    (B, 2) uint32."""
+    pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def sample_from_logits(logits, keys, temperature, top_k, top_p):
+    """Fixed-shape batched sampling over decode slots.
+
+    logits (B, V) f32; keys (B, 2) uint32 per-slot PRNG carry;
+    temperature (B,) f32 — ``<= 0`` means GREEDY (argmax, key unused but
+    still advanced so slot streams stay aligned); top_k (B,) int32 — keep
+    the k highest logits (``<= 0`` disables); top_p (B,) f32 — keep the
+    smallest prefix of the sorted distribution with mass ≥ top_p
+    (``>= 1`` disables). All three are per-slot so one jitted step serves a
+    mixed batch. Returns (tokens (B,) int32, new_keys (B, 2) uint32).
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    sorted_lg = -jnp.sort(-lg, axis=-1)                       # descending
+    # top-k: threshold at the k-th largest logit (k<=0 → full vocab)
+    k = jnp.where(top_k > 0, top_k, V).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_lg,
+                              jnp.clip(k - 1, 0, V - 1)[:, None], axis=-1)
+    masked = jnp.where(lg >= kth, lg, -jnp.inf)
+    # top-p (nucleus): keep sorted tokens while the mass BEFORE them < p —
+    # always keeps at least the argmax; threshold back onto unsorted logits
+    probs = jax.nn.softmax(sorted_lg, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs
+    nkeep = (before < jnp.clip(top_p, 0.0, 1.0)[:, None]).sum(-1)
+    pth = jnp.take_along_axis(sorted_lg,
+                              jnp.clip(nkeep - 1, 0, V - 1)[:, None], axis=-1)
+    masked = jnp.where(lg >= pth, masked, -jnp.inf)
+    carry, sub = split_keys(keys)
+    gumbel = jax.vmap(lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(
+        sub)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jnp.argmax(masked / temp + gumbel, axis=-1).astype(jnp.int32)
+    tok = jnp.where(temperature > 0.0, sampled, greedy_tok)
+    return tok, carry
+
+
+# ===========================================================================
 # kind registry
 # ===========================================================================
 

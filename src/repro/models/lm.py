@@ -461,6 +461,30 @@ class LM:
         logits = (x[:, 0] @ self._head_t(params).astype(x.dtype))
         return logits.astype(jnp.float32), cache
 
+    def decode_step_sample(self, params, cache, tokens_t, cache_len, keys,
+                           temperature, top_k, top_p,
+                           reset: Optional[jnp.ndarray] = None):
+        """One fused decode + batched-sampling step over all slots.
+
+        keys (B, 2) uint32 per-slot PRNG carry; temperature/top_k/top_p (B,)
+        per-slot sampling knobs (temperature <= 0 → greedy; see
+        blocks.sample_from_logits). ONE jitted call per token — the sampled
+        token never round-trips to the host between the forward and the
+        sample. Returns (tokens (B,) int32, logits (B, V) f32, new_cache,
+        new_keys)."""
+        logits, cache = self.decode_step(params, cache, tokens_t, cache_len,
+                                         reset)
+        tok, keys = B.sample_from_logits(logits, keys, temperature, top_k,
+                                         top_p)
+        return tok, logits, cache, keys
+
+    def sample_tokens(self, logits, keys, temperature, top_k, top_p):
+        """Sample one token per row from already-computed logits (the packed
+        prefill's (K, V) segment-end logits, flattened). Same per-row knob
+        semantics as ``decode_step_sample``; returns (tokens (K,) int32,
+        new_keys (K, 2))."""
+        return B.sample_from_logits(logits, keys, temperature, top_k, top_p)
+
 
 def build_model(cfg: ArchConfig) -> LM:
     return LM(cfg)

@@ -1,0 +1,92 @@
+"""benchmarks/compare.py CLI contracts: the --accept baseline promotion
+(staging .new.json → committed baseline, staging file removed) and the
+--schema structural check the CI bench smoke gates on."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+COMPARE = os.path.join(REPO, "benchmarks", "compare.py")
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, COMPARE, *args],
+                          capture_output=True, text=True)
+
+
+def _rec(schedule, us, **extra):
+    return {"op": "serve", "shape": "s1", "schedule": schedule,
+            "us_per_call": us, "tok_per_s": 1e6 / us, **extra}
+
+
+def _write(path, recs):
+    with open(path, "w") as f:
+        json.dump(recs, f)
+
+
+def test_accept_promotes_and_removes_staging(tmp_path):
+    old = tmp_path / "BENCH_x.json"
+    new = tmp_path / "BENCH_x.new.json"
+    _write(old, [_rec("a", 100.0)])
+    staged = [_rec("a", 250.0)]              # a >10% regression, on purpose
+    _write(new, staged)
+    r = _run("--pair", str(old), str(new), "--accept")
+    # accepting is the operator's call: regressions are SHOWN, not fatal
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout and "accepted" in r.stdout
+    assert not new.exists()                  # staging file cleaned up
+    assert json.load(open(old)) == staged    # baseline replaced
+
+
+def test_accept_first_baseline_and_optional_missing(tmp_path):
+    old = tmp_path / "BENCH_y.json"
+    new = tmp_path / "BENCH_y.new.json"
+    _write(new, [_rec("a", 10.0)])
+    r = _run("--pair", str(old), str(new),
+             "--optional-pair", str(tmp_path / "no.json"),
+             str(tmp_path / "no.new.json"), "--accept")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert json.load(open(old)) == [_rec("a", 10.0)]
+    assert not new.exists()
+    assert "skipping accept" in r.stdout
+    # a REQUIRED pair with no staging file still fails the accept run
+    r = _run("--pair", str(old), str(new), "--accept")
+    assert r.returncode == 1
+    assert "MISSING staging" in r.stdout
+
+
+def test_compare_without_accept_still_gates(tmp_path):
+    old = tmp_path / "BENCH_z.json"
+    new = tmp_path / "BENCH_z.new.json"
+    _write(old, [_rec("a", 100.0)])
+    _write(new, [_rec("a", 250.0)])
+    r = _run("--pair", str(old), str(new))
+    assert r.returncode == 1                 # the plain gate still fails
+    assert new.exists() and "REGRESSION" in r.stdout
+
+
+def test_schema_ok_and_violations(tmp_path):
+    good = tmp_path / "good.json"
+    _write(good, [_rec("a", 10.0, ttft_p50_ms=1.5, ttft_p95_ms=9.0),
+                  _rec("b", 20.0)])
+    r = _run("--schema", str(good))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK, 2 records" in r.stdout
+
+    bad = tmp_path / "bad.json"
+    _write(bad, [
+        {"op": "serve", "shape": "s1"},                       # missing keys
+        _rec("a", -5.0),                                      # bad number
+        _rec("c", 10.0, ttft_p50_ms="fast"),                  # bad ttft type
+        _rec("d", 10.0), _rec("d", 11.0),                     # duplicate row
+    ])
+    r = _run("--schema", str(bad))
+    assert r.returncode == 1
+    for frag in ("schedule", "us_per_call", "ttft_p50_ms", "duplicate"):
+        assert frag in r.stdout, f"{frag} not reported:\n{r.stdout}"
+
+    empty = tmp_path / "empty.json"
+    _write(empty, [])
+    assert _run("--schema", str(empty)).returncode == 1
+    assert _run("--schema", str(tmp_path / "missing.json")).returncode == 1

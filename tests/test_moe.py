@@ -41,6 +41,7 @@ def _naive(p, x, cfg):
     return out
 
 
+@pytest.mark.slow          # 10-example (T, E, K) grid, ~80s of recompiles
 @given(st.integers(1, 24), st.integers(2, 6), st.integers(1, 2))
 @settings(max_examples=10, deadline=None)
 def test_sort_dispatch_matches_naive(T, E, K):

@@ -5,7 +5,12 @@ prefill (``model.prefill_packed``) must hand off per-segment decode caches
 and segment-end logits that match N individual ``model.prefill`` calls, for
 every cached block kind (attn full + windowed, mamba, mamba2, rec, mlstm,
 slstm). The engine tests then cover EOS termination, mid-flight slot refill
-and agreement with per-request reference decoding.
+and agreement with per-request reference decoding — including the
+OVERLAPPED engine (async prefill left in flight across decode steps), the
+TTFT-driven admission policy (scripted clock), batched
+temperature/top-k/top-p sampling (exact parity vs a scripted key-stream
+reference, plus distribution sanity), and ``ServeStats`` accounting against
+a fully scripted admission trace.
 """
 import dataclasses
 
@@ -16,7 +21,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.core import packing
-from repro.launch.serve import ServeEngine
+from repro.launch.serve import ServeEngine, ServeStats
+from repro.models import blocks as B
 from repro.models.lm import build_model
 
 
@@ -165,6 +171,7 @@ def tiny_engine_model():
     return cfg, model, params
 
 
+@pytest.mark.slow
 def test_engine_mixed_lengths_midflight_refill(tiny_engine_model, rng):
     """More requests than slots, mixed prompt AND output lengths: every
     request matches its per-request reference, refills happen while other
@@ -188,6 +195,41 @@ def test_engine_mixed_lengths_midflight_refill(tiny_engine_model, rng):
     assert st.midflight_refills > 0          # refilled without draining
     assert st.buckets == {(2, 32)}           # one compiled prefill shape
     assert not engine._active_slots() and not engine.queue
+    assert len(st.ttft_ms) == 10             # one TTFT per request
+    assert len(st.itl_ms) == sum(budgets) - 10   # every non-first token
+
+
+@pytest.mark.slow
+def test_overlap_engine_token_identical_greedy(tiny_engine_model, rng):
+    """TENTPOLE acceptance: the overlapped engine (prefill left in flight
+    while decode keeps stepping) emits token streams identical to the
+    per-request reference. The readiness probe is scripted to stay False
+    for several engine steps, forcing a wide overlap window."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(4, 30, size=8)]
+    budgets = [int(b) for b in rng.integers(3, 8, size=8)]
+    engine = ServeEngine(model, params, num_slots=3, max_len=64,
+                         prefill_rows=2, buckets=(32,), max_segments=2,
+                         refill_threshold=1, overlap=True)
+    orig_ready = engine._prefill_ready
+    probes = {"n": 0}
+
+    def slow_device(inflight):          # not ready for the first 3 probes
+        probes["n"] += 1
+        return probes["n"] % 4 == 0 and orig_ready(inflight)
+
+    engine._prefill_ready = slow_device
+    for p, b in zip(prompts, budgets):
+        engine.submit(p, b)
+    outs = engine.run()
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        assert outs[i] == _reference_decode(model, params, p, b, 64), \
+            f"request {i}"
+    st = engine.stats
+    assert st.overlapped_prefills > 0    # prefills landed mid-decode
+    assert not engine._active_slots() and not engine.queue
+    assert engine._inflight is None
 
 
 def test_engine_eos_terminates_slot(tiny_engine_model, rng):
@@ -252,6 +294,177 @@ def test_engine_matches_wave_outputs(tiny_engine_model, rng):
         assert outs[rid] == w
 
 
+# ---------------------------------------------------------------------------
+# batched sampling
+# ---------------------------------------------------------------------------
+
+def _reference_decode_sampled(model, params, prompt, max_new, rid, seed,
+                              temperature, top_k, top_p, max_len=64):
+    """Scripted key-stream reference: fold (seed, rid) into a key exactly as
+    the engine does, sample the prefill token, then decode+sample per step."""
+    n = len(prompt)
+    batch = {"tokens": jnp.asarray(prompt)[None],
+             "positions": jnp.arange(n, dtype=jnp.int32)[None],
+             "segment_ids": jnp.ones((1, n), jnp.int32)}
+    lg, cache, clen = model.prefill(params, batch, max_len)
+    keys = B.request_keys(seed, [rid])
+    ta = jnp.asarray([temperature], jnp.float32)
+    ka = jnp.asarray([top_k], jnp.int32)
+    pa = jnp.asarray([top_p], jnp.float32)
+    tok, keys = B.sample_from_logits(lg, keys, ta, ka, pa)
+    out = [int(tok[0])]
+    for t in range(max_new - 1):
+        lg, cache = model.decode_step(params, cache, tok[:, None], clen + t)
+        tok, keys = B.sample_from_logits(lg, keys, ta, ka, pa)
+        out.append(int(tok[0]))
+    return out
+
+
+@pytest.mark.slow
+def test_sampled_engine_matches_scripted_reference(tiny_engine_model, rng):
+    """Sampling parity: a request's (seed, rid)-derived key stream makes its
+    sampled tokens independent of slot placement and admission order — the
+    engine matches a per-request scripted reference token for token."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
+               for n in rng.integers(5, 28, size=6)]
+    engine = ServeEngine(model, params, num_slots=3, max_len=64,
+                         prefill_rows=2, buckets=(32,), max_segments=2,
+                         refill_threshold=1, sample_seed=7)
+    rids = [engine.submit(p, 5, temperature=0.8, top_k=5)
+            for p in prompts]
+    # one greedy request rides in the same slots: a mixed batch must keep
+    # BOTH contracts (greedy rows are exact argmax inside the sampled step)
+    greedy_prompt = rng.integers(1, cfg.vocab, size=13).astype(np.int32)
+    rg = engine.submit(greedy_prompt, 5)
+    outs = engine.run()
+    for i, rid in enumerate(rids):
+        ref = _reference_decode_sampled(model, params, prompts[i], 5, rid,
+                                        7, 0.8, 5, 1.0)
+        assert outs[rid] == ref, f"request {i}"
+    assert outs[rg] == _reference_decode(model, params, greedy_prompt, 5, 64)
+
+
+def test_sampling_distribution_sanity():
+    """sample_from_logits unit contract: greedy at temperature 0; top-k=1
+    and tiny top-p collapse to argmax; sampled tokens stay inside the top-k
+    set; a hot temperature actually spreads mass across > 1 token."""
+    logits = jnp.asarray(np.tile(
+        np.array([4.0, 3.5, 3.0, -1.0, -2.0, -30.0], np.float32), (64, 1)))
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(3), i))(
+        jnp.arange(64))
+    zeros = jnp.zeros((64,), jnp.float32)
+    ones_p = jnp.ones((64,), jnp.float32)
+    k0 = jnp.zeros((64,), jnp.int32)
+    # temperature 0 → argmax, whatever the key
+    tok, keys2 = B.sample_from_logits(logits, keys, zeros, k0, ones_p)
+    np.testing.assert_array_equal(np.asarray(tok), 0)
+    assert not np.array_equal(np.asarray(keys2), np.asarray(keys))
+    # top_k=1 → argmax even when hot
+    tok, _ = B.sample_from_logits(logits, keys, zeros + 2.0,
+                                  k0 + 1, ones_p)
+    np.testing.assert_array_equal(np.asarray(tok), 0)
+    # tiny top_p keeps only the argmax bucket
+    tok, _ = B.sample_from_logits(logits, keys, zeros + 2.0, k0,
+                                  ones_p * 1e-4)
+    np.testing.assert_array_equal(np.asarray(tok), 0)
+    # hot + top_k=3: every sample in {0,1,2}, and both mass spread and key
+    # advance are visible across the 64 independent rows
+    tok, _ = B.sample_from_logits(logits, keys, zeros + 2.0, k0 + 3,
+                                  ones_p)
+    t = np.asarray(tok)
+    assert set(t.tolist()) <= {0, 1, 2}
+    assert len(set(t.tolist())) > 1
+
+
+# ---------------------------------------------------------------------------
+# latency-aware admission + ServeStats accounting (scripted traces)
+# ---------------------------------------------------------------------------
+
+def test_latency_aware_admission_scripted_clock(tiny_engine_model, rng):
+    """The TTFT policy admits below the refill threshold once the oldest
+    queued request has waited past the target; without a target the same
+    trace waits for the throughput threshold."""
+    cfg, model, params = tiny_engine_model
+    a = rng.integers(1, cfg.vocab, size=7).astype(np.int32)
+    b = rng.integers(1, cfg.vocab, size=9).astype(np.int32)
+    t = {"now": 0.0}
+
+    def mk(target):
+        return ServeEngine(model, params, num_slots=2, max_len=64,
+                           prefill_rows=1, buckets=(16,), max_segments=1,
+                           refill_threshold=2, overlap=False,
+                           target_ttft_ms=target, clock=lambda: t["now"])
+
+    # --- with a 50ms target: b is admitted the moment its wait blows it
+    t["now"] = 0.0
+    eng = mk(50.0)
+    ra = eng.submit(a, 6)
+    eng.step()                       # a admitted (nothing was decoding)
+    rb = eng.submit(b, 3)
+    eng.step()                       # wait 0ms < 50ms → b stays queued
+    assert eng.stats.prefills == 1 and len(eng.queue) == 1
+    t["now"] = 0.2                   # 200ms > 50ms target
+    eng.step()
+    assert eng.stats.prefills == 2       # admitted below the threshold
+    assert eng.stats.early_admits == 1
+    assert eng.stats.midflight_refills == 1
+    outs = eng.run()
+    assert outs[ra] == _reference_decode(model, params, a, 6, 64)
+    assert outs[rb] == _reference_decode(model, params, b, 3, 64)
+    # TTFT accounting: a was admitted at once, b waited the scripted 200ms
+    assert len(eng.stats.ttft_ms) == 2
+    assert eng.stats.ttft_ms[0] == pytest.approx(0.0)
+    assert eng.stats.ttft_ms[1] == pytest.approx(200.0)
+    pct = eng.stats.ttft_percentiles()
+    assert set(pct) == {"p50", "p95"} and pct["p50"] <= pct["p95"]
+
+    # --- same trace, no target: the threshold rule alone never fires while
+    # a is decoding; b waits for a to drain
+    t["now"] = 0.0
+    eng = mk(None)
+    eng.submit(a, 6)
+    eng.step()
+    eng.submit(b, 3)
+    eng.step()
+    t["now"] = 0.2
+    eng.step()
+    assert eng.stats.prefills == 1       # still waiting
+    eng.run()
+    assert eng.stats.prefills == 2       # admitted only once a finished
+    assert eng.stats.early_admits == 0
+
+
+def test_serve_stats_accounting_scripted_trace(tiny_engine_model, rng):
+    """Every ServeStats counter against a hand-scripted admission trace:
+    2 slots, 3 requests (budgets 2/3/2) → 2 prefills (one mid-flight),
+    2 fused decode steps, 7 tokens, 15 prefilled prompt tokens."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 5, 6)]
+    engine = ServeEngine(model, params, num_slots=2, max_len=32,
+                         prefill_rows=2, buckets=(16,), max_segments=2,
+                         refill_threshold=1, overlap=False)
+    for p, budget in zip(prompts, (2, 3, 2)):
+        engine.submit(p, budget)
+    outs = engine.run()
+    assert [len(outs[i]) for i in range(3)] == [2, 3, 2]
+    st = engine.stats
+    assert st.prefills == 2
+    assert st.prefill_tokens == 4 + 5 + 6
+    assert st.midflight_refills == 1     # req2 joined while req1 decoded
+    assert st.decode_steps == 2          # step1: reqs 0+1; step2: reqs 1+2
+    assert st.generated == 7
+    assert st.buckets == {(2, 16)}
+    assert st.early_admits == 0 and st.overlapped_prefills == 0
+    assert len(st.ttft_ms) == 3          # one per request
+    assert len(st.itl_ms) == 7 - 3       # every token after each first
+    assert all(v >= 0 for v in st.ttft_ms + st.itl_ms)
+    # a reset (the benchmark's per-round discipline) starts from zeros
+    fresh = ServeStats()
+    assert fresh.ttft_percentiles() == {} and fresh.buckets == set()
+
+
 def test_submit_validation(tiny_engine_model):
     cfg, model, params = tiny_engine_model
     engine = ServeEngine(model, params, num_slots=2, max_len=32,
@@ -260,10 +473,18 @@ def test_submit_validation(tiny_engine_model):
         engine.submit(np.ones(20, np.int32), 4)      # > largest bucket
     with pytest.raises(ValueError):
         engine.submit(np.ones(10, np.int32), 30)     # prompt+new > max_len
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="non-empty"):
         engine.submit(np.ones(0, np.int32), 4)       # empty prompt
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="max_new"):
         engine.submit(np.ones(5, np.int32), 0)       # no token budget
+    with pytest.raises(ValueError, match="max_new"):
+        engine.submit(np.ones(5, np.int32), -3)
+    with pytest.raises(ValueError, match="temperature"):
+        engine.submit(np.ones(5, np.int32), 2, temperature=-0.5)
+    with pytest.raises(ValueError, match="top_k"):
+        engine.submit(np.ones(5, np.int32), 2, top_k=-5)
+    with pytest.raises(ValueError, match="top_p"):
+        engine.submit(np.ones(5, np.int32), 2, top_p=0.0)
     engine.submit(np.ones(5, np.int32), 2)
     with pytest.raises(RuntimeError):                # would clobber slots
         engine.decode_batch([np.ones(5, np.int32)], 2)
