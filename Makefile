@@ -21,8 +21,13 @@ SMOKE_SCAN ?= experiments/smoke_scan.json
 SMOKE_SERVE ?= experiments/smoke_serve.json
 SMOKE_TUNE ?= experiments/smoke_tune_cache.json
 
-.PHONY: verify verify-fast ci bench-scan bench-serve bench-tune tune-check \
-	bench-compare bench-smoke bench-accept quickstart
+# seed for the chaos lane's randomized-but-seeded FaultPlan (verify-faults);
+# bump it (or set it per-run) to explore a different fault schedule — the
+# same value always replays the same faults
+FAULT_CHAOS_SEED ?= 0
+
+.PHONY: verify verify-fast verify-faults ci bench-scan bench-serve \
+	bench-tune tune-check bench-compare bench-smoke bench-accept quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -32,10 +37,17 @@ verify:
 verify-fast:
 	$(PY) -m pytest -q -m "not slow"
 
+# chaos lane: the fault-injection suite (deterministic plans + the seeded
+# random plan in test_chaos_seeded_no_hangs_no_garbage). Fast by design —
+# the slow kill/restore round-trips stay in `make verify`.
+verify-faults:
+	FAULT_CHAOS_SEED=$(FAULT_CHAOS_SEED) \
+		$(PY) -m pytest -q -m "not slow" tests/test_faults.py
+
 # one-shot CI bundle (what .github/workflows/ci.yml runs): fast tier-1 lane,
-# tune-cache audit, and a bounded bench smoke whose JSON structure — never
-# its timings — is checked
-ci: verify-fast tune-check bench-smoke
+# chaos lane, tune-cache audit, and a bounded bench smoke whose JSON
+# structure — never its timings — is checked
+ci: verify-fast verify-faults tune-check bench-smoke
 
 # regenerate the scan-schedule matrix into $(NEW) (fig2 also warms $(TUNE)
 # for any of its shape keys the bounded sweep hasn't covered yet)

@@ -408,9 +408,9 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
     rounds = 3
     if SMOKE:
         n_requests, max_new, slots, rounds = 10, 6, 4, 2
-    print(f"# serve: padded-wave vs packed-continuous vs packed-overlap, "
-          f"tiny-mamba, {n_requests} requests, {slots} slots, "
-          f"max_new={max_new}")
+    print(f"# serve: padded-wave vs packed-continuous vs packed-overlap "
+          f"vs packed-guarded, tiny-mamba, {n_requests} requests, "
+          f"{slots} slots, max_new={max_new}")
     from repro.models.lm import build_model
     from repro.launch.serve import ServeEngine
 
@@ -456,7 +456,14 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
                           **kw)),
              ("packed_overlap", run_packed,          # async prefill dispatch
               ServeEngine(model, params, slots, max_len, overlap=True,
-                          **kw))]
+                          **kw)),
+             ("packed_guarded", run_packed,          # + numerical guard
+              # rails: per-step finiteness probes on decode logits and
+              # harvested prefill states (the fault-tolerance layer's
+              # quarantine path); the probe is fused into the jitted step,
+              # so the expected cost is <2% of decode throughput
+              ServeEngine(model, params, slots, max_len, overlap=True,
+                          guard=True, **kw))]
     for name, runner, eng in modes:            # warm-up: compile all shapes
         runner(eng)
         eng.stats = type(eng.stats)()          # count the timed rounds only
@@ -503,6 +510,11 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
          results["packed_continuous"] / results["packed_overlap"] * 100,
          f"{results['packed_continuous'] / results['packed_overlap']:.2f}x "
          f"(>= 1.0 expected: overlap must not lose throughput)")
+    guard_pct = (results["packed_guarded"] / results["packed_overlap"]
+                 - 1.0) * 100
+    _row("serve/guard_overhead_pct", guard_pct,
+         f"{guard_pct:+.1f}% decode throughput for the finiteness probes "
+         f"(< 2% expected: the probe is a fused all-reduce per step)")
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,9 @@ Packing–Unpacking Invariance end to end.
 
 CI: `.github/workflows/ci.yml` runs `make ci` on every push — the fast
 tier-1 lane (`pytest -m "not slow"`; the slow-marked engine round-trips
-and grid sweeps stay in the full local `make verify`), the tune-cache
+and grid sweeps stay in the full local `make verify`), the fault-injection
+chaos lane (`make verify-faults`, a randomized-but-seeded FaultPlan —
+same FAULT_CHAOS_SEED, same faults, any machine), the tune-cache
 audit (`make tune-check`), and a tiny-shape benchmark smoke whose JSON
 structure is schema-checked while its timings are never gated
 (`make bench-smoke`). Benchmark baselines are refreshed locally with
@@ -84,6 +86,14 @@ def main():
     #    itl_ms / ttft_percentiles() expose the resulting latencies), and
     #    submit() takes per-request temperature / top_k / top_p sampled in
     #    the fused decode step (temperature=0 → exact greedy).
+    #    The engine is fault-tolerant: per-request deadlines
+    #    (submit(..., deadline_ms=...)), cancel(rid), overload shedding
+    #    (max_queue / max_queue_age_ms → ShedError), guard=True finiteness
+    #    probes that quarantine NaN/Inf slots, and snapshot()/restore()
+    #    through checkpoint.CheckpointManager — each request's session is
+    #    one O(1) SSM state, so a killed engine resumes every in-flight
+    #    request with bit-identical remaining tokens. Failure modes are
+    #    deterministically injectable via repro.faults.FaultPlan.
     #    (see examples/serve_packed.py and `python -m repro.launch.serve`)
     from repro.launch.serve import ServeEngine
     engine = ServeEngine(model, state["params"], num_slots=4, max_len=64,

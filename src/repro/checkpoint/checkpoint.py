@@ -75,6 +75,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -109,16 +110,35 @@ class CheckpointManager:
             os.rename(tmp, final)                      # atomic publish
             self._gc()
 
+        def _write_capturing():
+            # a daemon thread's exception is otherwise printed and dropped —
+            # a checkpoint that silently failed to publish is the one
+            # failure mode a fault-tolerant trainer can't afford, so the
+            # error is held and re-raised on wait()/the next save()
+            try:
+                _write()
+            except BaseException as e:
+                self._error = e
+
         if blocking or not self.async_save:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_write_capturing,
+                                            daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join the in-flight async save. Raises if that save failed — the
+        caller finds out at the first synchronization point (here or the
+        next ``save()``), not after the restore it was counting on."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint save to {self.dir} failed: "
+                f"{err!r}") from err
 
     def _gc(self):
         steps = self.all_steps()
@@ -142,8 +162,17 @@ class CheckpointManager:
 
     def read_meta(self, step: int) -> Dict:
         path = os.path.join(self.dir, f"step_{step}", "manifest.msgpack")
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no checkpoint manifest at {path} — step {step} was never "
+                f"published (available steps: {self.all_steps()})")
         with open(path, "rb") as f:
-            return msgpack.unpackb(f.read())
+            raw = f.read()
+        try:
+            return msgpack.unpackb(raw)
+        except Exception as e:
+            raise ValueError(f"checkpoint manifest {path} is corrupt and "
+                             f"cannot be unpacked: {e!r}") from e
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None) -> Any:
@@ -156,9 +185,32 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step}")
         manifest = self.read_meta(step)
-        npz = np.load(os.path.join(d, "arrays.npz"))
-        by_path = {k: _from_storable(npz[f"k{i}"], manifest["dtypes"][i])
-                   for i, k in enumerate(manifest["keys"])}
+        arrays_path = os.path.join(d, "arrays.npz")
+        if not os.path.exists(arrays_path):
+            raise FileNotFoundError(
+                f"checkpoint step {step} has a manifest but no arrays.npz "
+                f"at {arrays_path} — the checkpoint directory was "
+                f"partially deleted")
+        try:
+            npz = np.load(arrays_path)
+            stored = set(npz.files)
+        except Exception as e:
+            raise ValueError(f"checkpoint leaf file {arrays_path} is "
+                             f"corrupt and cannot be read: {e!r}") from e
+        by_path = {}
+        for i, k in enumerate(manifest["keys"]):
+            if f"k{i}" not in stored:
+                raise ValueError(
+                    f"checkpoint step {step} is corrupt: the manifest "
+                    f"records leaf '{k}' but {arrays_path} has no entry "
+                    f"'k{i}' ({len(stored)} of {len(manifest['keys'])} "
+                    f"leaves present)")
+            try:
+                arr = npz[f"k{i}"]
+            except Exception as e:
+                raise ValueError(f"checkpoint leaf '{k}' in {arrays_path} "
+                                 f"is corrupt: {e!r}") from e
+            by_path[k] = _from_storable(arr, manifest["dtypes"][i])
 
         tpl_flat = _flatten(template)
         missing = set(tpl_flat) - set(by_path)

@@ -1,0 +1,166 @@
+"""Deterministic fault-injection seam for the serve stack.
+
+A production engine meets failures the test suite never wrote: a packed
+prefill dispatch dies (driver OOM, preempted device), a decode step emits
+NaN/Inf logits (bad weight load, overflowed accumulator), the process is
+killed mid-flight. ``FaultPlan`` makes every one of those failure modes a
+*deterministic, replayable* event on CPU: the ServeEngine consults the plan
+at its three seams — prefill dispatch (``fails_prefill``), the in-flight
+readiness probe (``prefill_not_ready``), and the decode step
+(``decode_poison`` / ``kills``) — so a test can script "fail the 2nd
+prefill while it overlaps decode" or "poison slot 3's logits at step 7 and
+prove the other slots' token streams are bit-identical".
+
+The plan is *pure*: every query is a function of (plan, index), never of
+call order, so an engine that re-runs the same admission trace sees the
+same faults — which is what makes kill-and-restore round-trips provable.
+
+``FaultPlan.random(seed)`` draws a randomized-but-seeded plan for the
+chaos lane (``make verify-faults``): same seed, same faults, forever.
+
+Poison values use NaN *or* Inf (both non-finite; both must trip the
+engine's guard rails — ``jnp.isfinite`` catches either).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class EngineKilled(RuntimeError):
+    """Simulated process death: the engine loses everything not persisted
+    by its last ``snapshot()``. Raised *before* the indexed decode step, so
+    device state is at a clean step boundary when the plan fires."""
+
+
+class PrefillFault(RuntimeError):
+    """Injected failure of a packed prefill dispatch (stands in for a
+    device OOM / preemption on the packed forward)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Declarative fault schedule, threaded through ServeEngine.
+
+    fail_prefill     index of the prefill dispatch that raises
+                     (0-based over ``stats.prefills``); the engine fails
+                     that round's requests and keeps serving.
+    delay_prefill    {prefill index: n} — the readiness probe reports
+                     not-ready for the first n probes of that prefill,
+                     scripting a wide overlap window deterministically.
+    poison_prefill   {prefill index: [(row, seg), …]} — NaN the harvested
+                     states of those packed segments (``poison_states``).
+    poison_decode    {decode step: [slot, …]} — add a non-finite value to
+                     those slots' logits inside the guarded decode step.
+    poison_value     what the poison injects (NaN by default; ±Inf also
+                     legal — anything non-finite).
+    kill_at_step     raise ``EngineKilled`` before this decode step.
+    """
+    fail_prefill: Optional[int] = None
+    delay_prefill: Dict[int, int] = dataclasses.field(default_factory=dict)
+    poison_prefill: Dict[int, List[Tuple[int, int]]] = \
+        dataclasses.field(default_factory=dict)
+    poison_decode: Dict[int, List[int]] = \
+        dataclasses.field(default_factory=dict)
+    poison_value: float = float("nan")
+    kill_at_step: Optional[int] = None
+
+    # ------------------------------------------------------------- queries
+    def fails_prefill(self, pidx: int) -> bool:
+        return self.fail_prefill is not None and pidx == self.fail_prefill
+
+    def prefill_not_ready(self, pidx: int, probes: int) -> bool:
+        """True while the plan still delays prefill ``pidx`` (the engine
+        counts the probes it has already made)."""
+        return probes < self.delay_prefill.get(pidx, 0)
+
+    def prefill_poison(self, pidx: int) -> Optional[List[Tuple[int, int]]]:
+        return self.poison_prefill.get(pidx)
+
+    def decode_poison(self, step: int, num_slots: int) \
+            -> Optional[np.ndarray]:
+        """(num_slots,) float32 additive poison vector for this decode
+        step, or None when the step is clean. Unpoisoned slots get 0.0 —
+        adding it is a bitwise no-op on their logits."""
+        slots = self.poison_decode.get(step)
+        if not slots:
+            return None
+        v = np.zeros(num_slots, np.float32)
+        for s in slots:
+            v[s] = self.poison_value
+        return v
+
+    def kills(self, step: int) -> bool:
+        return self.kill_at_step is not None and step == self.kill_at_step
+
+    def needs_guard(self) -> bool:
+        """Plans that poison numerics only observable through the engine's
+        finiteness probes (the engine auto-enables its guard for them)."""
+        return bool(self.poison_prefill or self.poison_decode)
+
+    def empty(self) -> bool:
+        return (self.fail_prefill is None and not self.delay_prefill
+                and not self.poison_prefill and not self.poison_decode
+                and self.kill_at_step is None)
+
+    # ---------------------------------------------------------- generation
+    @classmethod
+    def random(cls, seed: int, *, max_prefills: int = 4,
+               max_steps: int = 30, num_slots: int = 4,
+               prefill_rows: int = 2, max_segments: int = 2,
+               allow_kill: bool = False) -> "FaultPlan":
+        """Randomized-but-seeded plan for the chaos lane: each fault
+        category fires with probability 1/2, placed uniformly inside the
+        given workload envelope. Same seed → same plan, on any machine.
+        ``allow_kill`` is opt-in because a kill needs the caller to
+        orchestrate snapshot/restore around it."""
+        rng = np.random.default_rng(seed)
+        plan = cls()
+        if rng.random() < 0.5:
+            plan.fail_prefill = int(rng.integers(0, max_prefills))
+        if rng.random() < 0.5:
+            plan.delay_prefill = {int(rng.integers(0, max_prefills)):
+                                  int(rng.integers(1, 5))}
+        if rng.random() < 0.5:
+            plan.poison_prefill = {
+                int(rng.integers(0, max_prefills)):
+                [(int(rng.integers(0, prefill_rows)),
+                  int(rng.integers(0, max_segments)))]}
+        if rng.random() < 0.5:
+            plan.poison_decode = {int(rng.integers(1, max_steps)):
+                                  [int(rng.integers(0, num_slots))]}
+        if rng.random() < 0.5:
+            plan.poison_value = float(rng.choice([np.nan, np.inf, -np.inf]))
+        if allow_kill and rng.random() < 0.5:
+            plan.kill_at_step = int(rng.integers(2, max_steps))
+        return plan
+
+
+def poison_states(states, rows_segs, value: float = float("nan")):
+    """Inject a non-finite value into the harvested prefill states of the
+    given packed segments. ``states`` is the pytree from
+    ``model.prefill_packed`` — leaves carry (B, S, …) leading dims, or
+    (n_units, B, S, …) for unit-stacked layers; ``rows_segs`` is a list of
+    (row, seg) targets. Implemented as a (B, S) multiplicative mask (1
+    everywhere, ``value`` at the targets) broadcast into each leaf, so one
+    tree_map poisons every layer's state for the segment — exactly what a
+    corrupted packed forward would look like."""
+    import jax
+
+    def one(path, leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf                 # int bookkeeping can't hold a NaN
+        stacked = any(getattr(p, "key", None) == "units" for p in path)
+        bs = leaf.shape[1:3] if stacked else leaf.shape[:2]
+        m = np.ones(bs, np.float32)
+        for r, s in rows_segs:
+            m[r, s] = value
+        mask = jnp.asarray(m)
+        extra = leaf.ndim - (3 if stacked else 2)
+        mask = mask.reshape(((1,) if stacked else ()) + bs + (1,) * extra)
+        return (leaf * mask).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, states)

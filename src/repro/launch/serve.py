@@ -40,6 +40,38 @@ Compile discipline: decode is one fixed shape; prefill shapes are bounded
 by the bucket list (rows × bucket-capacity), NOT by the number of distinct
 prompt lengths — ``stats.buckets`` counts the shapes actually compiled.
 
+On top of the overlap/latency/sampling engine sits a FAULT-TOLERANCE
+layer (PackMamba's O(1) per-request state is what makes it cheap — a
+session *is* a few KB of SSM/conv/KV state, not a paged KV region):
+
+* **Request lifecycle**: ``submit(..., deadline_ms=)`` enforces a
+  deadline at admission, at prefill landing, and per decode step;
+  ``cancel(rid)`` revokes a request wherever it is (queued, reserved by
+  an in-flight prefill, or decoding); when the admission queue exceeds
+  ``max_queue`` entries or its head is older than ``max_queue_age_ms``,
+  ``submit`` sheds the request (``ShedError`` with a reason) instead of
+  queueing forever. ``engine.status[rid]`` is the explicit outcome:
+  queued → active → done | failed | expired | cancelled (``errors[rid]``
+  carries the diagnostic for failures).
+* **Numerical guard rails** (``guard=True``): a per-step finiteness probe
+  on decode logits (``model.decode_step_sample_guarded``) and a
+  per-segment probe on harvested prefill states (``model.prefill_probe``).
+  A non-finite slot is QUARANTINED — request failed with a diagnostic,
+  slot freed for reuse — instead of silently streaming garbage; healthy
+  slots' token streams are bit-identical to an unguarded run (the probe
+  only reads the logits; the poison seam adds 0.0).
+* **Fault injection** (``faults=FaultPlan(...)``, repro/faults.py): fail
+  or delay the Nth prefill dispatch, poison decode logits or prefill
+  states, kill the engine at step K — every failure mode above is
+  deterministically testable on CPU (``make verify-faults``).
+* **Crash recovery**: ``snapshot(manager)`` persists the whole engine —
+  per-slot SSM/conv/KV states, sampling keys, generated-token tails,
+  queue contents, statuses — through checkpoint.CheckpointManager;
+  ``restore(manager)`` on a fresh engine resumes every in-flight request
+  and completes it with exactly the tokens an uninterrupted run would
+  have produced (decode is deterministic given the restored state, and
+  per-request sampling keys make streams slot-independent).
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba-110m --tiny \
       --slots 8 --requests 24 --new-tokens 16 --temperature 0.8 --top-k 40
 """
@@ -56,8 +88,18 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.core import packing
+from repro.faults import EngineKilled, FaultPlan, poison_states
 from repro.models import blocks as B
 from repro.models.lm import build_model
+
+
+class ShedError(RuntimeError):
+    """Request rejected at admission (overload shedding). ``reason`` says
+    which bound tripped; the request was never queued and has no rid."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -70,6 +112,7 @@ class Request:
     top_k: int = 0             # 0 = full vocab
     top_p: float = 1.0         # 1 = full mass
     submit_t: float = 0.0      # engine clock at submit()
+    deadline_ms: Optional[float] = None   # total budget from submit_t
 
 
 @dataclasses.dataclass
@@ -83,6 +126,11 @@ class ServeStats:
     #                                ≥1 decode step before landing
     early_admits: int = 0          # admissions forced by the TTFT policy
     #                                below the refill threshold
+    shed: int = 0                  # submits rejected by overload shedding
+    expired: int = 0               # requests terminated by their deadline
+    cancelled: int = 0             # requests revoked via cancel()
+    quarantined: int = 0           # slots failed by the finiteness probes
+    prefill_faults: int = 0        # prefill dispatches that raised
     buckets: Optional[set] = None  # distinct (rows, L) prefill shapes used
     ttft_ms: Optional[List[float]] = None   # per request: submit→first token
     itl_ms: Optional[List[float]] = None    # per decode token: inter-token
@@ -135,7 +183,11 @@ class ServeEngine:
                  overlap: bool = True,
                  target_ttft_ms: Optional[float] = None,
                  sample_seed: int = 0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 max_queue: Optional[int] = None,
+                 max_queue_age_ms: Optional[float] = None,
+                 guard: bool = False,
+                 faults: Optional[FaultPlan] = None):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -149,6 +201,12 @@ class ServeEngine:
         self.target_ttft_ms = target_ttft_ms
         self.sample_seed = sample_seed
         self._clock = clock
+        self.max_queue = max_queue
+        self.max_queue_age_ms = max_queue_age_ms
+        self.faults = faults
+        # poison faults are only observable through the finiteness probes,
+        # so a plan that injects them turns the guard on by itself
+        self.guard = guard or (faults is not None and faults.needs_guard())
         # A decode step costs the same whether a slot is active or idle
         # (fixed batch), so single-slot refills waste a whole prefill
         # forward to activate one slot. Batch admissions: only refill once
@@ -192,6 +250,23 @@ class ServeEngine:
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
         self._step_greedy = jax.jit(greedy_step, donate_argnums=(1,))
+
+        # guard-rail variants: same forward, plus the fused finiteness
+        # probe and the additive poison seam (all-zero poison is a bitwise
+        # no-op on the logits, so guarded streams match unguarded ones)
+        def greedy_step_guarded(params, cache, toks, clen, poison):
+            logits, cache = model.decode_step(params, cache, toks, clen,
+                                              None)
+            logits = logits + poison[:, None]
+            return (jnp.argmax(logits, -1).astype(jnp.int32), cache,
+                    jnp.all(jnp.isfinite(logits), axis=-1))
+
+        self._step_greedy_guarded = jax.jit(greedy_step_guarded,
+                                            donate_argnums=(1,))
+        self._step_guarded = jax.jit(model.decode_step_sample_guarded,
+                                     donate_argnums=(1,))
+        self._probe = jax.jit(model.prefill_probe)
+        self._poison0 = jnp.zeros((num_slots,), jnp.float32)
         self._scatter = jax.jit(model.scatter_into_cache,
                                 donate_argnums=(0,))
         self._sample_flat = jax.jit(model.sample_tokens)
@@ -207,13 +282,31 @@ class ServeEngine:
         self.slot_last_t = [0.0] * num_slots      # last token host-observed
         self._inflight: Optional[dict] = None     # one pending prefill
         self.outputs: Dict[int, List[int]] = {}
+        # explicit per-request lifecycle: queued → active → done | failed |
+        # expired | cancelled; errors[rid] holds the failure diagnostic
+        self.status: Dict[int, str] = {}
+        self.errors: Dict[int, str] = {}
+        self.resumed: set = set()     # rids restored from a snapshot
         self.stats = ServeStats()
         self._next_rid = 0
 
     # ------------------------------------------------------------ admission
     def submit(self, tokens, max_new: int, eos: Optional[int] = None,
                temperature: float = 0.0, top_k: int = 0,
-               top_p: float = 1.0) -> int:
+               top_p: float = 1.0, deadline_ms: Optional[float] = None,
+               rid: Optional[int] = None) -> int:
+        """Enqueue one request; returns its rid.
+
+        ``deadline_ms`` bounds submit→completion: a request still queued,
+        still in a prefill, or still decoding when its budget runs out is
+        terminated with status "expired" (tokens generated so far are
+        kept). ``rid`` lets a client pin its own id (e.g. resubmission
+        with stable ids); duplicates of ANY known rid are rejected here
+        rather than corrupting that request's output stream later.
+        Raises ``ShedError`` — without queueing — when the admission queue
+        is over its depth (``max_queue``) or age (``max_queue_age_ms``)
+        bound: under overload a fast explicit reject beats an unbounded
+        queue every client has already given up on."""
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 1 or len(tokens) == 0:
             raise ValueError(
@@ -224,7 +317,8 @@ class ServeEngine:
                              f"request must generate at least one token")
         if len(tokens) > self.buckets[-1]:
             raise ValueError(f"prompt length {len(tokens)} exceeds largest "
-                             f"prefill bucket {self.buckets[-1]}")
+                             f"prefill bucket {self.buckets[-1]} — split "
+                             f"the prompt or configure a larger bucket")
         if len(tokens) + max_new > self.max_len:
             raise ValueError(f"prompt {len(tokens)} + max_new {max_new} "
                              f"exceeds slot capacity {self.max_len}")
@@ -235,13 +329,38 @@ class ServeEngine:
                              f"got {top_k}")
         if not 0.0 < top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {top_p}")
-        rid = self._next_rid
-        self._next_rid += 1
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if rid is not None:
+            if rid < 0:
+                raise ValueError(f"rid must be >= 0, got {rid}")
+            if rid in self.outputs:
+                raise ValueError(
+                    f"duplicate request id {rid} (status "
+                    f"{self.status.get(rid)!r}) — rids identify output "
+                    f"streams and may never be reused")
+        now = self._clock()
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.stats.shed += 1
+            raise ShedError(f"shed: admission queue depth {len(self.queue)} "
+                            f">= max_queue {self.max_queue}")
+        if self.max_queue_age_ms is not None and self.queue:
+            age_ms = (now - self.queue[0].submit_t) * 1e3
+            if age_ms > self.max_queue_age_ms:
+                self.stats.shed += 1
+                raise ShedError(
+                    f"shed: head-of-line request has waited {age_ms:.0f}ms "
+                    f"> max_queue_age_ms {self.max_queue_age_ms} — the "
+                    f"engine is not keeping up")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
         self.queue.append(Request(rid, tokens, max_new,
                                   self.eos if eos is None else eos,
                                   temperature, int(top_k), top_p,
-                                  self._clock()))
+                                  now, deadline_ms))
         self.outputs[rid] = []
+        self.status[rid] = "queued"
         return rid
 
     def _free_slots(self) -> List[int]:
@@ -259,6 +378,62 @@ class ServeEngine:
         self.slot_remaining[slot] -= 1
         if tok == req.eos or self.slot_remaining[slot] <= 0:
             self.slot_req[slot] = None
+            self.status[req.rid] = "done"
+
+    # ------------------------------------------------------------ lifecycle
+    def _terminate(self, rid: int, status: str, reason: str):
+        """Move a request to a terminal status with its diagnostic."""
+        self.status[rid] = status
+        self.errors[rid] = reason
+        if status == "expired":
+            self.stats.expired += 1
+        elif status == "cancelled":
+            self.stats.cancelled += 1
+
+    def _deadline_over(self, req: Request, now: float) -> bool:
+        return req.deadline_ms is not None and \
+            (now - req.submit_t) * 1e3 >= req.deadline_ms
+
+    def _expire_queued(self):
+        """Admission-side deadline enforcement: drop queued requests whose
+        budget already ran out — prefilling them would waste a forward on
+        an answer nobody is waiting for."""
+        if not any(r.deadline_ms is not None for r in self.queue):
+            return
+        now = self._clock()
+        kept = collections.deque()
+        for r in self.queue:
+            if self._deadline_over(r, now):
+                self._terminate(r.rid, "expired",
+                                f"deadline {r.deadline_ms:.0f}ms exceeded "
+                                f"while queued")
+            else:
+                kept.append(r)
+        self.queue = kept
+
+    def cancel(self, rid: int) -> bool:
+        """Revoke a request wherever it is: queued (dequeued now), reserved
+        by an in-flight prefill (its slot is released when the prefill
+        lands), or actively decoding (slot freed now). Tokens generated so
+        far stay in ``outputs[rid]``. Returns False for unknown rids and
+        requests already in a terminal state — cancelling twice, or after
+        completion, is a harmless no-op."""
+        st = self.status.get(rid)
+        if st == "queued":
+            self.queue = collections.deque(
+                r for r in self.queue if r.rid != rid)
+            self._terminate(rid, "cancelled", "cancelled while queued")
+            return True
+        if st == "active":
+            for i, r in enumerate(self.slot_req):
+                if r is not None and r.rid == rid:
+                    self.slot_req[i] = None
+                    self._terminate(rid, "cancelled", "cancelled mid-decode")
+                    return True
+            # reserved by the in-flight prefill: _land_prefill skips it
+            self._terminate(rid, "cancelled", "cancelled during prefill")
+            return True
+        return False
 
     def _admission_due(self, free: List[int]) -> bool:
         """Throughput rule (enough free slots, or nothing decoding) with a
@@ -308,6 +483,21 @@ class ServeEngine:
             self.stats.midflight_refills += 1
         for _ in admitted:          # admitted is always a queue prefix
             self.queue.popleft()
+        for req in admitted:
+            self.status[req.rid] = "active"
+        pidx = self.stats.prefills      # this dispatch's fault-plan index
+        if self.faults is not None and self.faults.fails_prefill(pidx):
+            # the packed forward died (injected stand-in for device OOM /
+            # preemption): fail this round's requests with an explicit
+            # status and keep serving — no slot was reserved, no state
+            # landed, the live slots never notice
+            self.stats.prefills += 1
+            self.stats.prefill_faults += 1
+            for req in admitted:
+                self._terminate(req.rid, "failed",
+                                f"prefill dispatch {pidx} failed "
+                                f"(injected fault)")
+            return False
         pb = packing.pack([r.tokens for r in admitted], L,
                           policy=self.policy, num_rows=self.prefill_rows)
         ends = packing.segment_ends(pb, self.max_segments)
@@ -315,6 +505,11 @@ class ServeEngine:
                  "segment_ids": pb.segment_ids}
         logits, states, seg_lens = self._prefill(self.params, batch,
                                                  ends=jnp.asarray(ends))
+        if self.faults is not None:
+            rs = self.faults.prefill_poison(pidx)
+            if rs:
+                states = poison_states(states, rs,
+                                       self.faults.poison_value)
         # (row, seg) → admitted request → slot; fixed-size scatter with the
         # num_slots sentinel dropping unused entries (one compile per bucket)
         K = self.prefill_rows * self.max_segments
@@ -354,7 +549,11 @@ class ServeEngine:
             "seg_lens": seg_lens, "src": jnp.asarray(src),
             "dst": jnp.asarray(dst), "admitted": admitted,
             "slot_of": slot_of, "temp": temp, "topk": topk, "topp": topp,
-            "steps_waited": 0}
+            "steps_waited": 0, "pidx": pidx, "probes": 0}
+        if self.guard:
+            # per-segment finiteness of the harvested states + end logits;
+            # probed asynchronously with the prefill, read at land time
+            self._inflight["ok"] = self._probe(states, logits)
         self.stats.prefills += 1
         self.stats.prefill_tokens += sum(lens)
         self.stats.buckets.add((self.prefill_rows, L))
@@ -364,7 +563,13 @@ class ServeEngine:
 
     def _prefill_ready(self, inflight: dict) -> bool:
         """Device-side completion probe for an in-flight prefill (split out
-        so tests can script the overlap window)."""
+        so tests can script the overlap window). A fault plan can hold the
+        answer at not-ready for the first N probes — a deterministic slow
+        device stretching the overlap window."""
+        if self.faults is not None and self.faults.prefill_not_ready(
+                inflight.get("pidx", 0), inflight.get("probes", 0)):
+            inflight["probes"] = inflight.get("probes", 0) + 1
+            return False
         tok = inflight["tok"]
         ready = getattr(tok, "is_ready", None)
         return ready() if ready is not None else True
@@ -398,15 +603,35 @@ class ServeEngine:
         # is the host sync point — TTFT is measured where the token becomes
         # observable, not where the prefill was dispatched)
         first = np.asarray(inf["tok"])
+        ok = np.asarray(inf["ok"]).reshape(-1) if "ok" in inf else None
         now = self._clock()
         for qi, req in enumerate(inf["admitted"]):
             slot, r, s = inf["slot_of"][qi]
             self.slot_pending[slot] = False
+            if self.status.get(req.rid) == "cancelled":
+                continue            # revoked while the prefill was in flight
+            if self._deadline_over(req, now):
+                self._terminate(req.rid, "expired",
+                                f"deadline {req.deadline_ms:.0f}ms exceeded "
+                                f"during prefill")
+                continue
+            k = r * self.max_segments + s
+            if ok is not None and not ok[k]:
+                # quarantine: the harvested state (or its end logits) went
+                # non-finite — fail the request with a diagnostic and leave
+                # the slot free (its cache row is fully overwritten at the
+                # next refill, so the poison never propagates)
+                self.stats.quarantined += 1
+                self._terminate(req.rid, "failed",
+                                f"non-finite prefill state for request "
+                                f"{req.rid} (prefill {inf['pidx']}, row "
+                                f"{r}, segment {s}) — quarantined")
+                continue
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new
             self.slot_last_t[slot] = now
             self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
-            self._finish_token(slot, int(first[r * self.max_segments + s]))
+            self._finish_token(slot, int(first[k]))
         if inf["steps_waited"] > 0:
             self.stats.overlapped_prefills += 1
         self._inflight = None
@@ -415,11 +640,36 @@ class ServeEngine:
     # --------------------------------------------------------------- decode
     def _decode_step(self):
         """One fused decode+sample step over every slot; per-slot
-        termination and inter-token latency accounting."""
+        termination, inter-token latency accounting, and (guard on) the
+        finiteness probe + quarantine + per-step deadline enforcement."""
         active = self._active_slots()
         if not active:
             return
-        if any(self.slot_req[i].temperature > 0.0 for i in active):
+        step_idx = self.stats.decode_steps
+        if self.faults is not None and self.faults.kills(step_idx):
+            # simulated process death at a step boundary: everything not
+            # persisted by the last snapshot() is gone
+            raise EngineKilled(f"fault plan killed the engine before "
+                               f"decode step {step_idx}")
+        sampling = any(self.slot_req[i].temperature > 0.0 for i in active)
+        fin = None
+        if self.guard:
+            pv = None if self.faults is None else \
+                self.faults.decode_poison(step_idx, self.num_slots)
+            poison = self._poison0 if pv is None else \
+                jnp.asarray(pv, jnp.float32)
+            if sampling:
+                tok, _, self.cache, self.slot_keys, finite = \
+                    self._step_guarded(
+                        self.params, self.cache, self.cur_tok,
+                        self.cache_len, self.slot_keys, self.slot_temp,
+                        self.slot_topk, self.slot_topp, poison, None)
+            else:
+                tok, self.cache, finite = self._step_greedy_guarded(
+                    self.params, self.cache, self.cur_tok, self.cache_len,
+                    poison)
+            fin = np.asarray(finite)
+        elif sampling:
             tok, _, self.cache, self.slot_keys = self._step(
                 self.params, self.cache, self.cur_tok, self.cache_len,
                 self.slot_keys, self.slot_temp, self.slot_topk,
@@ -437,14 +687,37 @@ class ServeEngine:
         toks = np.asarray(tok)
         now = self._clock()
         for i in active:
+            if fin is not None and not fin[i]:
+                # quarantine: fail the request with a diagnostic, free the
+                # slot (fully overwritten at its next refill), never emit
+                # the garbage token — the other slots' rows are untouched
+                # by this row's values, so their streams stay bit-identical
+                rid = self.slot_req[i].rid
+                self.slot_req[i] = None
+                self.stats.quarantined += 1
+                self._terminate(rid, "failed",
+                                f"non-finite decode logits for request "
+                                f"{rid} at step {step_idx} (slot {i}) — "
+                                f"quarantined")
+                continue
             self.stats.itl_ms.append((now - self.slot_last_t[i]) * 1e3)
             self.slot_last_t[i] = now
             self._finish_token(i, int(toks[i]))
+        for i in self._active_slots():       # per-step deadline enforcement
+            req = self.slot_req[i]
+            if self._deadline_over(req, now):
+                self.slot_req[i] = None
+                self._terminate(req.rid, "expired",
+                                f"deadline {req.deadline_ms:.0f}ms exceeded "
+                                f"mid-decode (kept "
+                                f"{len(self.outputs[req.rid])} tokens)")
 
     # ----------------------------------------------------------------- loop
     def step(self) -> bool:
-        """One engine iteration: land a finished prefill, refill free slots,
-        then one decode step. Returns True while work remains."""
+        """One engine iteration: expire overdue queued requests, land a
+        finished prefill, refill free slots, then one decode step. Returns
+        True while work remains."""
+        self._expire_queued()
         self._land_prefill(block=False)
         self._try_refill()
         if self._inflight is not None and not self._active_slots():
@@ -458,6 +731,122 @@ class ServeEngine:
         while self.step():
             pass
         return self.outputs
+
+    # ------------------------------------------------------ crash recovery
+    def _device_state(self) -> Dict[str, object]:
+        """The engine's complete device-side state as one pytree. For an
+        SSM serve engine this is TINY — each slot is a fixed-size
+        (conv-tail, recurrent/KV) state plus a few per-slot scalars — which
+        is exactly why snapshot/restore is almost free here where an
+        attention server would checkpoint a paged KV region."""
+        return {"cache": self.cache, "cache_len": self.cache_len,
+                "cur_tok": self.cur_tok, "slot_keys": self.slot_keys,
+                "slot_temp": self.slot_temp, "slot_topk": self.slot_topk,
+                "slot_topp": self.slot_topp}
+
+    def _engine_meta(self) -> Dict[str, object]:
+        return {"num_slots": self.num_slots, "max_len": self.max_len,
+                "prefill_rows": self.prefill_rows,
+                "buckets": list(self.buckets),
+                "max_segments": self.max_segments,
+                "sample_seed": self.sample_seed}
+
+    @staticmethod
+    def _req_meta(req: Request, now: float) -> Dict[str, object]:
+        left = None if req.deadline_ms is None else \
+            req.deadline_ms - (now - req.submit_t) * 1e3
+        return {"rid": int(req.rid),
+                "tokens": [int(t) for t in req.tokens],
+                "max_new": int(req.max_new), "eos": int(req.eos),
+                "temperature": float(req.temperature),
+                "top_k": int(req.top_k), "top_p": float(req.top_p),
+                "deadline_left_ms": left}
+
+    @staticmethod
+    def _meta_req(m: Dict, now: float) -> Request:
+        return Request(m["rid"], np.asarray(m["tokens"], np.int32),
+                       m["max_new"], m["eos"], m["temperature"],
+                       m["top_k"], m["top_p"], now, m["deadline_left_ms"])
+
+    def snapshot(self, manager, step: int = 0,
+                 blocking: bool = False) -> int:
+        """Persist the whole engine through ``CheckpointManager``: per-slot
+        SSM/conv/KV states and sampling keys (device tree), plus queue
+        contents, generated-token tails, statuses, and remaining deadline
+        budgets (manifest metadata). An in-flight prefill is landed first
+        so the snapshot sits at a clean step boundary; deadlines are stored
+        as *remaining* budget so wall-clock downtime between crash and
+        restore does not silently expire requests. The host copy is taken
+        synchronously (the engine may keep stepping immediately); with
+        ``blocking=False`` the disk write happens on the manager's
+        background thread. Returns the checkpoint step."""
+        self._land_prefill(block=True)
+        now = self._clock()
+        meta = {
+            "engine": self._engine_meta(),
+            "slots": [None if r is None else
+                      dict(self._req_meta(r, now),
+                           remaining=int(self.slot_remaining[i]))
+                      for i, r in enumerate(self.slot_req)],
+            "queue": [self._req_meta(r, now) for r in self.queue],
+            "outputs": {str(rid): [int(t) for t in toks]
+                        for rid, toks in self.outputs.items()},
+            "status": {str(rid): st for rid, st in self.status.items()},
+            "errors": {str(rid): e for rid, e in self.errors.items()},
+            "next_rid": int(self._next_rid),
+        }
+        manager.save(step, self._device_state(), meta=meta,
+                     blocking=blocking)
+        return step
+
+    def restore(self, manager, step: Optional[int] = None) -> int:
+        """Load a ``snapshot()`` into this (freshly constructed, idle)
+        engine: every request that was decoding resumes from its exact
+        per-slot state and completes with the same remaining tokens an
+        uninterrupted run would have produced; queued requests are
+        re-admitted in order. Restored rids are recorded in
+        ``self.resumed`` (their terminal status is still "done" — resumed
+        and completed). Returns the checkpoint step restored."""
+        if self.queue or self._active_slots() or any(self.slot_pending) \
+                or self._inflight is not None:
+            raise RuntimeError("restore() requires an idle engine — it "
+                               "overwrites every slot; use a freshly "
+                               "constructed ServeEngine")
+        step = step if step is not None else manager.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no snapshot to restore in "
+                                    f"{manager.dir}")
+        meta = manager.read_meta(step)["meta"]
+        if meta.get("engine") != self._engine_meta():
+            raise ValueError(
+                f"snapshot step {step} was taken by an engine configured "
+                f"as {meta.get('engine')} but this engine is "
+                f"{self._engine_meta()} — slot shapes would not line up")
+        got = manager.restore(self._device_state(), step=step)
+        self.cache = got["cache"]
+        self.cache_len = got["cache_len"]
+        self.cur_tok = got["cur_tok"]
+        self.slot_keys = got["slot_keys"]
+        self.slot_temp = got["slot_temp"]
+        self.slot_topk = got["slot_topk"]
+        self.slot_topp = got["slot_topp"]
+        now = self._clock()
+        self.slot_req = [None if m is None else self._meta_req(m, now)
+                         for m in meta["slots"]]
+        self.slot_remaining = [0 if m is None else int(m["remaining"])
+                               for m in meta["slots"]]
+        self.slot_pending = [False] * self.num_slots
+        self.slot_last_t = [now] * self.num_slots
+        self.queue = collections.deque(
+            self._meta_req(m, now) for m in meta["queue"])
+        self.outputs = {int(rid): list(toks)
+                        for rid, toks in meta["outputs"].items()}
+        self.status = {int(rid): st for rid, st in meta["status"].items()}
+        self.errors = {int(rid): e for rid, e in meta["errors"].items()}
+        self._next_rid = int(meta["next_rid"])
+        self.resumed |= {r.rid for r in self.slot_req if r is not None}
+        self.resumed |= {r.rid for r in self.queue}
+        return step
 
     # ------------------------------------------------- padded-wave baseline
     def decode_batch(self, prompts, max_new, eos: int = -1,
@@ -544,6 +933,14 @@ def main():
     ap.add_argument("--target-ttft-ms", type=float, default=None,
                     help="admit below the refill threshold once the oldest "
                          "queued request has waited this long")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request submit→completion deadline; overdue "
+                         "requests are expired, not served late")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="shed submits once this many requests are queued")
+    ap.add_argument("--guard", action="store_true",
+                    help="numerical guard rails: per-step finiteness "
+                         "probes; non-finite slots are quarantined")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for every request (0=greedy)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -564,18 +961,27 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, args.slots, args.max_len,
                          policy=args.policy, overlap=not args.no_overlap,
-                         target_ttft_ms=args.target_ttft_ms)
+                         target_ttft_ms=args.target_ttft_ms,
+                         max_queue=args.max_queue, guard=args.guard)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(5, 40, size=args.requests)
     t0 = time.perf_counter()
+    shed = 0
     for n in lens:
-        engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
-                      args.new_tokens, temperature=args.temperature,
-                      top_k=args.top_k, top_p=args.top_p)
+        try:
+            engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
+                          args.new_tokens, temperature=args.temperature,
+                          top_k=args.top_k, top_p=args.top_p,
+                          deadline_ms=args.deadline_ms)
+        except ShedError:
+            shed += 1
     outs = engine.run()
     dt = time.perf_counter() - t0
     st = engine.stats
+    if shed or st.expired or st.quarantined:
+        print(f"fault-tolerance: {shed} shed at submit, {st.expired} "
+              f"expired, {st.quarantined} quarantined")
     for rid in sorted(outs)[:4]:
         print(f"req{rid}: prompt[{lens[rid]}] -> {outs[rid][:8]}…")
     pct = st.ttft_percentiles()

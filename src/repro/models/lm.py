@@ -478,6 +478,51 @@ class LM:
                                          top_p)
         return tok, logits, cache, keys
 
+    def decode_step_sample_guarded(self, params, cache, tokens_t, cache_len,
+                                   keys, temperature, top_k, top_p, poison,
+                                   reset: Optional[jnp.ndarray] = None):
+        """``decode_step_sample`` with the serve engine's numerical guard
+        rail fused in: a per-slot finiteness probe on the decode logits
+        (one (B, V) isfinite + all-reduce — cheap next to the forward) so a
+        poisoned slot is caught the step it goes bad instead of silently
+        emitting garbage.
+
+        ``poison`` (B,) f32 is the fault-injection seam: it is ADDED to the
+        logits before the probe and the sampler. In production it is all
+        zeros — ``x + 0.0`` is a bitwise no-op on every finite logit, so
+        guarded token streams are bit-identical to unguarded ones — while a
+        fault plan puts NaN/Inf there to script a numerical failure the
+        probe must catch. Returns (tokens (B,), logits (B, V) f32,
+        new_cache, new_keys, finite (B,) bool)."""
+        logits, cache = self.decode_step(params, cache, tokens_t, cache_len,
+                                         reset)
+        logits = logits + poison[:, None]
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        tok, keys = B.sample_from_logits(logits, keys, temperature, top_k,
+                                         top_p)
+        return tok, logits, cache, keys, finite
+
+    def prefill_probe(self, states, logits):
+        """Per-segment finiteness of a packed prefill's harvest: True at
+        (b, s) iff every state leaf AND the segment-end logits of that
+        segment are finite. One all-reduce per leaf over the non-(B, S)
+        axes — the admission-path guard rail: a poisoned segment is
+        quarantined before its state is ever trusted by a decode slot.
+        Absent segments (states zeroed, logits masked to 0) probe True."""
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)         # (B, S)
+
+        def leaf_ok(path, a):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            if stacked:                                     # (n_units,B,S,…)
+                axes = (0,) + tuple(range(3, a.ndim))
+            else:                                           # (B, S, …)
+                axes = tuple(range(2, a.ndim))
+            return jnp.all(jnp.isfinite(a), axis=axes)
+
+        for leaf in jax.tree_util.tree_leaves_with_path(states):
+            ok = ok & leaf_ok(*leaf)
+        return ok
+
     def sample_tokens(self, logits, keys, temperature, top_k, top_p):
         """Sample one token per row from already-computed logits (the packed
         prefill's (K, V) segment-end logits, flattened). Same per-row knob

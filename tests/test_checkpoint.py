@@ -63,6 +63,61 @@ def test_restore_missing_leaf_raises(tmp_path, rng):
         mgr.restore({"a": jnp.zeros(2), "b": jnp.zeros(3)})
 
 
+def test_async_save_error_propagates(tmp_path, rng, monkeypatch):
+    """A failed background write must surface at the next sync point —
+    wait() or the following save() — not vanish with the daemon thread."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+
+    def boom(*a, **k):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.wait()
+    monkeypatch.undo()
+    # the manager is usable again once the error has been delivered
+    mgr.save(2, {"a": jnp.zeros(2)})
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_async_save_error_raises_on_next_save(tmp_path, rng, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+
+    def boom(*a, **k):
+        raise OSError("quota exceeded (injected)")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(RuntimeError, match="quota exceeded"):
+        mgr.save(2, {"a": jnp.zeros(2)})   # save() syncs via wait() first
+
+
+def test_restore_corrupt_arrays_clear_error(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, {"a": jnp.zeros(2)})
+    with open(tmp_path / "step_3" / "arrays.npz", "wb") as f:
+        f.write(b"this is not an npz archive")
+    with pytest.raises(ValueError, match="corrupt"):
+        mgr.restore({"a": jnp.zeros(2)}, step=3)
+
+
+def test_restore_missing_arrays_file_clear_error(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(4, {"a": jnp.zeros(2)})
+    os.remove(tmp_path / "step_4" / "arrays.npz")
+    with pytest.raises(FileNotFoundError, match="no arrays.npz"):
+        mgr.restore({"a": jnp.zeros(2)}, step=4)
+
+
+def test_read_meta_unpublished_step_clear_error(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(FileNotFoundError, match="never published"):
+        mgr.read_meta(99)
+
+
 def test_restore_template_by_shape_struct(tmp_path, rng):
     """Restore into eval_shape templates (how the trainer resumes) and cast
     dtype when the template asks for it (elastic precision change)."""

@@ -1,0 +1,411 @@
+"""Fault-tolerant serving: deterministic fault injection end to end.
+
+Every failure mode the ISSUE names is exercised on CPU against a
+fault-free reference run of the SAME engine configuration:
+
+* prefill dispatch failure (mid-overlap): the round's requests fail with
+  an explicit status, every other request's token stream is bit-identical
+  to the reference;
+* NaN/Inf poisoning (decode logits and harvested prefill states): the
+  poisoned slot is quarantined, healthy slots bit-identical;
+* deadlines vs a scripted clock (queued, and mid-decode with tokens kept);
+* overload shedding (queue depth and head-of-line age bounds);
+* cancellation in every lifecycle stage;
+* kill-at-step-K → ``snapshot()``/``restore()`` → token equality with an
+  uninterrupted run (slow lane);
+* a seeded chaos run (``FAULT_CHAOS_SEED``, the ``make verify-faults``
+  lane): randomized plan, every request must terminate explicitly —
+  no hangs, no silent garbage.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.faults import EngineKilled, FaultPlan, poison_states
+from repro.launch.serve import ServeEngine, ShedError
+from repro.models.lm import build_model
+
+KW = dict(num_slots=4, max_len=64, prefill_rows=2, buckets=(16, 32),
+          max_segments=2)
+
+
+@pytest.fixture(scope="module")
+def tiny_engine_model():
+    cfg = get_config("mamba-110m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, rng, lens=(5, 9, 7, 12)):
+    return [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def _run(model, params, prompts, max_new=8, **kw):
+    """Submit all prompts into a fresh engine and drain it."""
+    eng = ServeEngine(model, params, **dict(KW, **kw))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new[i] if isinstance(max_new, (list, tuple))
+                   else max_new)
+    out = eng.run()
+    return eng, out
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_queries():
+    plan = FaultPlan(fail_prefill=2, delay_prefill={1: 3},
+                     poison_decode={5: [0, 2]}, kill_at_step=9)
+    assert plan.fails_prefill(2) and not plan.fails_prefill(1)
+    # the delay holds for exactly the first N probes of the named prefill
+    assert [plan.prefill_not_ready(1, k) for k in range(5)] == \
+        [True, True, True, False, False]
+    assert not plan.prefill_not_ready(0, 0)
+    v = plan.decode_poison(5, 4)
+    assert v.shape == (4,) and np.isnan(v[0]) and np.isnan(v[2])
+    assert v[1] == 0.0 and v[3] == 0.0          # untouched slots add 0.0
+    assert plan.decode_poison(4, 4) is None
+    assert plan.kills(9) and not plan.kills(8)
+    assert plan.needs_guard() and not plan.empty()
+    assert FaultPlan().empty() and not FaultPlan().needs_guard()
+    # delay/fail alone are visible without the guard
+    assert not FaultPlan(fail_prefill=0).needs_guard()
+
+
+def test_fault_plan_random_deterministic():
+    a = FaultPlan.random(7, allow_kill=True)
+    b = FaultPlan.random(7, allow_kill=True)
+    assert a == b                               # same seed, same plan
+    plans = [FaultPlan.random(s, allow_kill=True) for s in range(16)]
+    assert any(p != plans[0] for p in plans[1:])
+    assert any(not p.empty() for p in plans)
+
+
+def test_poison_states_targets_only_named_segments():
+    states = {"layer": {"conv": jnp.ones((2, 3, 4)),
+                        "units": jnp.ones((5, 2, 3, 6))},
+              "len": jnp.ones((2, 3), jnp.int32)}
+    out = poison_states(states, [(1, 2)], float("nan"))
+    conv = np.asarray(out["layer"]["conv"])
+    assert np.isnan(conv[1, 2]).all() and np.isfinite(conv[0]).all()
+    assert np.isfinite(conv[1, :2]).all()
+    stacked = np.asarray(out["layer"]["units"])  # (units, B, S, ...)
+    assert np.isnan(stacked[:, 1, 2]).all()
+    assert np.isfinite(stacked[:, 0]).all()
+    # integer bookkeeping leaves cannot hold a NaN and must pass through
+    np.testing.assert_array_equal(np.asarray(out["len"]),
+                                  np.asarray(states["len"]))
+
+
+# ---------------------------------------------------------------------------
+# guard rails + quarantine
+# ---------------------------------------------------------------------------
+
+def test_guard_on_no_faults_is_bit_identical(tiny_engine_model, rng):
+    """The finiteness probes and the all-zero poison seam must not perturb
+    a single logit: guarded output == unguarded output, exactly."""
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    _, ref = _run(model, params, prompts)
+    eng, out = _run(model, params, prompts, guard=True)
+    assert out == ref
+    assert eng.stats.quarantined == 0
+    assert all(eng.status[r] == "done" for r in out)
+
+
+def test_decode_poison_quarantines_slot_only(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    _, ref = _run(model, params, prompts)
+    plan = FaultPlan(poison_decode={2: [1]})
+    eng, out = _run(model, params, prompts, faults=plan)
+    assert eng.guard                       # poison plans self-enable it
+    failed = [r for r, s in eng.status.items() if s == "failed"]
+    assert len(failed) == 1 and eng.stats.quarantined == 1
+    assert "non-finite decode logits" in eng.errors[failed[0]]
+    # the poisoned token was never emitted, and the healthy slots'
+    # streams are bit-identical to the fault-free run
+    assert len(out[failed[0]]) < len(ref[failed[0]])
+    for r in ref:
+        if r not in failed:
+            assert out[r] == ref[r]
+
+
+def test_decode_poison_inf_also_caught(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    plan = FaultPlan(poison_decode={1: [0]}, poison_value=float("inf"))
+    eng, _ = _run(model, params, prompts, faults=plan)
+    assert eng.stats.quarantined == 1
+
+
+def test_prefill_poison_quarantines_before_activation(tiny_engine_model,
+                                                      rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    _, ref = _run(model, params, prompts)
+    plan = FaultPlan(poison_prefill={0: [(0, 1)]})
+    eng, out = _run(model, params, prompts, faults=plan)
+    failed = [r for r, s in eng.status.items() if s == "failed"]
+    assert len(failed) == 1 and eng.stats.quarantined == 1
+    assert "non-finite prefill state" in eng.errors[failed[0]]
+    assert out[failed[0]] == []            # never activated, zero tokens
+    for r in ref:
+        if r not in failed:
+            assert out[r] == ref[r]
+
+
+# ---------------------------------------------------------------------------
+# prefill dispatch failure + delay (overlap window)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_prefill_failure_mid_overlap(tiny_engine_model, rng):
+    """Kill the SECOND prefill dispatch — issued mid-flight while the
+    first round is still decoding. Its requests fail explicitly; the
+    first round never notices."""
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng, lens=(5, 9, 7, 12, 6, 10))
+    budgets = [4, 10, 6, 12, 5, 7]     # staggered so slots free gradually
+    _, ref = _run(model, params, prompts, max_new=budgets)
+    eng, out = _run(model, params, prompts, max_new=budgets,
+                    faults=FaultPlan(fail_prefill=1))
+    assert eng.stats.prefill_faults == 1
+    failed = sorted(r for r, s in eng.status.items() if s == "failed")
+    assert failed                           # the 2nd round had requests
+    for r in failed:
+        assert "prefill dispatch 1 failed" in eng.errors[r]
+        assert out[r] == []
+    for r in ref:
+        if r not in failed:
+            assert out[r] == ref[r]
+    # the engine drained: every request reached a terminal status
+    assert all(s in ("done", "failed") for s in eng.status.values())
+
+
+def test_prefill_delay_stretches_overlap_benignly(tiny_engine_model, rng):
+    """A delayed prefill (scripted slow device) lands late but lands
+    right: outputs are bit-identical to the undelayed run."""
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng, lens=(5, 9, 7, 12, 6, 10))
+    budgets = [4, 10, 6, 12, 5, 7]
+    _, ref = _run(model, params, prompts, max_new=budgets)
+    eng, out = _run(model, params, prompts, max_new=budgets,
+                    faults=FaultPlan(delay_prefill={1: 3}))
+    assert out == ref
+    assert all(s == "done" for s in eng.status.values())
+
+
+# ---------------------------------------------------------------------------
+# deadlines, shedding, cancellation, submit validation
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_queued_request(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    t = {"now": 0.0}
+    eng = ServeEngine(model, params, clock=lambda: t["now"], **KW)
+    a = eng.submit(prompts[0], 8, deadline_ms=50)
+    b = eng.submit(prompts[1], 8)
+    t["now"] = 0.2                         # 200ms > 50ms budget
+    out = eng.run()
+    assert eng.status[a] == "expired" and "while queued" in eng.errors[a]
+    assert eng.status[b] == "done" and len(out[b]) == 8
+    assert eng.stats.expired == 1
+    assert out[a] == []                    # never prefetched, no waste
+
+
+def test_deadline_expires_mid_decode_keeps_tokens(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    t = {"now": 0.0}
+    eng = ServeEngine(model, params, clock=lambda: t["now"], **KW)
+    a = eng.submit(prompts[0], 16, deadline_ms=50)
+    b = eng.submit(prompts[1], 16)
+    for _ in range(4):                     # prefill lands + a few tokens
+        eng.step()
+    t["now"] = 0.2
+    while eng.step():
+        pass
+    assert eng.status[a] == "expired" and "mid-decode" in eng.errors[a]
+    assert 0 < len(eng.outputs[a]) < 16    # partial stream kept
+    assert eng.status[b] == "done" and len(eng.outputs[b]) == 16
+
+
+def test_shed_on_queue_depth_and_age(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    t = {"now": 0.0}
+    eng = ServeEngine(model, params, clock=lambda: t["now"],
+                      max_queue=2, max_queue_age_ms=100, **KW)
+    eng.submit(prompts[0], 4)
+    eng.submit(prompts[1], 4)
+    with pytest.raises(ShedError, match="queue depth"):
+        eng.submit(prompts[2], 4)          # depth bound
+    eng2 = ServeEngine(model, params, clock=lambda: t["now"],
+                       max_queue_age_ms=100, **KW)
+    eng2.submit(prompts[0], 4)
+    t["now"] = 0.5                         # head-of-line is 500ms old
+    with pytest.raises(ShedError, match="max_queue_age_ms"):
+        eng2.submit(prompts[1], 4)
+    assert eng.stats.shed == 1 and eng2.stats.shed == 1
+    # a shed request was never queued: both engines still drain cleanly
+    assert all(len(v) == 4 for v in eng.run().values())
+
+
+def test_cancel_in_every_stage(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    eng = ServeEngine(model, params, **KW)
+    rids = [eng.submit(p, 8) for p in prompts]
+    assert eng.cancel(rids[3])             # still queued
+    assert eng.status[rids[3]] == "cancelled"
+    assert eng.outputs[rids[3]] == []
+    while not eng._active_slots():         # drive until decode starts
+        eng.step()
+    assert eng.cancel(rids[0])             # actively decoding
+    assert eng.status[rids[0]] == "cancelled"
+    eng.run()
+    assert eng.status[rids[1]] == "done" and eng.status[rids[2]] == "done"
+    assert not eng.cancel(rids[1])         # terminal: no-op
+    assert not eng.cancel(9999)            # unknown rid: no-op
+    assert eng.stats.cancelled == 2
+
+
+def test_submit_rejects_duplicate_rid_and_oversize(tiny_engine_model, rng):
+    cfg, model, params = tiny_engine_model
+    eng = ServeEngine(model, params, **KW)
+    eng.submit(_prompts(cfg, rng)[0], 4, rid=5)
+    with pytest.raises(ValueError, match="duplicate request id 5"):
+        eng.submit(_prompts(cfg, rng)[1], 4, rid=5)
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        eng.submit(list(range(1, 40)), 4)  # 39 > max bucket 32
+    # auto rids keep advancing past pinned ones
+    assert eng.submit(_prompts(cfg, rng)[1], 4) == 6
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: kill at step K, restore, prove token equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kill_at", [1, 3, 6])
+def test_kill_and_restore_completes_identically(tiny_engine_model, rng,
+                                                tmp_path, kill_at):
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng)
+    _, ref = _run(model, params, prompts, max_new=8)
+
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    eng = ServeEngine(model, params,
+                      faults=FaultPlan(kill_at_step=kill_at), **KW)
+    for p in prompts:
+        eng.submit(p, 8)
+    with pytest.raises(EngineKilled):
+        snap = 0
+        while True:
+            eng.snapshot(mgr, step=snap)   # snapshot EVERY step boundary
+            snap += 1
+            if not eng.step():
+                pytest.fail("fault plan never fired")
+
+    # a fresh engine (fresh process stand-in) resumes from the last
+    # published snapshot and must finish every stream bit-identically
+    eng2 = ServeEngine(model, params, **KW)
+    restored = eng2.restore(mgr)
+    assert restored == mgr.latest_step()
+    assert eng2.resumed == set(ref)        # every live request resumed
+    out = eng2.run()
+    assert out == ref
+    assert all(eng2.status[r] == "done" for r in ref)
+
+
+@pytest.mark.slow
+def test_restore_refuses_mismatched_engine(tiny_engine_model, rng,
+                                           tmp_path):
+    cfg, model, params = tiny_engine_model
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    eng = ServeEngine(model, params, **KW)
+    eng.submit(_prompts(cfg, rng)[0], 4)
+    eng.snapshot(mgr, step=0)
+    other = ServeEngine(model, params, **dict(KW, num_slots=2))
+    with pytest.raises(ValueError, match="slot shapes"):
+        other.restore(mgr)
+    busy = ServeEngine(model, params, **KW)
+    busy.submit(_prompts(cfg, rng)[1], 4)
+    with pytest.raises(RuntimeError, match="idle engine"):
+        busy.restore(mgr)
+    empty = ServeEngine(model, params, **KW)
+    with pytest.raises(FileNotFoundError):
+        empty.restore(CheckpointManager(str(tmp_path / "nope"),
+                                        async_save=False))
+
+
+def test_snapshot_preserves_remaining_deadline_budget(tiny_engine_model,
+                                                      rng, tmp_path):
+    """Deadlines are persisted as REMAINING budget: downtime between
+    crash and restore must not expire a request that had time left."""
+    cfg, model, params = tiny_engine_model
+    t = {"now": 0.0}
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    eng = ServeEngine(model, params, clock=lambda: t["now"], **KW)
+    a = eng.submit(_prompts(cfg, rng)[0], 4, deadline_ms=1000)
+    t["now"] = 0.4                         # 400ms gone, 600ms left
+    eng.snapshot(mgr, step=0)
+    t["now"] = 100.0                       # ~100s of downtime
+    eng2 = ServeEngine(model, params, clock=lambda: t["now"], **KW)
+    eng2.restore(mgr)
+    out = eng2.run()                       # clock frozen: no time passes
+    assert eng2.status[a] == "done" and len(out[a]) == 4
+
+
+# ---------------------------------------------------------------------------
+# chaos lane: randomized-but-seeded plan, every request terminates
+# ---------------------------------------------------------------------------
+
+def test_chaos_seeded_no_hangs_no_garbage(tiny_engine_model, rng):
+    """``make verify-faults`` entry point. A seeded random FaultPlan is
+    thrown at a full workload; the invariants are the ISSUE's acceptance
+    bar: bounded steps (no hangs), every request terminates with an
+    explicit status, failure counters match statuses, and — when the plan
+    happens to be empty — outputs equal the reference exactly."""
+    cfg, model, params = tiny_engine_model
+    base_seed = int(os.environ.get("FAULT_CHAOS_SEED", "0"))
+    prompts = _prompts(cfg, rng, lens=(5, 9, 7, 12, 6, 10))
+    budgets = [4, 10, 6, 12, 5, 7]
+    _, ref = _run(model, params, prompts, max_new=budgets)
+    for seed in range(base_seed, base_seed + 4):
+        plan = FaultPlan.random(seed, max_prefills=3, max_steps=20,
+                                num_slots=KW["num_slots"],
+                                prefill_rows=KW["prefill_rows"],
+                                max_segments=KW["max_segments"])
+        eng = ServeEngine(model, params, faults=plan, **KW)
+        for p, m in zip(prompts, budgets):
+            eng.submit(p, m)
+        steps = 0
+        while eng.step():
+            steps += 1
+            assert steps < 500, f"seed {seed}: engine failed to drain"
+        statuses = {r: eng.status[r] for r in eng.outputs}
+        assert all(s in ("done", "failed") for s in statuses.values()), \
+            f"seed {seed}: non-terminal status in {statuses}"
+        n_failed = sum(s == "failed" for s in statuses.values())
+        # every failure is accounted for by an injected fault, with a
+        # human-readable diagnostic — nothing fails silently
+        assert n_failed == eng.stats.quarantined + sum(
+            "prefill dispatch" in eng.errors.get(r, "")
+            for r, s in statuses.items() if s == "failed")
+        for r, s in statuses.items():
+            if s == "failed":
+                assert eng.errors[r]
+            elif plan.empty():
+                assert eng.outputs[r] == ref[r]
+        if plan.empty():
+            assert eng.outputs == ref
