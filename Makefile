@@ -27,7 +27,8 @@ SMOKE_TUNE ?= experiments/smoke_tune_cache.json
 FAULT_CHAOS_SEED ?= 0
 
 .PHONY: verify verify-fast verify-faults ci bench-scan bench-serve \
-	bench-tune tune-check bench-compare bench-smoke bench-accept quickstart
+	bench-serve-open bench-tune tune-check bench-compare bench-smoke \
+	bench-accept quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -54,9 +55,16 @@ ci: verify-fast verify-faults tune-check bench-smoke
 bench-scan:
 	BENCH_SCAN_JSON=$(NEW) REPRO_TUNE_CACHE=$(TUNE) $(PY) -m benchmarks.run fig2
 
-# regenerate the serving padded-vs-packed throughput rows into $(SERVE_NEW)
+# regenerate every serving row — closed-loop padded-vs-packed AND the
+# open-loop v1-vs-v2 scheduler rows — into one $(SERVE_NEW)
 bench-serve:
-	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve
+	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve serve_open
+
+# open-loop (Poisson-arrival) rows only: v1 vs v2 scheduler at matched
+# offered load -> $(SERVE_NEW). Faster iteration on scheduler policy; use
+# `make bench-serve` before accepting a new committed baseline.
+bench-serve-open:
+	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve_open
 
 # bounded autotune sweep over the benchmark-matrix shapes -> $(TUNE)
 bench-tune:
@@ -90,7 +98,7 @@ bench-smoke:
 	mkdir -p experiments
 	BENCH_SMOKE=1 BENCH_SCAN_JSON=$(SMOKE_SCAN) \
 		BENCH_SERVE_JSON=$(SMOKE_SERVE) REPRO_TUNE_CACHE=$(SMOKE_TUNE) \
-		$(PY) -m benchmarks.run fig2 serve
+		$(PY) -m benchmarks.run fig2 serve serve_open
 	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE)
 
 quickstart:

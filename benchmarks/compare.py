@@ -85,7 +85,12 @@ def compare(old_path: str, new_path: str, pct: float = 10.0):
 
 REQUIRED_STR = ("op", "shape", "schedule")
 REQUIRED_NUM = ("us_per_call", "tok_per_s")
-OPTIONAL_NUM_PREFIXES = ("ttft_",)
+# scheduler-v2 serve rows carry arrival-process parameters (arrival_*),
+# queue pressure (queue_*), and the engine-phase wall-time split
+# (prefill_/chunk_/decode_/host_ms) next to the ttft percentiles — all
+# non-negative numbers when present
+OPTIONAL_NUM_PREFIXES = ("ttft_", "arrival_", "queue_", "prefill_",
+                         "chunk_", "decode_", "host_")
 
 
 def schema_errors(path):

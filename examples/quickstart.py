@@ -94,11 +94,20 @@ def main():
     #    one O(1) SSM state, so a killed engine resumes every in-flight
     #    request with bit-identical remaining tokens. Failure modes are
     #    deterministically injectable via repro.faults.FaultPlan.
+    #    Scheduler v2: prompts longer than the largest bucket are accepted
+    #    and chunk-prefilled — fixed (chunk_rows, chunk_size) slabs resume
+    #    from the carried SSM state, so long prompts never head-of-line
+    #    block (max_prompt_len is the explicit bound); up to
+    #    max_inflight_prefills packed prefills pipeline through the
+    #    overlap window; bucket_policy="ttft" trades admit-small-early vs
+    #    wait-to-fill-big on the measured TTFT; and ServeStats splits
+    #    wall time into prefill_ms/chunk_ms/decode_ms/host_ms.
     #    (see examples/serve_packed.py and `python -m repro.launch.serve`)
     from repro.launch.serve import ServeEngine
     engine = ServeEngine(model, state["params"], num_slots=4, max_len=64,
                          buckets=(32,), max_segments=2,
-                         overlap=True, target_ttft_ms=100.0)
+                         overlap=True, target_ttft_ms=100.0,
+                         max_inflight_prefills=2)
     for i, s in enumerate(seqs[:6]):
         engine.submit(s[:20], max_new=8,
                       temperature=0.0 if i < 3 else 0.8, top_k=16)

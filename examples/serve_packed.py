@@ -12,6 +12,16 @@ lands while other slots keep decoding (`overlap=True`), admission is
 TTFT-aware (`target_ttft_ms`), and each request carries its own
 temperature/top-k/top-p knobs sampled in the fused decode step.
 
+Scheduler v2 (demonstrated below): prompts longer than the largest
+bucket are served by CHUNKED PREFILL — fixed-size slabs resuming from the
+carried SSM/conv state in a side cache (`chunk_size` / `chunk_rows`), so a
+huge prompt can't head-of-line-block short requests; up to
+`max_inflight_prefills` packed prefills pipeline through the overlap
+window; and `bucket_policy="ttft"` chooses between admitting small early
+and waiting to fill a bigger bucket using the engine's own measured TTFT.
+`max_prompt_len` is the explicit admission bound that replaced the old
+over-bucket rejection.
+
 The engine is also FAULT-TOLERANT (demonstrated below): requests carry
 deadlines (`deadline_ms`) and can be cancelled (`cancel(rid)`); overload
 is shed at submit (`max_queue` / `max_queue_age_ms` → `ShedError`);
@@ -97,6 +107,32 @@ def main():
     cut = engine.run()[rid2]
     print(f"eos={eos}: free-run {full} -> terminated {cut} "
           f"(stopped early: {len(cut) < len(full)})")
+
+    # --- scheduler v2: a prompt 2× the largest bucket rides the chunk
+    # lane (fixed 64-token slabs resuming from carried state) while short
+    # requests keep decoding; the prefill pool keeps up to 2 packed
+    # prefills in flight; bucket_policy="ttft" upgrades to the 64-bucket
+    # only when that admits more AND the head still has latency slack
+    v2 = ServeEngine(model, params, num_slots=4, max_len=256,
+                     prefill_rows=2, buckets=(32, 64), max_segments=3,
+                     overlap=True, target_ttft_ms=100.0,
+                     max_inflight_prefills=2, bucket_policy="ttft",
+                     chunk_size=64, max_prompt_len=192)
+    giant = rng.integers(1, cfg.vocab, size=130)     # 130 > bucket 64
+    rg2 = v2.submit(giant, 6)
+    rsmall = [v2.submit(rng.integers(1, cfg.vocab, size=int(n)), int(b))
+              for n, b in zip(lens[:6], budgets[:6])]
+    v2outs = v2.run()
+    s2 = v2.stats
+    print(f"scheduler v2: {len(giant)}-token prompt chunked over "
+          f"{s2.chunk_rounds} slab rounds ({s2.chunk_tokens} tokens) -> "
+          f"{len(v2outs[rg2])} tokens decoded; {len(rsmall)} short "
+          f"requests served alongside ({s2.bucket_upgrades} bucket "
+          f"upgrades, {s2.deferred_upgrades} deferred, queue depth max "
+          f"{s2.queue_depth_max})")
+    print(f"time split: prefill {s2.prefill_ms:.0f}ms chunk "
+          f"{s2.chunk_ms:.0f}ms decode {s2.decode_ms:.0f}ms host "
+          f"{s2.host_ms:.1f}ms")
 
     # --- the padded-wave baseline on the same engine class, for contrast
     wave = ServeEngine(model, params, num_slots=4, max_len=128)

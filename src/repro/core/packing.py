@@ -186,6 +186,30 @@ def segment_ends(packed: PackedBatch, max_segments: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# chunk-aware planning (serving: chunked prefill of over-bucket prompts)
+# ---------------------------------------------------------------------------
+
+def chunk_spans(length: int, chunk: int) -> List[tuple]:
+    """Fixed-size chunk plan for one long sequence: [(offset, n), …] with
+    n == chunk everywhere except a possibly-short final span. The serving
+    engine feeds each span to ``model.prefill_chunk``, resuming from the
+    carried state — the §5 split idea applied to prefill instead of
+    training rows."""
+    if length <= 0:
+        raise ValueError(f"length must be positive, got {length}")
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    return [(off, min(chunk, length - off))
+            for off in range(0, length, chunk)]
+
+
+def needs_chunking(length: int, buckets: Sequence[int]) -> bool:
+    """True when a prompt cannot ride the packed-prefill bucket lane and
+    must be consumed by the chunked-prefill lane instead."""
+    return length > max(buckets)
+
+
+# ---------------------------------------------------------------------------
 # pack_with_split — paper §5 future work (beyond-paper feature)
 # ---------------------------------------------------------------------------
 

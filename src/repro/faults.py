@@ -55,6 +55,12 @@ class FaultPlan:
                      states of those packed segments (``poison_states``).
     poison_decode    {decode step: [slot, …]} — add a non-finite value to
                      those slots' logits inside the guarded decode step.
+    fail_chunk       index of the chunked-prefill round that raises
+                     (0-based over ``stats.chunk_rounds``); the engine
+                     fails the requests on the chunk rows and keeps going.
+    poison_chunk     {chunk round: [row, …]} — NaN those chunk rows' carried
+                     cache state after the round (``poison_cache_rows``),
+                     modelling a corrupted chunk forward at a boundary.
     poison_value     what the poison injects (NaN by default; ±Inf also
                      legal — anything non-finite).
     kill_at_step     raise ``EngineKilled`` before this decode step.
@@ -64,6 +70,9 @@ class FaultPlan:
     poison_prefill: Dict[int, List[Tuple[int, int]]] = \
         dataclasses.field(default_factory=dict)
     poison_decode: Dict[int, List[int]] = \
+        dataclasses.field(default_factory=dict)
+    fail_chunk: Optional[int] = None
+    poison_chunk: Dict[int, List[int]] = \
         dataclasses.field(default_factory=dict)
     poison_value: float = float("nan")
     kill_at_step: Optional[int] = None
@@ -93,17 +102,25 @@ class FaultPlan:
             v[s] = self.poison_value
         return v
 
+    def fails_chunk(self, cidx: int) -> bool:
+        return self.fail_chunk is not None and cidx == self.fail_chunk
+
+    def chunk_poison(self, cidx: int) -> Optional[List[int]]:
+        return self.poison_chunk.get(cidx)
+
     def kills(self, step: int) -> bool:
         return self.kill_at_step is not None and step == self.kill_at_step
 
     def needs_guard(self) -> bool:
         """Plans that poison numerics only observable through the engine's
         finiteness probes (the engine auto-enables its guard for them)."""
-        return bool(self.poison_prefill or self.poison_decode)
+        return bool(self.poison_prefill or self.poison_decode
+                    or self.poison_chunk)
 
     def empty(self) -> bool:
         return (self.fail_prefill is None and not self.delay_prefill
                 and not self.poison_prefill and not self.poison_decode
+                and self.fail_chunk is None and not self.poison_chunk
                 and self.kill_at_step is None)
 
     # ---------------------------------------------------------- generation
@@ -111,6 +128,7 @@ class FaultPlan:
     def random(cls, seed: int, *, max_prefills: int = 4,
                max_steps: int = 30, num_slots: int = 4,
                prefill_rows: int = 2, max_segments: int = 2,
+               chunk_rows: int = 0,
                allow_kill: bool = False) -> "FaultPlan":
         """Randomized-but-seeded plan for the chaos lane: each fault
         category fires with probability 1/2, placed uniformly inside the
@@ -132,6 +150,11 @@ class FaultPlan:
         if rng.random() < 0.5:
             plan.poison_decode = {int(rng.integers(1, max_steps)):
                                   [int(rng.integers(0, num_slots))]}
+        if chunk_rows > 0 and rng.random() < 0.5:
+            plan.fail_chunk = int(rng.integers(0, max_prefills))
+        if chunk_rows > 0 and rng.random() < 0.5:
+            plan.poison_chunk = {int(rng.integers(0, max_prefills)):
+                                 [int(rng.integers(0, chunk_rows))]}
         if rng.random() < 0.5:
             plan.poison_value = float(rng.choice([np.nan, np.inf, -np.inf]))
         if allow_kill and rng.random() < 0.5:
@@ -164,3 +187,28 @@ def poison_states(states, rows_segs, value: float = float("nan")):
         return (leaf * mask).astype(leaf.dtype)
 
     return jax.tree_util.tree_map_with_path(one, states)
+
+
+def poison_cache_rows(cache, rows, value: float = float("nan")):
+    """Inject a non-finite value into whole rows of a decode-layout cache.
+    ``cache`` is the pytree from ``model.init_cache`` — leaves carry (B, …)
+    leading dims, or (n_units, B, …) for unit-stacked layers; ``rows`` is a
+    list of row indices. The chunked-prefill analogue of
+    ``poison_states``: a corrupted chunk forward corrupts the carried cache
+    of that chunk row, in every layer."""
+    import jax
+
+    def one(path, leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        stacked = any(getattr(p, "key", None) == "units" for p in path)
+        b = leaf.shape[1] if stacked else leaf.shape[0]
+        m = np.ones(b, np.float32)
+        for r in rows:
+            m[r] = value
+        mask = jnp.asarray(m)
+        extra = leaf.ndim - (2 if stacked else 1)
+        mask = mask.reshape(((1,) if stacked else ()) + (b,) + (1,) * extra)
+        return (leaf * mask).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

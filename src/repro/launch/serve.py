@@ -36,9 +36,36 @@ Three serving-loop mechanisms on top of the PR-3 engine:
   derived from (engine seed, request id) — a request samples identically
   wherever its slot lands. ``temperature=0`` (the default) is exact greedy.
 
+Scheduler v2 adds three levers on the admission path:
+
+* **Chunked prefill** (``chunk_rows`` / ``chunk_size``): a prompt longer
+  than the largest bucket is consumed in fixed-shape (chunk_rows,
+  chunk_size) slabs that resume from the carried O(1) SSM/conv/KV state
+  (``model.prefill_chunk``) on a side cache, then hand off to a decode
+  slot through the same ``scatter_into_cache`` path — a 32k prompt can no
+  longer head-of-line-block the queue, and short requests keep decoding
+  through every chunk round. The old over-bucket ``ValueError`` in
+  ``submit()`` is gone (``max_prompt_len`` is the explicit bound now).
+* **Multi-prefill pipelining** (``max_inflight_prefills``): the single
+  in-flight prefill generalizes to a bounded pool; each entry lands
+  independently when its device result is ready. Token streams stay
+  bit-identical — per-request sampling keys make them slot- and
+  schedule-independent.
+* **TTFT-aware bucket choice** (``bucket_policy="ttft"``): instead of
+  always taking the smallest bucket that fits the head-of-line prompt,
+  the engine upgrades to a larger bucket when that admits strictly more
+  queued requests AND the head's wait still has slack against the TTFT
+  allowance (``target_ttft_ms``, else the measured p50) — admit small
+  early under latency pressure, wait to fill big when there is headroom.
+
+``ServeStats`` additionally splits engine wall time into prefill / chunk /
+decode / host phases (``*_ms``) so a throughput regression is attributable
+to the scheduler vs the kernels.
+
 Compile discipline: decode is one fixed shape; prefill shapes are bounded
 by the bucket list (rows × bucket-capacity), NOT by the number of distinct
 prompt lengths — ``stats.buckets`` counts the shapes actually compiled.
+Chunked prefill adds ONE more shape, (chunk_rows, chunk_size).
 
 On top of the overlap/latency/sampling engine sits a FAULT-TOLERANCE
 layer (PackMamba's O(1) per-request state is what makes it cheap — a
@@ -88,7 +115,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.core import packing
-from repro.faults import EngineKilled, FaultPlan, poison_states
+from repro.faults import (EngineKilled, FaultPlan, poison_cache_rows,
+                          poison_states)
 from repro.models import blocks as B
 from repro.models.lm import build_model
 
@@ -131,6 +159,19 @@ class ServeStats:
     cancelled: int = 0             # requests revoked via cancel()
     quarantined: int = 0           # slots failed by the finiteness probes
     prefill_faults: int = 0        # prefill dispatches that raised
+    chunk_rounds: int = 0          # chunked-prefill forwards issued
+    chunk_tokens: int = 0          # prompt tokens consumed via chunk rounds
+    chunked_prefills: int = 0      # requests whose prompt landed via chunks
+    bucket_upgrades: int = 0       # TTFT policy took a bigger-than-fit bucket
+    deferred_upgrades: int = 0     # upgrade declined: head wait too long
+    queue_depth_max: int = 0       # deepest the admission queue ever got
+    # host-observed wall time per engine phase (the satellite diagnosis for
+    # packed_continuous trailing padded_wave: WHERE does a step spend time —
+    # admission/prefill sync, chunk rounds, fused decode, or host loop?)
+    prefill_ms: float = 0.0        # _land_prefill + _try_refill (incl. sync)
+    chunk_ms: float = 0.0          # chunked-prefill rounds
+    decode_ms: float = 0.0         # fused decode steps
+    host_ms: float = 0.0           # queue expiry + loop overhead
     buckets: Optional[set] = None  # distinct (rows, L) prefill shapes used
     ttft_ms: Optional[List[float]] = None   # per request: submit→first token
     itl_ms: Optional[List[float]] = None    # per decode token: inter-token
@@ -187,7 +228,12 @@ class ServeEngine:
                  max_queue: Optional[int] = None,
                  max_queue_age_ms: Optional[float] = None,
                  guard: bool = False,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 max_inflight_prefills: int = 1,
+                 bucket_policy: str = "smallest_fit",
+                 chunk_rows: int = 1,
+                 chunk_size: Optional[int] = None,
+                 max_prompt_len: Optional[int] = None):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -204,6 +250,23 @@ class ServeEngine:
         self.max_queue = max_queue
         self.max_queue_age_ms = max_queue_age_ms
         self.faults = faults
+        if bucket_policy not in ("smallest_fit", "ttft"):
+            raise ValueError(f"bucket_policy must be 'smallest_fit' or "
+                             f"'ttft', got {bucket_policy!r}")
+        self.max_inflight_prefills = max(1, int(max_inflight_prefills))
+        self.bucket_policy = bucket_policy
+        self.max_prompt_len = max_prompt_len
+        # chunked prefill: prompts longer than the largest bucket are fed
+        # through a SIDE cache in fixed (chunk_rows, chunk_size) slabs —
+        # the main decode cache can't host a partial prompt because the
+        # fused all-slot decode step would advance (and corrupt) it
+        self.chunk_rows = max(1, int(chunk_rows))
+        self.chunk_size = int(chunk_size) if chunk_size is not None \
+            else self.buckets[-1]
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.chunk_enabled = chunk_rows > 0 and \
+            getattr(model, "supports_chunked_prefill", False)
         # poison faults are only observable through the finiteness probes,
         # so a plan that injects them turns the guard on by itself
         self.guard = guard or (faults is not None and faults.needs_guard())
@@ -218,10 +281,14 @@ class ServeEngine:
         cfg = getattr(model, "cfg", None)
         if cfg is not None and getattr(cfg, "scan_tune", "off") != "off":
             # warm the scan autotuning cache for every prefill shape this
-            # engine can compile — (prefill_rows, bucket) — so the packed
-            # forwards resolve measured schedule winners at trace time
+            # engine can compile — (prefill_rows, bucket) plus the chunk
+            # slab — so the packed forwards resolve measured schedule
+            # winners at trace time
             from repro.tune import warm_for_config
-            warm_for_config(cfg, [(prefill_rows, b) for b in self.buckets])
+            shapes = [(prefill_rows, b) for b in self.buckets]
+            if self.chunk_enabled:
+                shapes.append((self.chunk_rows, self.chunk_size))
+            warm_for_config(cfg, shapes)
 
         self.cache = model.init_cache(num_slots, max_len)
         self.cache_len = jnp.zeros((num_slots,), jnp.int32)
@@ -275,12 +342,38 @@ class ServeEngine:
         self._wave_prefill = jax.jit(
             functools.partial(model.prefill, max_len=max_len))
 
+        # chunked-prefill lane: a side cache of chunk_rows long prompts
+        # being consumed slab by slab; handoff to a decode slot reuses the
+        # packed scatter by viewing each row as a 1-segment harvest
+        if self.chunk_enabled:
+            self.chunk_cache = model.init_cache(self.chunk_rows, max_len)
+            self.chunk_clen = jnp.zeros((self.chunk_rows,), jnp.int32)
+            self._chunk_fn = jax.jit(model.prefill_chunk,
+                                     donate_argnums=(1,))
+            self._reset_rows = jax.jit(model.reset_cache_rows,
+                                       donate_argnums=(0,))
+
+            def chunk_handoff(cache, chunk_cache, src, dst):
+                states = model.expand_chunk_states(chunk_cache)
+                return model.scatter_into_cache(cache, states, src, dst)
+
+            self._chunk_scatter = jax.jit(chunk_handoff, donate_argnums=(0,))
+
+            def chunk_probe(chunk_cache, logits):
+                states = model.expand_chunk_states(chunk_cache)
+                return model.prefill_probe(states, logits[:, None])
+
+            self._chunk_probe = jax.jit(chunk_probe)
+        self.chunk_req: List[Optional[Request]] = [None] * self.chunk_rows
+        self.chunk_off = [0] * self.chunk_rows    # prompt tokens consumed
+        self.chunk_slot = [-1] * self.chunk_rows  # reserved decode slot
+
         self.queue: collections.deque = collections.deque()
         self.slot_req: List[Optional[Request]] = [None] * num_slots
         self.slot_remaining = [0] * num_slots
         self.slot_pending = [False] * num_slots   # reserved by in-flight
         self.slot_last_t = [0.0] * num_slots      # last token host-observed
-        self._inflight: Optional[dict] = None     # one pending prefill
+        self._prefill_pool: List[dict] = []       # pending packed prefills
         self.outputs: Dict[int, List[int]] = {}
         # explicit per-request lifecycle: queued → active → done | failed |
         # expired | cancelled; errors[rid] holds the failure diagnostic
@@ -289,6 +382,13 @@ class ServeEngine:
         self.resumed: set = set()     # rids restored from a snapshot
         self.stats = ServeStats()
         self._next_rid = 0
+
+    @property
+    def _inflight(self) -> Optional[dict]:
+        """Oldest pending prefill (None when the pool is empty) — the
+        pre-pool engine exposed exactly one; tests and callers keep that
+        view while the pool holds up to ``max_inflight_prefills``."""
+        return self._prefill_pool[0] if self._prefill_pool else None
 
     # ------------------------------------------------------------ admission
     def submit(self, tokens, max_new: int, eos: Optional[int] = None,
@@ -303,6 +403,9 @@ class ServeEngine:
         kept). ``rid`` lets a client pin its own id (e.g. resubmission
         with stable ids); duplicates of ANY known rid are rejected here
         rather than corrupting that request's output stream later.
+        Prompts longer than the largest prefill bucket are accepted and
+        served via chunked prefill (``max_prompt_len`` is the explicit
+        length bound when configured).
         Raises ``ShedError`` — without queueing — when the admission queue
         is over its depth (``max_queue``) or age (``max_queue_age_ms``)
         bound: under overload a fast explicit reject beats an unbounded
@@ -315,10 +418,19 @@ class ServeEngine:
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new} — a "
                              f"request must generate at least one token")
-        if len(tokens) > self.buckets[-1]:
-            raise ValueError(f"prompt length {len(tokens)} exceeds largest "
-                             f"prefill bucket {self.buckets[-1]} — split "
-                             f"the prompt or configure a larger bucket")
+        if self.max_prompt_len is not None and \
+                len(tokens) > self.max_prompt_len:
+            raise ValueError(
+                f"prompt length {len(tokens)} exceeds max_prompt_len "
+                f"{self.max_prompt_len} — raise the engine's bound or "
+                f"truncate the prompt")
+        if len(tokens) > self.buckets[-1] and not self.chunk_enabled:
+            raise ValueError(
+                f"prompt length {len(tokens)} exceeds largest prefill "
+                f"bucket {self.buckets[-1]} and chunked prefill is "
+                f"unavailable (chunk_rows=0, or the model has no "
+                f"chunk-resume step) — enable chunking, split the prompt, "
+                f"or configure a larger bucket")
         if len(tokens) + max_new > self.max_len:
             raise ValueError(f"prompt {len(tokens)} + max_new {max_new} "
                              f"exceeds slot capacity {self.max_len}")
@@ -361,6 +473,8 @@ class ServeEngine:
                                   now, deadline_ms))
         self.outputs[rid] = []
         self.status[rid] = "queued"
+        self.stats.queue_depth_max = max(self.stats.queue_depth_max,
+                                         len(self.queue))
         return rid
 
     def _free_slots(self) -> List[int]:
@@ -430,44 +544,112 @@ class ServeEngine:
                     self.slot_req[i] = None
                     self._terminate(rid, "cancelled", "cancelled mid-decode")
                     return True
-            # reserved by the in-flight prefill: _land_prefill skips it
+            # reserved by an in-flight prefill (_land_prefill skips it) or
+            # mid-chunked-prefill (_chunk_step frees the row next round)
             self._terminate(rid, "cancelled", "cancelled during prefill")
             return True
         return False
 
-    def _admission_due(self, free: List[int]) -> bool:
+    def _packable(self) -> List[Request]:
+        """Queued requests the PACKED prefill path serves, FIFO. Longer
+        prompts stay queued for the chunk lane and never block these."""
+        Lmax = self.buckets[-1]
+        return [r for r in self.queue if len(r.tokens) <= Lmax]
+
+    def _admission_due(self, free: List[int],
+                       head: Optional[Request]) -> bool:
         """Throughput rule (enough free slots, or nothing decoding) with a
         latency override: admit below the threshold when the head-of-line
-        request's wait already exceeds ``target_ttft_ms``."""
-        if not free or not self.queue or self._inflight is not None:
+        request's wait already exceeds ``target_ttft_ms``. ``head`` is the
+        oldest PACKABLE request (chunk-lane prompts are admitted by
+        ``_chunk_step`` and don't gate the packed path)."""
+        if not free or head is None or \
+                len(self._prefill_pool) >= self.max_inflight_prefills:
             return False
         if not self._active_slots():
             return True
         if len(free) >= self.refill_threshold:
             return True
         if self.target_ttft_ms is not None:
-            wait_ms = (self._clock() - self.queue[0].submit_t) * 1e3
+            wait_ms = (self._clock() - head.submit_t) * 1e3
             if wait_ms >= self.target_ttft_ms:
                 self.stats.early_admits += 1
                 return True
         return False
 
+    def _admit_count(self, packq: List[Request], L: int,
+                     nfree: int) -> int:
+        """How many head-of-queue packable requests one (prefill_rows, L)
+        round would admit — the dry-run of ``_try_refill``'s loop."""
+        lens: List[int] = []
+        for req in packq:
+            if len(req.tokens) > L or len(lens) == nfree:
+                break
+            plan = packing.plan_packing(lens + [len(req.tokens)], L,
+                                        self.policy)
+            if len(plan) > self.prefill_rows or \
+                    any(len(row) > self.max_segments for row in plan):
+                break
+            lens.append(len(req.tokens))
+        return len(lens)
+
+    def _choose_bucket(self, head: Request, packq: List[Request],
+                       free: List[int]) -> int:
+        """Pick the prefill bucket for this round. ``smallest_fit`` (the
+        default, and the pre-v2 behaviour) takes the smallest bucket that
+        holds the head-of-line prompt. ``ttft`` upgrades to a larger
+        bucket when that admits strictly more queued requests AND the
+        head's wait is still inside the TTFT allowance
+        (``target_ttft_ms``, else the measured p50): wait to fill big
+        while the head has slack, admit small immediately once the head
+        is already late — a bigger forward would only make a blown
+        deadline worse, while everyone behind the head still benefits
+        from upgrades on later rounds."""
+        fits = [b for b in self.buckets if b >= len(head.tokens)]
+        L = fits[0]
+        if self.bucket_policy != "ttft" or len(fits) == 1:
+            return L
+        allowance = self.target_ttft_ms
+        if allowance is None:
+            allowance = self.stats.ttft_percentiles().get("p50")
+        if allowance is None or allowance <= 0:
+            return L                 # no latency signal yet — stay small
+        best_n, best_L = self._admit_count(packq, L, len(free)), L
+        if best_n >= min(len(packq), len(free)):
+            return L     # smallest fit already admits every admissible
+            #              request — no bucket can admit strictly more,
+            #              skip the bigger buckets' dry-runs entirely
+        for b in fits[1:]:
+            n = self._admit_count(packq, b, len(free))
+            if n > best_n:
+                best_n, best_L = n, b
+        if best_L == L:
+            return L
+        wait_ms = (self._clock() - head.submit_t) * 1e3
+        if wait_ms < allowance:
+            self.stats.bucket_upgrades += 1
+            return best_L
+        self.stats.deferred_upgrades += 1
+        return L
+
     def _try_refill(self) -> bool:
         """Admit queued prompts into free slots via one packed prefill.
 
-        Bucket choice is head-of-line: the smallest bucket holding the
-        oldest prompt; younger prompts join only if they fit the same
-        bucket (FIFO within a round, no starvation across rounds). The
-        prefill is dispatched asynchronously; with ``overlap`` on and other
-        slots decoding, it is left in flight (see _land_prefill)."""
+        Bucket choice starts from the oldest packable prompt
+        (``_choose_bucket``); younger prompts join only if they fit the
+        chosen bucket (FIFO within a round, no starvation across rounds).
+        The prefill is dispatched asynchronously; with ``overlap`` on and
+        other slots decoding, it joins the in-flight pool (see
+        _land_prefill)."""
+        packq = self._packable()
+        head = packq[0] if packq else None
         free = self._free_slots()
-        if not self._admission_due(free):
+        if not self._admission_due(free, head):
             return False
-        head = self.queue[0]
-        L = min(b for b in self.buckets if b >= len(head.tokens))
+        L = self._choose_bucket(head, packq, free)
         admitted: List[Request] = []
         lens: List[int] = []
-        for req in list(self.queue):
+        for req in packq:
             if len(req.tokens) > L or len(admitted) == len(free):
                 break
             plan = packing.plan_packing(lens + [len(req.tokens)], L,
@@ -481,8 +663,10 @@ class ServeEngine:
             return False
         if self._active_slots():
             self.stats.midflight_refills += 1
-        for _ in admitted:          # admitted is always a queue prefix
-            self.queue.popleft()
+        adm = {r.rid for r in admitted}   # a prefix of packq, but possibly
+        #                                   interleaved with chunk prompts
+        self.queue = collections.deque(
+            r for r in self.queue if r.rid not in adm)
         for req in admitted:
             self.status[req.rid] = "active"
         pidx = self.stats.prefills      # this dispatch's fault-plan index
@@ -544,7 +728,7 @@ class ServeEngine:
                                             jnp.asarray(topp))
         for qi in slot_of:                       # reserve target slots
             self.slot_pending[slot_of[qi][0]] = True
-        self._inflight = {
+        inf = {
             "tok": flat_tok, "keys": keys1, "states": states,
             "seg_lens": seg_lens, "src": jnp.asarray(src),
             "dst": jnp.asarray(dst), "admitted": admitted,
@@ -553,7 +737,8 @@ class ServeEngine:
         if self.guard:
             # per-segment finiteness of the harvested states + end logits;
             # probed asynchronously with the prefill, read at land time
-            self._inflight["ok"] = self._probe(states, logits)
+            inf["ok"] = self._probe(states, logits)
+        self._prefill_pool.append(inf)
         self.stats.prefills += 1
         self.stats.prefill_tokens += sum(lens)
         self.stats.buckets.add((self.prefill_rows, L))
@@ -575,15 +760,24 @@ class ServeEngine:
         return ready() if ready is not None else True
 
     def _land_prefill(self, block: bool = False) -> bool:
-        """Scatter a completed prefill's states into the reserved slots and
-        activate them. With ``block=False`` this is a no-op while the
-        prefill is still in flight — decode keeps the device busy and the
-        states land on a later engine step."""
-        inf = self._inflight
-        if inf is None:
-            return False
-        if not block and not self._prefill_ready(inf):
-            return False
+        """Scatter completed prefills' states into their reserved slots and
+        activate them. With ``block=False`` only pool entries whose device
+        result is ready land (a no-op while everything is still in flight —
+        decode keeps the device busy and the states land on a later engine
+        step); ``block=True`` drains the whole pool. Entries land in any
+        order: they target disjoint reserved slots and per-request sampling
+        keys keep token streams schedule-independent."""
+        landed = False
+        for inf in list(self._prefill_pool):
+            if not block and not self._prefill_ready(inf):
+                continue
+            self._prefill_pool.remove(inf)
+            self._land_one(inf)
+            landed = True
+        return landed
+
+    def _land_one(self, inf: dict):
+        """Land one dispatched prefill: scatter states, activate slots."""
         src_j, dst_j = inf["src"], inf["dst"]
         self.cache = self._scatter(self.cache, inf["states"], src_j, dst_j)
         flat_lens = inf["seg_lens"].reshape(-1)
@@ -634,8 +828,188 @@ class ServeEngine:
             self._finish_token(slot, int(first[k]))
         if inf["steps_waited"] > 0:
             self.stats.overlapped_prefills += 1
-        self._inflight = None
-        return True
+
+    # ------------------------------------------------------- chunked prefill
+    def _chunk_active(self) -> bool:
+        return any(r is not None for r in self.chunk_req)
+
+    def _free_chunk_row(self, row: int):
+        """Release a chunk row and its reserved decode slot."""
+        slot = self.chunk_slot[row]
+        if slot >= 0:
+            self.slot_pending[slot] = False
+        self.chunk_req[row] = None
+        self.chunk_slot[row] = -1
+
+    def _chunk_claims(self):
+        """Assign queued over-bucket prompts to free chunk rows (each also
+        reserves the decode slot it will land in, so packed admission can't
+        take it out from under a half-consumed prompt)."""
+        claimed = np.zeros(self.chunk_rows, bool)
+        Lmax = self.buckets[-1]
+        for row in range(self.chunk_rows):
+            if self.chunk_req[row] is not None:
+                continue
+            nxt = next((r for r in self.queue if len(r.tokens) > Lmax),
+                       None)
+            if nxt is None:
+                break
+            free = self._free_slots()
+            if not free:
+                break
+            self.queue = collections.deque(
+                r for r in self.queue if r.rid != nxt.rid)
+            self.status[nxt.rid] = "active"
+            self.slot_pending[free[0]] = True
+            self.chunk_req[row] = nxt
+            self.chunk_off[row] = 0
+            self.chunk_slot[row] = free[0]
+            claimed[row] = True
+        if claimed.any():
+            # wipe the claimed rows back to init_cache values — no stale
+            # conv tail / attention ring / stabilizer state across tenants
+            fr = jnp.asarray(claimed)
+            self.chunk_cache = self._reset_rows(self.chunk_cache, fr)
+            self.chunk_clen = jnp.where(fr, 0, self.chunk_clen)
+
+    def _chunk_step(self):
+        """One chunked-prefill round: claim rows for queued over-bucket
+        prompts, advance every occupied row by one fixed-shape
+        (chunk_rows, chunk_size) slab resuming from the carried state, and
+        hand finished prompts off to their reserved decode slots (first
+        token sampled with the request's own key stream, guard probe on the
+        carried state) — all while the decode slots keep stepping."""
+        if not self.chunk_enabled:
+            return
+        self._chunk_claims()
+        rows = [i for i, r in enumerate(self.chunk_req) if r is not None]
+        if not rows:
+            return
+        # lifecycle sweep before spending a forward on a dead request
+        now = self._clock()
+        for i in rows:
+            req = self.chunk_req[i]
+            if self.status.get(req.rid) == "cancelled":
+                self._free_chunk_row(i)
+            elif self._deadline_over(req, now):
+                self._terminate(req.rid, "expired",
+                                f"deadline {req.deadline_ms:.0f}ms exceeded "
+                                f"during chunked prefill")
+                self._free_chunk_row(i)
+        rows = [i for i, r in enumerate(self.chunk_req) if r is not None]
+        if not rows:
+            return
+        cidx = self.stats.chunk_rounds
+        if self.faults is not None and self.faults.fails_chunk(cidx):
+            # the chunk forward died (injected stand-in for device OOM on
+            # the slab): fail the rows' requests, keep serving — the decode
+            # slots never notice
+            self.stats.chunk_rounds += 1
+            self.stats.prefill_faults += 1
+            for i in rows:
+                self._terminate(self.chunk_req[i].rid, "failed",
+                                f"chunked-prefill round {cidx} failed "
+                                f"(injected fault)")
+                self._free_chunk_row(i)
+            return
+        T = self.chunk_size
+        toks = np.zeros((self.chunk_rows, T), np.int32)
+        pos = np.zeros((self.chunk_rows, T), np.int32)
+        seg = np.zeros((self.chunk_rows, T), np.int32)
+        took = {}
+        for i in rows:
+            req = self.chunk_req[i]
+            off = self.chunk_off[i]
+            n = min(T, len(req.tokens) - off)
+            toks[i, :n] = req.tokens[off:off + n]
+            pos[i, :n] = np.arange(off, off + n)
+            seg[i, :n] = 1
+            took[i] = n
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(pos),
+                 "segment_ids": jnp.asarray(seg)}
+        logits, self.chunk_cache, self.chunk_clen = self._chunk_fn(
+            self.params, self.chunk_cache, batch, self.chunk_clen)
+        self.stats.chunk_rounds += 1
+        self.stats.chunk_tokens += sum(took.values())
+        if self.faults is not None:
+            prs = self.faults.chunk_poison(cidx)
+            if prs:
+                self.chunk_cache = poison_cache_rows(
+                    self.chunk_cache, prs, self.faults.poison_value)
+        finishing = []
+        for i in rows:
+            self.chunk_off[i] += took[i]
+            if self.chunk_off[i] >= len(self.chunk_req[i].tokens):
+                finishing.append(i)
+        if not finishing:
+            return
+        # handoff: sample each finished prompt's first token with its own
+        # (seed, rid)-derived key stream, then scatter the carried state
+        # into the reserved decode slot — fixed chunk_rows shapes, the
+        # num_slots sentinel dropping the still-chunking rows
+        rids = np.zeros(self.chunk_rows, np.int32)
+        temp = np.zeros(self.chunk_rows, np.float32)
+        topk = np.zeros(self.chunk_rows, np.int32)
+        topp = np.ones(self.chunk_rows, np.float32)
+        dst = np.full(self.chunk_rows, self.num_slots, np.int32)
+        for i in finishing:
+            req = self.chunk_req[i]
+            rids[i] = req.rid
+            temp[i] = req.temperature
+            topk[i] = req.top_k
+            topp[i] = req.top_p
+            dst[i] = self.chunk_slot[i]
+        keys0 = B.request_keys(self.sample_seed, rids)
+        tok, keys1 = self._sample_flat(logits, keys0, jnp.asarray(temp),
+                                       jnp.asarray(topk), jnp.asarray(topp))
+        ok = None
+        if self.guard:
+            ok = np.asarray(self._chunk_probe(self.chunk_cache,
+                                              logits)).reshape(-1)
+        src_j = jnp.arange(self.chunk_rows, dtype=jnp.int32)
+        dst_j = jnp.asarray(dst)
+        self.cache = self._chunk_scatter(self.cache, self.chunk_cache,
+                                         src_j, dst_j)
+        self.cache_len = self.cache_len.at[dst_j].set(
+            self.chunk_clen, mode="drop")
+        self.cur_tok = self.cur_tok.at[dst_j].set(
+            tok[:, None], mode="drop")
+        self.slot_keys = self.slot_keys.at[dst_j].set(keys1, mode="drop")
+        self.slot_temp = self.slot_temp.at[dst_j].set(
+            jnp.asarray(temp), mode="drop")
+        self.slot_topk = self.slot_topk.at[dst_j].set(
+            jnp.asarray(topk), mode="drop")
+        self.slot_topp = self.slot_topp.at[dst_j].set(
+            jnp.asarray(topp), mode="drop")
+        first = np.asarray(tok)         # host sync — TTFT observed here
+        now = self._clock()
+        for i in finishing:
+            req = self.chunk_req[i]
+            slot = self.chunk_slot[i]
+            self._free_chunk_row(i)
+            if self._deadline_over(req, now):
+                self._terminate(req.rid, "expired",
+                                f"deadline {req.deadline_ms:.0f}ms exceeded "
+                                f"during chunked prefill")
+                continue
+            if ok is not None and not ok[i]:
+                # quarantine: the carried state (or its end logits) went
+                # non-finite — the slot stays free; its cache row is fully
+                # overwritten at the next refill, so the poison never
+                # reaches a live stream
+                self.stats.quarantined += 1
+                self._terminate(req.rid, "failed",
+                                f"non-finite chunked-prefill state for "
+                                f"request {req.rid} (chunk round {cidx}, "
+                                f"row {i}) — quarantined")
+                continue
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new
+            self.slot_last_t[slot] = now
+            self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
+            self.stats.chunked_prefills += 1
+            self._finish_token(slot, int(first[i]))
 
     # --------------------------------------------------------------- decode
     def _decode_step(self):
@@ -682,8 +1056,8 @@ class ServeEngine:
         self.cache_len = self.cache_len + jnp.asarray(act, jnp.int32)
         self.cur_tok = tok[:, None]
         self.stats.decode_steps += 1
-        if self._inflight is not None:
-            self._inflight["steps_waited"] += 1
+        for inf in self._prefill_pool:
+            inf["steps_waited"] += 1
         toks = np.asarray(tok)
         now = self._clock()
         for i in active:
@@ -714,17 +1088,32 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- loop
     def step(self) -> bool:
-        """One engine iteration: expire overdue queued requests, land a
-        finished prefill, refill free slots, then one decode step. Returns
-        True while work remains."""
+        """One engine iteration: expire overdue queued requests, land
+        finished prefills, refill free slots (up to the in-flight pool
+        bound), advance one chunked-prefill round, then one decode step.
+        Wall time is split per phase into ``stats.*_ms``. Returns True
+        while work remains."""
+        t0 = time.perf_counter()
         self._expire_queued()
+        t1 = time.perf_counter()
         self._land_prefill(block=False)
-        self._try_refill()
-        if self._inflight is not None and not self._active_slots():
-            self._land_prefill(block=True)    # nothing else to overlap with
+        while self._try_refill():     # bounded by max_inflight_prefills
+            pass                      # (and by the queue/slots draining)
+        if self._prefill_pool and not self._active_slots() \
+                and not self._chunk_active():
+            self._land_prefill(block=True)    # nothing to overlap with
+        t2 = time.perf_counter()
+        self._chunk_step()
+        t3 = time.perf_counter()
         self._decode_step()
+        t4 = time.perf_counter()
+        st = self.stats
+        st.host_ms += (t1 - t0) * 1e3
+        st.prefill_ms += (t2 - t1) * 1e3
+        st.chunk_ms += (t3 - t2) * 1e3
+        st.decode_ms += (t4 - t3) * 1e3
         return bool(self.queue or self._active_slots()
-                    or self._inflight is not None)
+                    or self._prefill_pool or self._chunk_active())
 
     def run(self) -> Dict[int, List[int]]:
         """Drive until the queue and all slots drain; returns rid → tokens."""
@@ -739,17 +1128,25 @@ class ServeEngine:
         (conv-tail, recurrent/KV) state plus a few per-slot scalars — which
         is exactly why snapshot/restore is almost free here where an
         attention server would checkpoint a paged KV region."""
-        return {"cache": self.cache, "cache_len": self.cache_len,
-                "cur_tok": self.cur_tok, "slot_keys": self.slot_keys,
-                "slot_temp": self.slot_temp, "slot_topk": self.slot_topk,
-                "slot_topp": self.slot_topp}
+        state = {"cache": self.cache, "cache_len": self.cache_len,
+                 "cur_tok": self.cur_tok, "slot_keys": self.slot_keys,
+                 "slot_temp": self.slot_temp, "slot_topk": self.slot_topk,
+                 "slot_topp": self.slot_topp}
+        if self.chunk_enabled:
+            # a half-consumed long prompt is just chunk_rows more O(1)
+            # states — snapshotting mid-chunked-prefill costs nothing extra
+            state["chunk_cache"] = self.chunk_cache
+            state["chunk_clen"] = self.chunk_clen
+        return state
 
     def _engine_meta(self) -> Dict[str, object]:
         return {"num_slots": self.num_slots, "max_len": self.max_len,
                 "prefill_rows": self.prefill_rows,
                 "buckets": list(self.buckets),
                 "max_segments": self.max_segments,
-                "sample_seed": self.sample_seed}
+                "sample_seed": self.sample_seed,
+                "chunk_rows": self.chunk_rows if self.chunk_enabled else 0,
+                "chunk_size": self.chunk_size}
 
     @staticmethod
     def _req_meta(req: Request, now: float) -> Dict[str, object]:
@@ -788,6 +1185,11 @@ class ServeEngine:
                       dict(self._req_meta(r, now),
                            remaining=int(self.slot_remaining[i]))
                       for i, r in enumerate(self.slot_req)],
+            "chunks": [None if r is None else
+                       dict(self._req_meta(r, now),
+                            off=int(self.chunk_off[i]),
+                            slot=int(self.chunk_slot[i]))
+                       for i, r in enumerate(self.chunk_req)],
             "queue": [self._req_meta(r, now) for r in self.queue],
             "outputs": {str(rid): [int(t) for t in toks]
                         for rid, toks in self.outputs.items()},
@@ -808,7 +1210,7 @@ class ServeEngine:
         ``self.resumed`` (their terminal status is still "done" — resumed
         and completed). Returns the checkpoint step restored."""
         if self.queue or self._active_slots() or any(self.slot_pending) \
-                or self._inflight is not None:
+                or self._prefill_pool or self._chunk_active():
             raise RuntimeError("restore() requires an idle engine — it "
                                "overwrites every slot; use a freshly "
                                "constructed ServeEngine")
@@ -837,6 +1239,19 @@ class ServeEngine:
                                for m in meta["slots"]]
         self.slot_pending = [False] * self.num_slots
         self.slot_last_t = [now] * self.num_slots
+        if self.chunk_enabled:
+            self.chunk_cache = got["chunk_cache"]
+            self.chunk_clen = got["chunk_clen"]
+        for i, m in enumerate(meta.get("chunks", [])):
+            if m is None:
+                continue
+            # a request mid-chunked-prefill resumes exactly where the slab
+            # stream left off; its decode slot is re-reserved so packed
+            # admission can't steal it before the handoff
+            self.chunk_req[i] = self._meta_req(m, now)
+            self.chunk_off[i] = int(m["off"])
+            self.chunk_slot[i] = int(m["slot"])
+            self.slot_pending[int(m["slot"])] = True
         self.queue = collections.deque(
             self._meta_req(m, now) for m in meta["queue"])
         self.outputs = {int(rid): list(toks)
@@ -845,6 +1260,7 @@ class ServeEngine:
         self.errors = {int(rid): e for rid, e in meta["errors"].items()}
         self._next_rid = int(meta["next_rid"])
         self.resumed |= {r.rid for r in self.slot_req if r is not None}
+        self.resumed |= {r.rid for r in self.chunk_req if r is not None}
         self.resumed |= {r.rid for r in self.queue}
         return step
 
@@ -864,7 +1280,8 @@ class ServeEngine:
         Bz = self.num_slots
         if len(prompts) > Bz:
             raise ValueError(f"{len(prompts)} prompts > {Bz} slots")
-        if self._active_slots() or self.queue or self._inflight is not None:
+        if self._active_slots() or self.queue or self._prefill_pool \
+                or self._chunk_active():
             raise RuntimeError("decode_batch would clobber the live slot "
                                "cache; drain the continuous engine first "
                                "(or use a separate ServeEngine)")
@@ -933,6 +1350,24 @@ def main():
     ap.add_argument("--target-ttft-ms", type=float, default=None,
                     help="admit below the refill threshold once the oldest "
                          "queued request has waited this long")
+    ap.add_argument("--max-inflight-prefills", type=int, default=1,
+                    help="packed prefills allowed in flight at once "
+                         "(the v2 prefill pipeline; 1 = pre-v2 behaviour)")
+    ap.add_argument("--bucket-policy", default="smallest_fit",
+                    choices=["smallest_fit", "ttft"],
+                    help="ttft: upgrade to a bigger prefill bucket when it "
+                         "admits more requests and TTFT has slack")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked-prefill slab length (default: largest "
+                         "bucket); prompts beyond the largest bucket are "
+                         "consumed in slabs of this size")
+    ap.add_argument("--chunk-rows", type=int, default=1,
+                    help="long prompts chunk-prefilling concurrently "
+                         "(0 disables chunked prefill)")
+    ap.add_argument("--max-prompt-len", type=int, default=None,
+                    help="hard bound on accepted prompt length "
+                         "(default: unbounded — chunked prefill handles "
+                         "any length that fits a slot)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request submit→completion deadline; overdue "
                          "requests are expired, not served late")
@@ -962,7 +1397,12 @@ def main():
     engine = ServeEngine(model, params, args.slots, args.max_len,
                          policy=args.policy, overlap=not args.no_overlap,
                          target_ttft_ms=args.target_ttft_ms,
-                         max_queue=args.max_queue, guard=args.guard)
+                         max_queue=args.max_queue, guard=args.guard,
+                         max_inflight_prefills=args.max_inflight_prefills,
+                         bucket_policy=args.bucket_policy,
+                         chunk_size=args.chunk_size,
+                         chunk_rows=args.chunk_rows,
+                         max_prompt_len=args.max_prompt_len)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(5, 40, size=args.requests)
@@ -991,6 +1431,12 @@ def main():
           f"{st.overlapped_prefills} overlapped, {st.early_admits} early), "
           f"{st.decode_steps} decode steps, "
           f"{len(st.buckets)} prefill shape(s) compiled")
+    if st.chunk_rounds:
+        print(f"chunked prefill: {st.chunked_prefills} request(s) over "
+              f"{st.chunk_rounds} rounds ({st.chunk_tokens} tokens)")
+    print(f"time split: prefill {st.prefill_ms:.0f}ms, chunk "
+          f"{st.chunk_ms:.0f}ms, decode {st.decode_ms:.0f}ms, host "
+          f"{st.host_ms:.0f}ms")
     itl = f"{np.percentile(st.itl_ms, 50):.2f}ms" if st.itl_ms else "n/a"
     print(f"TTFT p50 {pct.get('p50', 0):.1f}ms p95 {pct.get('p95', 0):.1f}ms "
           f"over {len(st.ttft_ms)} requests; "

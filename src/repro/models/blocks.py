@@ -921,6 +921,227 @@ def step_slstm(p, x_t, cache, ctx: Ctx, cfg: ArchConfig):
 
 
 # ===========================================================================
+# chunk-resume prefill steps
+# ===========================================================================
+# ``chunk_<kind>(p, x, cache, ctx, cfg) -> (x, cache)`` consumes a (B, T, d)
+# slab of a LONG prompt and advances the DECODE-layout cache in place — the
+# O(1) recurrent state makes resumable prefill natural (no KV re-read; the
+# attention ring is the one windowed structure, handled below). Protocol:
+#   ctx.positions    (B, T) GLOBAL intra-sequence positions (off + t);
+#                    padding slots hold anything (they are neutralized)
+#   ctx.segment_ids  (B, T) 1 = real token, 0 = padding (trailing only —
+#                    one request per chunk row, never packed)
+#   ctx.cache_len    (B,) tokens already consumed before this chunk
+# Rows whose slab is all padding are exact state no-ops (freeze semantics:
+# Δ=0 ⇒ Ā=1, B̄x=0 — the same trick the per-row collect paths use).
+
+
+def _conv_resume(x_in, conv_cache, w, b, positions, backend):
+    """Causal conv over a resumed chunk: prepend the cached (W-1)-tail,
+    run conv1d_pack, drop the warm-up outputs. Tap validity depends only on
+    the OUTPUT position, so extending positions with W-1 leading zeros
+    leaves every kept output exact. Returns (x_c (B, T, D), new tail)."""
+    B, T, D = x_in.shape
+    W = w.shape[0]
+    ext = jnp.concatenate([conv_cache.astype(x_in.dtype), x_in], axis=1)
+    pos_ext = jnp.concatenate(
+        [jnp.zeros((B, W - 1), positions.dtype), positions], axis=1)
+    x_c = kops.conv1d_pack(ext, w, b, pos_ext, backend=backend)[:, W - 1:]
+    return x_c
+
+
+def chunk_mamba(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    B, T, d = x.shape
+    N, dtr, W = cfg.d_state, cfg.dtr, cfg.d_conv
+    backend = "pallas" if cfg.use_pallas else "xla"
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    xz = h @ p["in_proj"].astype(h.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = _conv_resume(x_in, cache["conv"], p["conv_w"].astype(h.dtype),
+                       p["conv_b"].astype(h.dtype), ctx.positions, backend)
+    x_c = jax.nn.silu(x_c)
+    dbl = x_c @ p["x_proj"].astype(h.dtype)
+    dt_low, Bm, Cm = jnp.split(dbl, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(dt_low @ p["dt_w"].astype(h.dtype) +
+                            p["dt_b"].astype(h.dtype))
+    A = -jnp.exp(p["A_log"])
+    valid = _valid(ctx, x)
+    delta = delta * valid[..., None].astype(delta.dtype)
+    pos_nz = jnp.where(valid, ctx.positions, 1)
+    y, h_last = core_ssm.selective_scan(
+        x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
+        method=cfg.scan_impl, chunk=cfg.scan_chunk, return_state=True,
+        h0=cache["ssm"], intra=cfg.scan_intra, tune=_cfg_tune(cfg))
+    ext = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
+    state = {"conv": _conv_tail(ext, (W - 1) + valid.sum(-1), W),
+             "ssm": h_last}
+    y = y * jax.nn.silu(z)
+    return x + y @ p["out_proj"].astype(x.dtype), state
+
+
+def chunk_mamba2(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    B, T, d = x.shape
+    di, H, P, W = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_hd, cfg.d_conv
+    backend = "pallas" if cfg.use_pallas else "xla"
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    xz = h @ p["in_proj"].astype(h.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = _conv_resume(x_in, cache["conv"], p["conv_w"].astype(h.dtype),
+                       p["conv_b"].astype(h.dtype), ctx.positions, backend)
+    x_c = jax.nn.silu(x_c)
+    delta, Bm, Cm = _mamba2_gates(p, x_c, cfg)
+    A = -jnp.exp(p["A_log"])
+    valid = _valid(ctx, x)
+    delta = delta * valid[..., None].astype(delta.dtype)
+    pos_nz = jnp.where(valid, ctx.positions, 1)
+    y, h_last = core_ssm.selective_scan_heads(
+        x_c.reshape(B, T, H, P), delta, A, Bm, Cm, p["D"],
+        positions=pos_nz, method="blocked", chunk=cfg.scan_chunk,
+        return_state=True, h0=cache["ssm"], intra=cfg.scan_intra,
+        tune=_cfg_tune(cfg))
+    ext = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
+    state = {"conv": _conv_tail(ext, (W - 1) + valid.sum(-1), W),
+             "ssm": h_last}
+    y = _mamba2_gate_out(p, y.reshape(B, T, di), z, cfg)
+    return x + y @ p["out_proj"].astype(x.dtype), state
+
+
+def chunk_rec(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    backend = "pallas" if cfg.use_pallas else "xla"
+    nb = cfg.lru_gate_blocks
+    W = cfg.conv_width
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    y_branch = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    x_branch = h @ p["w_x"].astype(h.dtype)
+    x_c = _conv_resume(x_branch, cache["conv"], p["conv_w"].astype(h.dtype),
+                       p["conv_b"].astype(h.dtype), ctx.positions, backend)
+    r = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_r"].astype(h.dtype), nb))
+    i = jax.nn.sigmoid(_gate_blockdiag(x_c, p["w_i"].astype(h.dtype), nb))
+    vmask = _valid(ctx, x)
+    valid = vmask[..., None].astype(r.dtype)
+    r, i = r * valid, i * valid
+    pos_nz = jnp.where(vmask, ctx.positions, 1)
+    cdt = None if cfg.scan_dtype == "float32" else cfg.scan_dtype
+    lru, h_last = rglru(x_c, r, i, p["a_param"], pos_nz, h0=cache["h"],
+                        method="chunked", chunk=cfg.scan_chunk,
+                        compute_dtype=cdt)
+    out = (lru * y_branch) @ p["wo"].astype(x.dtype)
+    ext = jnp.concatenate([cache["conv"].astype(x_branch.dtype), x_branch],
+                          axis=1)
+    return x + out, {"conv": _conv_tail(ext, (W - 1) + vmask.sum(-1), W),
+                     "h": h_last}
+
+
+def chunk_attn(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    """Chunked prefill into the ring-buffer KV cache: attend (one joint
+    softmax over the cached prefix ring and the intra-chunk causal keys),
+    THEN write the chunk's post-rope K/V into its ring slots — the write
+    may evict prefix slots the chunk itself still needed, so order matters.
+    Requires chunk T ≤ ring size S (the engine sizes chunks to fit)."""
+    B, T, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = cache["k"].shape[1]
+    if T > S:
+        raise ValueError(f"chunk length {T} exceeds attention cache/window "
+                         f"{S} — use a chunk size ≤ the attention window")
+    G = H // Hkv
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, T, H, hd)
+    kv = (h @ p["wkv"].astype(h.dtype)).reshape(B, T, 2, Hkv, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    q, k = _apply_rope(cfg, q, k, ctx)
+    valid = _valid(ctx, x)                               # (B, T)
+    pos = ctx.positions                                  # (B, T) global
+    clen = ctx.cache_len[:, None]                        # (B, 1)
+    # prefix ring: slot s holds token t_s = s + ((clen-1-s)//S)·S < clen
+    s_idx = jnp.arange(S)[None, :]
+    t_s = s_idx + ((clen - 1 - s_idx) // S) * S          # (B, S)
+    pref_ok = (s_idx < clen) & (t_s >= 0)
+    qr = q.reshape(B, T, Hkv, G, hd)
+    sc_pre = jnp.einsum("btkgd,bskd->btkgs", qr, cache["k"],
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    m_pre = pref_ok[:, None, :]                          # (B, 1, S)
+    if cfg.attn_window is not None:
+        m_pre = m_pre & (t_s[:, None, :] >
+                         pos[:, :, None] - cfg.attn_window)
+    sc_pre = jnp.where(m_pre[:, :, None, None, :], sc_pre, -1e30)
+    # intra-chunk: causal over the slab, windowed, padding keys excluded
+    sc_in = jnp.einsum("btkgd,bjkd->btkgj", qr, k,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+    m_in = (pos[:, :, None] >= pos[:, None, :]) & valid[:, None, :]
+    m_in = m_in & (jnp.arange(T)[None, :, None] >= jnp.arange(T)[None, None])
+    if cfg.attn_window is not None:
+        m_in = m_in & (pos[:, None, :] > pos[:, :, None] - cfg.attn_window)
+    sc_in = jnp.where(m_in[:, :, None, None, :], sc_in, -1e30)
+    sc = jnp.concatenate([sc_pre, sc_in], axis=-1)       # (B, T, Hkv, G, S+T)
+    pr = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+    o = (jnp.einsum("btkgs,bskd->btkgd", pr[..., :S], cache["v"]) +
+         jnp.einsum("btkgj,bjkd->btkgd", pr[..., S:], v))
+    o = o.reshape(B, T, H * hd) @ p["wo"].astype(x.dtype)
+    # write AFTER attending: valid chunk tokens land at pos % S (distinct
+    # because T ≤ S), padding routes to the drop sentinel S
+    slot = jnp.where(valid, pos % S, S)
+    bidx = jnp.arange(B)[:, None]
+    kc = cache["k"].at[bidx, slot].set(k, mode="drop")
+    vc = cache["v"].at[bidx, slot].set(v, mode="drop")
+    return x + o, {"k": kc, "v": vc}
+
+
+def chunk_mlstm(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    pf = p["w_upx"].shape[1]
+    dh = pf // H
+    W = cfg.conv_width
+    backend = "pallas" if cfg.use_pallas else "xla"
+    hin = _norm(p["norm"], x, cfg.norm_eps)
+    x_in = hin @ p["w_upx"].astype(hin.dtype)
+    z = hin @ p["w_upz"].astype(hin.dtype)
+    x_c = _conv_resume(x_in, cache["conv"], p["conv_w"].astype(hin.dtype),
+                       p["conv_b"].astype(hin.dtype), ctx.positions, backend)
+    x_c = jax.nn.silu(x_c)
+    q = (x_c @ p["wq"].astype(hin.dtype)).reshape(B, T, H, dh)
+    k = (x_c @ p["wk"].astype(hin.dtype)).reshape(B, T, H, dh)
+    v = (x_in @ p["wv"].astype(hin.dtype)).reshape(B, T, H, dh)
+    g = x_c @ p["w_if"].astype(hin.dtype) + p["b_if"].astype(hin.dtype)
+    logi, f_pre = jnp.split(g, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = logi.astype(jnp.float32)
+    vmask = _valid(ctx, x)
+    valid = vmask[..., None]
+    logf = jnp.where(valid, logf, 0.0)
+    logi = jnp.where(valid, logi, -1e30)
+    pos_nz = jnp.where(vmask, ctx.positions, 1)
+    y, (C, n, m) = mlstm(q, k, v, logf, logi, positions=pos_nz,
+                         chunk=cfg.scan_chunk,
+                         state=(cache["C"], cache["n"], cache["m"]),
+                         return_state=True)
+    ext = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
+    state = {"conv": _conv_tail(ext, (W - 1) + vmask.sum(-1), W),
+             "C": C, "n": n, "m": m}
+    y = y.reshape(B, T, pf) * jax.nn.silu(z)
+    return x + y @ p["w_down"].astype(x.dtype), state
+
+
+def chunk_slstm(p, x, cache, ctx: Ctx, cfg: ArchConfig):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    h = _norm(p["norm"], x, cfg.norm_eps)
+    pre = (h @ p["w_pre"].astype(h.dtype)).reshape(B, T, 4, H, dh)
+    st = (cache["c"], cache["n"], cache["m"], cache["h"])
+    y, (c, n, m, hh) = slstm(pre, p["R"], positions=ctx.positions,
+                             state=st, valid=_valid(ctx, x),
+                             return_state=True)
+    out = x + y.reshape(B, T, d) @ p["w_out"].astype(x.dtype)
+    return out, {"c": c, "n": n, "m": m, "h": hh}
+
+
+CHUNK = {"attn": chunk_attn, "mamba": chunk_mamba, "mamba2": chunk_mamba2,
+         "rec": chunk_rec, "mlstm": chunk_mlstm, "slstm": chunk_slstm}
+
+
+# ===========================================================================
 # batched sampling (serving decode)
 # ===========================================================================
 # Key plumbing is raw-uint32 (B, 2) arrays so per-slot keys live as ordinary

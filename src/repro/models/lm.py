@@ -367,6 +367,96 @@ class LM:
         seg_lens = B._ends_lens(ctx, ends)
         return logits, states, seg_lens
 
+    # -------------------------------------------------- chunk-resume prefill
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when every state-bearing sub-block has a chunk-resume step
+        (``blocks.CHUNK``) — the serve engine's gate for accepting prompts
+        longer than its largest prefill bucket."""
+        if self.cfg.family in ("audio", "vlm"):
+            return False
+        return all(kind in B.CHUNK or kind in ("mlp", "moe")
+                   for _, kind in self.layout)
+
+    def prefill_chunk(self, params, cache, batch, cache_len):
+        """Advance DECODE-layout caches by one (B, T) slab of long prompts
+        — resumable prefill from the carried O(1) state, so a prompt far
+        beyond any prefill bucket is consumed in fixed-shape chunks while
+        decode slots keep stepping. ``batch`` holds tokens/positions/
+        segment_ids for the slab (positions GLOBAL, segment_ids 0 marks
+        trailing padding — all-padding rows are exact state no-ops);
+        ``cache_len`` (B,) counts tokens already consumed. Returns
+        (logits (B, V) at each row's last valid slab token, new_cache,
+        new cache_len)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        ctx = Ctx(positions=batch.get("positions"),
+                  segment_ids=batch.get("segment_ids"),
+                  cache_len=cache_len)
+
+        def unit_step(x, unit_p, unit_c):
+            new_c = {}
+            for name, kind in self.layout:
+                if kind in ("mlp", "moe"):
+                    x, _, _ = _apply_sub(kind, unit_p[name], x, ctx, cfg)
+                else:
+                    x, new_c[name] = B.CHUNK[kind](unit_p[name], x,
+                                                   unit_c[name], ctx, cfg)
+            return x, new_c
+
+        if self.n_units:
+            def body(x, pc):
+                p_u, c_u = pc
+                return unit_step(x, p_u, c_u)
+            x, new_units = jax.lax.scan(body, x,
+                                        (params["units"], cache["units"]))
+            cache = dict(cache, units=new_units)
+        if self.n_tail:
+            new_tail = {}
+            for name, kind in self.tail_layout:
+                if kind in ("mlp", "moe"):
+                    x, _, _ = _apply_sub(kind, params["tail"][name], x, ctx,
+                                         cfg)
+                else:
+                    x, new_tail[name] = B.CHUNK[kind](
+                        params["tail"][name], x, cache["tail"][name], ctx,
+                        cfg)
+            cache = dict(cache, tail=new_tail)
+        x = B._norm(params["final_norm"], x, cfg.norm_eps)
+        nvalid = (batch["segment_ids"] > 0).sum(-1)
+        xlast = x[jnp.arange(x.shape[0]), jnp.maximum(nvalid - 1, 0)]
+        logits = (xlast @ self._head_t(params).astype(xlast.dtype))
+        return logits.astype(jnp.float32), cache, cache_len + nvalid
+
+    def reset_cache_rows(self, cache, fresh):
+        """Zero the given cache rows (``fresh`` (B,) bool) back to their
+        ``init_cache`` values — the engine calls this when it claims a
+        chunk row for a new request, so no stale conv tail / attention ring
+        / stabilizer state leaks across tenants. Leaves named ``m`` are
+        log-domain stabilizers whose empty value is -1e30, not 0."""
+        def one(path, leaf):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            extra = leaf.ndim - (2 if stacked else 1)
+            m = fresh.reshape(((1,) if stacked else ())
+                              + fresh.shape + (1,) * extra)
+            empty = -1e30 if getattr(path[-1], "key", None) == "m" else 0
+            return jnp.where(m, jnp.asarray(empty, leaf.dtype), leaf)
+
+        return jax.tree_util.tree_map_with_path(one, cache)
+
+    def expand_chunk_states(self, cache):
+        """View a chunk cache (``init_cache`` layout, (B, …) leaves) as a
+        1-segment packed-states tree ((B, 1, …) leaves) so the existing
+        ``scatter_into_cache`` / ``prefill_probe`` machinery handles the
+        chunk→decode-slot handoff unchanged."""
+        def one(path, leaf):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            if stacked:
+                return leaf.reshape(leaf.shape[:2] + (1,) + leaf.shape[2:])
+            return leaf.reshape((leaf.shape[0], 1) + leaf.shape[1:])
+
+        return jax.tree_util.tree_map_with_path(one, cache)
+
     def scatter_into_cache(self, cache, states, src, dst):
         """Land harvested per-segment states in arbitrary decode slots.
 

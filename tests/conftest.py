@@ -12,6 +12,23 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """XLA's CPU backend keeps one mmap'd JIT-code region per compiled
+    executable — including the tiny ones eager primitive dispatch compiles
+    — and never unmaps them while referenced. A full tier-1 run compiles
+    enough of them to exhaust ``vm.max_map_count`` (65530 default) and
+    LLVM then SEGFAULTS on the failed mmap mid-compile. Dropping the
+    compilation caches after every test module keeps the map count
+    bounded; per-module caches are cold anyway (each module builds its own
+    models)."""
+    yield
+    import gc
+    import jax
+    jax.clear_caches()
+    gc.collect()
+
+
 def make_packed(rng, lens, cap, feat=None, rows=None):
     """Helper: pack per-sequence arrays (built by `feat(n)` or token ids)
     into (rows, cap) buffers. Returns (packed_values, positions, seg_ids,

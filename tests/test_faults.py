@@ -8,6 +8,9 @@ fault-free reference run of the SAME engine configuration:
   to the reference;
 * NaN/Inf poisoning (decode logits and harvested prefill states): the
   poisoned slot is quarantined, healthy slots bit-identical;
+* chunked-prefill seams (scheduler v2): a failed slab round kills the
+  chunk-lane request explicitly, a poisoned carried state is quarantined
+  at handoff — decode slots never notice either;
 * deadlines vs a scripted clock (queued, and mid-decode with tokens kept);
 * overload shedding (queue depth and head-of-line age bounds);
 * cancellation in every lifecycle stage;
@@ -26,7 +29,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.checkpoint.checkpoint import CheckpointManager
-from repro.faults import EngineKilled, FaultPlan, poison_states
+from repro.faults import (EngineKilled, FaultPlan, poison_cache_rows,
+                          poison_states)
 from repro.launch.serve import ServeEngine, ShedError
 from repro.models.lm import build_model
 
@@ -77,6 +81,12 @@ def test_fault_plan_queries():
     assert FaultPlan().empty() and not FaultPlan().needs_guard()
     # delay/fail alone are visible without the guard
     assert not FaultPlan(fail_prefill=0).needs_guard()
+    # chunk seams: indexed by chunk round; poison self-enables the guard
+    cplan = FaultPlan(fail_chunk=2, poison_chunk={1: [0]})
+    assert cplan.fails_chunk(2) and not cplan.fails_chunk(1)
+    assert cplan.chunk_poison(1) == [0] and cplan.chunk_poison(0) is None
+    assert cplan.needs_guard() and not cplan.empty()
+    assert not FaultPlan(fail_chunk=0).needs_guard()
 
 
 def test_fault_plan_random_deterministic():
@@ -102,6 +112,22 @@ def test_poison_states_targets_only_named_segments():
     # integer bookkeeping leaves cannot hold a NaN and must pass through
     np.testing.assert_array_equal(np.asarray(out["len"]),
                                   np.asarray(states["len"]))
+
+
+def test_poison_cache_rows_targets_only_named_rows():
+    """The chunk-lane analogue: whole rows of a decode-layout cache."""
+    cache = {"layer": {"conv": jnp.ones((3, 4)),
+                       "units": jnp.ones((5, 3, 6))},
+             "len": jnp.ones((3,), jnp.int32)}
+    out = poison_cache_rows(cache, [1], float("nan"))
+    conv = np.asarray(out["layer"]["conv"])
+    assert np.isnan(conv[1]).all()
+    assert np.isfinite(conv[0]).all() and np.isfinite(conv[2]).all()
+    stacked = np.asarray(out["layer"]["units"])   # (units, B, ...)
+    assert np.isnan(stacked[:, 1]).all()
+    assert np.isfinite(stacked[:, 0]).all()
+    np.testing.assert_array_equal(np.asarray(out["len"]),
+                                  np.asarray(cache["len"]))
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +186,52 @@ def test_prefill_poison_quarantines_before_activation(tiny_engine_model,
     for r in ref:
         if r not in failed:
             assert out[r] == ref[r]
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill fault seams (scheduler v2)
+# ---------------------------------------------------------------------------
+
+def test_chunk_dispatch_failure_keeps_serving(tiny_engine_model, rng):
+    """A failed slab round (injected stand-in for device OOM on the chunk
+    forward) kills the chunk-lane request with an explicit status; the
+    packed requests never notice and the engine drains."""
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng) + \
+        [rng.integers(1, cfg.vocab, size=40).tolist()]   # > bucket 32
+    long_rid = len(prompts) - 1
+    _, ref = _run(model, params, prompts)
+    assert ref[long_rid]                   # fault-free chunk lane works
+    eng, out = _run(model, params, prompts,
+                    faults=FaultPlan(fail_chunk=1))
+    assert eng.status[long_rid] == "failed"
+    assert "chunked-prefill round 1 failed" in eng.errors[long_rid]
+    assert out[long_rid] == []             # never reached a decode slot
+    assert eng.stats.prefill_faults == 1
+    assert eng.stats.chunked_prefills == 0
+    for r in range(long_rid):
+        assert out[r] == ref[r]
+    assert all(s in ("done", "failed") for s in eng.status.values())
+
+
+def test_chunk_poison_quarantined_at_handoff(tiny_engine_model, rng):
+    """A poisoned carried chunk state is caught by the handoff probe: the
+    request is quarantined BEFORE its slot activates — no garbage token is
+    ever emitted, healthy streams stay bit-identical."""
+    cfg, model, params = tiny_engine_model
+    prompts = _prompts(cfg, rng) + \
+        [rng.integers(1, cfg.vocab, size=40).tolist()]
+    long_rid = len(prompts) - 1
+    _, ref = _run(model, params, prompts)
+    plan = FaultPlan(poison_chunk={0: [0]})
+    eng, out = _run(model, params, prompts, faults=plan)
+    assert eng.guard                       # poison plans self-enable it
+    assert eng.status[long_rid] == "failed"
+    assert "non-finite chunked-prefill state" in eng.errors[long_rid]
+    assert eng.stats.quarantined == 1
+    assert out[long_rid] == []
+    for r in range(long_rid):
+        assert out[r] == ref[r]
 
 
 # ---------------------------------------------------------------------------
@@ -285,8 +357,11 @@ def test_submit_rejects_duplicate_rid_and_oversize(tiny_engine_model, rng):
     eng.submit(_prompts(cfg, rng)[0], 4, rid=5)
     with pytest.raises(ValueError, match="duplicate request id 5"):
         eng.submit(_prompts(cfg, rng)[1], 4, rid=5)
+    # over-bucket prompts go to the chunk lane now; the rejection survives
+    # only where chunking is off (scheduler v2)
+    nochunk = ServeEngine(model, params, chunk_rows=0, **KW)
     with pytest.raises(ValueError, match="largest prefill bucket"):
-        eng.submit(list(range(1, 40)), 4)  # 39 > max bucket 32
+        nochunk.submit(list(range(1, 40)), 4)  # 39 > max bucket 32
     # auto rids keep advancing past pinned ones
     assert eng.submit(_prompts(cfg, rng)[1], 4) == 6
 
@@ -378,14 +453,17 @@ def test_chaos_seeded_no_hangs_no_garbage(tiny_engine_model, rng):
     happens to be empty — outputs equal the reference exactly."""
     cfg, model, params = tiny_engine_model
     base_seed = int(os.environ.get("FAULT_CHAOS_SEED", "0"))
-    prompts = _prompts(cfg, rng, lens=(5, 9, 7, 12, 6, 10))
+    # the last prompt is over-bucket (40 > 32): every seed also stresses
+    # the chunk lane, and chunk faults are in the random plan's envelope
+    prompts = _prompts(cfg, rng, lens=(5, 9, 7, 12, 6, 40))
     budgets = [4, 10, 6, 12, 5, 7]
     _, ref = _run(model, params, prompts, max_new=budgets)
     for seed in range(base_seed, base_seed + 4):
         plan = FaultPlan.random(seed, max_prefills=3, max_steps=20,
                                 num_slots=KW["num_slots"],
                                 prefill_rows=KW["prefill_rows"],
-                                max_segments=KW["max_segments"])
+                                max_segments=KW["max_segments"],
+                                chunk_rows=1)
         eng = ServeEngine(model, params, faults=plan, **KW)
         for p, m in zip(prompts, budgets):
             eng.submit(p, m)
@@ -400,7 +478,8 @@ def test_chaos_seeded_no_hangs_no_garbage(tiny_engine_model, rng):
         # every failure is accounted for by an injected fault, with a
         # human-readable diagnostic — nothing fails silently
         assert n_failed == eng.stats.quarantined + sum(
-            "prefill dispatch" in eng.errors.get(r, "")
+            "prefill dispatch" in eng.errors.get(r, "") or
+            "chunked-prefill round" in eng.errors.get(r, "")
             for r, s in statuses.items() if s == "failed")
         for r, s in statuses.items():
             if s == "failed":

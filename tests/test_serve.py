@@ -11,6 +11,13 @@ TTFT-driven admission policy (scripted clock), batched
 temperature/top-k/top-p sampling (exact parity vs a scripted key-stream
 reference, plus distribution sanity), and ``ServeStats`` accounting against
 a fully scripted admission trace.
+
+Scheduler v2 (the perf PR): chunked prefill of prompts longer than the
+largest bucket (slab-by-slab resume through a side cache, bit-identical to
+the unchunked reference, across every cached block kind), the multi-prefill
+pipeline (``max_inflight_prefills``) against the blocking engine, the
+TTFT-aware bucket policy under a scripted clock, and snapshot/restore in
+the middle of a chunked prefill.
 """
 import dataclasses
 
@@ -469,8 +476,9 @@ def test_submit_validation(tiny_engine_model):
     cfg, model, params = tiny_engine_model
     engine = ServeEngine(model, params, num_slots=2, max_len=32,
                          buckets=(16,))
-    with pytest.raises(ValueError):
-        engine.submit(np.ones(20, np.int32), 4)      # > largest bucket
+    # scheduler v2: over-bucket prompts are ACCEPTED — the chunk lane
+    # serves them (the old unconditional rejection is gone)
+    long_rid = engine.submit(np.ones(20, np.int32), 4)
     with pytest.raises(ValueError):
         engine.submit(np.ones(10, np.int32), 30)     # prompt+new > max_len
     with pytest.raises(ValueError, match="non-empty"):
@@ -490,6 +498,221 @@ def test_submit_validation(tiny_engine_model):
         engine.decode_batch([np.ones(5, np.int32)], 2)
     engine.run()
     engine.decode_batch([np.ones(5, np.int32)], 2)   # drained: fine
+    assert engine.status[long_rid] == "done"         # chunk lane served it
+    assert engine.stats.chunked_prefills == 1
+    # the explicit prompt-length bound replaces the old over-bucket guard
+    bounded = ServeEngine(model, params, num_slots=2, max_len=32,
+                          buckets=(16,), max_prompt_len=16)
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        bounded.submit(np.ones(20, np.int32), 4)
+    bounded.submit(np.ones(16, np.int32), 4)         # at the bound: fine
+    # with the chunk lane disabled the over-bucket rejection still fires
+    unchunked = ServeEngine(model, params, num_slots=2, max_len=32,
+                            buckets=(16,), chunk_rows=0)
+    with pytest.raises(ValueError, match="chunked prefill is unavailable"):
+        unchunked.submit(np.ones(20, np.int32), 4)
+    with pytest.raises(ValueError, match="bucket_policy"):
+        ServeEngine(model, params, num_slots=2, max_len=32,
+                    buckets=(16,), bucket_policy="widest")
+
+
+# ---------------------------------------------------------------------------
+# scheduler v2: chunked prefill, prefill pipelining, TTFT bucket policy
+# ---------------------------------------------------------------------------
+
+# every cached block kind resumes mid-prompt: attn (full + windowed ring),
+# mamba, mamba2, rec, mlstm/slstm. The windowed case must chunk BELOW the
+# ring size (chunk_attn rejects slabs wider than the ring statically).
+CHUNK_CASES = [("stablelm-1.6b", None, 8),
+               ("stablelm-1.6b", {"attn_window": 5}, 4),
+               ("mamba-110m", None, 8), ("mamba2-370m", None, 8),
+               ("recurrentgemma-2b", None, 8), ("xlstm-125m", None, 8)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,mod,chunk", CHUNK_CASES)
+def test_chunked_prefill_matches_reference(arch, mod, chunk, rng):
+    """TENTPOLE acceptance: a prompt longer than the largest bucket is
+    consumed in fixed-size slabs resuming from carried state, and the
+    resulting greedy stream is bit-identical to the unchunked per-request
+    reference — for every cached block kind. A short prompt rides along on
+    the packed path to prove the two admission lanes coexist."""
+    cfg = get_config(arch).reduced()
+    if mod:
+        cfg = dataclasses.replace(cfg, **mod)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.supports_chunked_prefill
+    long_p = rng.integers(1, cfg.vocab, size=37).astype(np.int32)
+    short = rng.integers(1, cfg.vocab, size=6).astype(np.int32)
+    engine = ServeEngine(model, params, num_slots=2, max_len=64,
+                         prefill_rows=1, buckets=(8,), max_segments=1,
+                         chunk_size=chunk)
+    rl = engine.submit(long_p, 4)
+    rs = engine.submit(short, 4)
+    outs = engine.run()
+    assert outs[rl] == _reference_decode(model, params, long_p, 4, 64), arch
+    assert outs[rs] == _reference_decode(model, params, short, 4, 64), arch
+    st = engine.stats
+    assert st.chunked_prefills == 1
+    assert st.chunk_rounds == -(-37 // chunk)    # ceil: one slab per round
+    assert st.chunk_tokens == 37
+    assert st.prefill_ms > 0 and st.chunk_ms > 0 and st.decode_ms > 0
+
+
+@pytest.mark.slow
+def test_long_prompt_4x_bucket_decodes_alongside(tiny_engine_model, rng):
+    """ISSUE acceptance: a prompt 4× the largest bucket completes via
+    chunked prefill while short concurrent requests keep decoding — the
+    slab rounds interleave with fused decode steps instead of head-of-line
+    blocking them, and every stream still matches its reference."""
+    cfg, model, params = tiny_engine_model
+    long_p = rng.integers(1, cfg.vocab, size=64).astype(np.int32)   # 4×16
+    shorts = [rng.integers(1, cfg.vocab, size=int(n)).astype(np.int32)
+              for n in rng.integers(4, 14, size=4)]
+    engine = ServeEngine(model, params, num_slots=3, max_len=96,
+                         prefill_rows=2, buckets=(16,), max_segments=2,
+                         refill_threshold=1, chunk_size=16)
+    rl = engine.submit(long_p, 5)
+    rshorts = [engine.submit(p, 3) for p in shorts]
+    saw_decode_mid_chunk = False
+    prev_decode = 0
+    while engine.step():
+        if engine._chunk_active() and engine.stats.decode_steps > prev_decode:
+            saw_decode_mid_chunk = True
+        prev_decode = engine.stats.decode_steps
+    assert saw_decode_mid_chunk          # decode progressed mid-chunk
+    outs = engine.outputs
+    assert outs[rl] == _reference_decode(model, params, long_p, 5, 96)
+    for rid, p in zip(rshorts, shorts):
+        assert outs[rid] == _reference_decode(model, params, p, 3, 96)
+    st = engine.stats
+    assert st.chunk_rounds == 4 and st.chunked_prefills == 1
+    assert st.chunk_tokens == 64
+    assert all(engine.status[r] == "done" for r in outs)
+
+
+@pytest.mark.slow
+def test_pipelined_chunked_engine_bit_identical(tiny_engine_model, rng):
+    """TENTPOLE acceptance: the pipelined engine (prefill pool of 3, two
+    chunk rows, overlap on) emits token streams bit-identical to the
+    blocking single-prefill engine on the same mixed greedy + sampled
+    request set — the (seed, rid) key streams make schedule changes
+    invisible in the tokens."""
+    cfg, model, params = tiny_engine_model
+    lens = [5, 40, 9, 13, 26, 7, 11, 33]       # 40/26/33 > largest bucket
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+               for n in lens]
+    budgets = [int(b) for b in rng.integers(3, 7, size=len(lens))]
+    temps = [0.0, 0.7, 0.0, 0.9, 0.0, 0.8, 0.0, 0.6]
+
+    def run_engine(**kw):
+        eng = ServeEngine(model, params, num_slots=3, max_len=64,
+                          prefill_rows=2, buckets=(16,), max_segments=2,
+                          refill_threshold=1, sample_seed=11, **kw)
+        rids = [eng.submit(p, b, temperature=tp, top_k=7)
+                for p, b, tp in zip(prompts, budgets, temps)]
+        outs = eng.run()
+        return [outs[r] for r in rids], eng.stats
+
+    base, _ = run_engine(overlap=False, max_inflight_prefills=1)
+    pipe, st = run_engine(overlap=True, max_inflight_prefills=3,
+                          chunk_rows=2)
+    assert base == pipe
+    assert st.chunked_prefills == 3
+
+
+def test_ttft_percentiles_edge_cases():
+    st = ServeStats()
+    assert st.ttft_percentiles() == {}           # no samples: empty dict
+    st.ttft_ms.append(12.5)
+    pct = st.ttft_percentiles()                  # single sample: p50 == p95
+    assert pct["p50"] == pytest.approx(12.5)
+    assert pct["p95"] == pytest.approx(12.5)
+
+
+def test_ttft_bucket_policy_scripted_clock(tiny_engine_model, rng):
+    """bucket_policy='ttft' under a scripted clock: with slack against the
+    target the engine upgrades to the bucket that admits strictly more
+    queued requests; once the head has already waited out the whole
+    allowance the upgrade is deferred and the smallest fit wins."""
+    cfg, model, params = tiny_engine_model
+    t = {"now": 0.0}
+
+    def mk():
+        # refill_threshold=4: once anything decodes, a new round needs ALL
+        # slots free — so ONE admission round happens per scripted step
+        return ServeEngine(model, params, num_slots=4, max_len=64,
+                           prefill_rows=1, buckets=(8, 32), max_segments=4,
+                           overlap=False, refill_threshold=4,
+                           bucket_policy="ttft", target_ttft_ms=100.0,
+                           clock=lambda: t["now"])
+
+    # four 8-token prompts: the 8-bucket admits only the head (1 row), the
+    # 32-bucket packs all four (4 segments in the one row). Wait 0 is well
+    # inside the 100ms allowance → upgrade and admit everything in one
+    # round.
+    t["now"] = 0.0
+    eng = mk()
+    for _ in range(4):
+        eng.submit(rng.integers(1, cfg.vocab, size=8).astype(np.int32), 2)
+    assert eng.stats.queue_depth_max == 4
+    eng.step()
+    assert eng.stats.bucket_upgrades == 1
+    assert eng.stats.prefills == 1 and eng.stats.buckets == {(1, 32)}
+    eng.run()
+    assert eng.stats.buckets == {(1, 32)}        # one compiled shape
+    # same queue, but the head has already waited 120ms ≥ the whole 100ms
+    # allowance — it is late NOW, a bigger forward only makes it later →
+    # every admission round stays small (and the early-admit override
+    # keeps admitting rounds below the threshold): four 1-request
+    # prefills, upgrades deferred while >1 request is queued
+    t["now"] = 0.0
+    eng = mk()
+    for _ in range(4):
+        eng.submit(rng.integers(1, cfg.vocab, size=8).astype(np.int32), 2)
+    t["now"] = 0.12
+    eng.step()
+    assert eng.stats.deferred_upgrades == 3
+    assert eng.stats.bucket_upgrades == 0
+    assert eng.stats.early_admits >= 1
+    assert eng.stats.prefills == 4 and eng.stats.buckets == {(1, 8)}
+    eng.run()
+
+
+@pytest.mark.slow
+def test_snapshot_restore_mid_chunked_prefill(tiny_engine_model, rng,
+                                              tmp_path):
+    """A request mid-chunked-prefill survives snapshot/restore: a fresh
+    engine resumes the slab stream where it left off and completes every
+    request with the exact tokens an uninterrupted run produces."""
+    from repro.checkpoint.checkpoint import CheckpointManager
+    cfg, model, params = tiny_engine_model
+    long_p = rng.integers(1, cfg.vocab, size=48).astype(np.int32)
+    short = rng.integers(1, cfg.vocab, size=7).astype(np.int32)
+
+    def mk():
+        return ServeEngine(model, params, num_slots=2, max_len=96,
+                           prefill_rows=1, buckets=(16,), max_segments=1,
+                           refill_threshold=1, chunk_size=16)
+
+    ref_l = _reference_decode(model, params, long_p, 4, 96)
+    ref_s = _reference_decode(model, params, short, 3, 96)
+    eng = mk()
+    rl = eng.submit(long_p, 4)
+    rs = eng.submit(short, 3)
+    eng.step()
+    assert eng._chunk_active()                   # slab 1 of 3 consumed
+    assert 0 < eng.chunk_off[0] < len(long_p)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    eng.snapshot(mgr, step=1)
+    eng2 = mk()
+    eng2.restore(mgr)
+    assert eng2._chunk_active()                  # mid-chunk row came back
+    outs = eng2.run()
+    assert outs[rl] == ref_l and outs[rs] == ref_s
+    assert rl in eng2.resumed and rs in eng2.resumed
+    assert eng2.status[rl] == "done" and eng2.status[rs] == "done"
 
 
 # ---------------------------------------------------------------------------
