@@ -10,6 +10,8 @@ OLD ?= BENCH_scan.json
 NEW ?= BENCH_scan.new.json
 SERVE_OLD ?= BENCH_serve.json
 SERVE_NEW ?= BENCH_serve.new.json
+TRAIN_OLD ?= BENCH_train.json
+TRAIN_NEW ?= BENCH_train.new.json
 # the shape-keyed scan-autotuning cache (repro/tune). bench-tune refreshes
 # it; tune-check verifies the committed file loads under this machine's
 # fingerprint (a clean STALE report on any other machine).
@@ -19,6 +21,7 @@ TUNE ?= TUNE_CACHE.json
 # never compared against the committed baselines
 SMOKE_SCAN ?= experiments/smoke_scan.json
 SMOKE_SERVE ?= experiments/smoke_serve.json
+SMOKE_TRAIN ?= experiments/smoke_train.json
 SMOKE_TUNE ?= experiments/smoke_tune_cache.json
 
 # seed for the chaos lane's randomized-but-seeded FaultPlan (verify-faults);
@@ -27,8 +30,8 @@ SMOKE_TUNE ?= experiments/smoke_tune_cache.json
 FAULT_CHAOS_SEED ?= 0
 
 .PHONY: verify verify-fast verify-faults ci bench-scan bench-serve \
-	bench-serve-open bench-tune tune-check bench-compare bench-smoke \
-	bench-accept quickstart
+	bench-serve-open bench-train bench-tune tune-check bench-compare \
+	bench-smoke bench-accept quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -66,6 +69,11 @@ bench-serve:
 bench-serve-open:
 	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve_open
 
+# regenerate the gated training rows (single vs pad vs pack x f32/bf16
+# full train steps) -> $(TRAIN_NEW)
+bench-train:
+	BENCH_TRAIN_JSON=$(TRAIN_NEW) $(PY) -m benchmarks.run train
+
 # bounded autotune sweep over the benchmark-matrix shapes -> $(TUNE)
 bench-tune:
 	REPRO_TUNE_CACHE=$(TUNE) $(PY) -m repro.tune.runner --out $(TUNE)
@@ -81,14 +89,16 @@ tune-check:
 # skipped if a side wasn't regenerated.
 bench-compare: tune-check
 	$(PY) benchmarks/compare.py --pair $(OLD) $(NEW) \
-		--optional-pair $(SERVE_OLD) $(SERVE_NEW)
+		--optional-pair $(SERVE_OLD) $(SERVE_NEW) \
+		--optional-pair $(TRAIN_OLD) $(TRAIN_NEW)
 
 # promote freshly-written staging files ($(NEW)/$(SERVE_NEW)) over the
 # committed baselines and delete them — prints the delta table first, but
 # accepting is the operator's call so regressions never fail this target
 bench-accept:
 	$(PY) benchmarks/compare.py --pair $(OLD) $(NEW) \
-		--optional-pair $(SERVE_OLD) $(SERVE_NEW) --accept
+		--optional-pair $(SERVE_OLD) $(SERVE_NEW) \
+		--optional-pair $(TRAIN_OLD) $(TRAIN_NEW) --accept
 
 # tiny-shape benchmark pass for CI: exercises fig2 + serve end to end and
 # validates the emitted JSON structure; timings are NOT gated (CI machines
@@ -97,9 +107,11 @@ bench-accept:
 bench-smoke:
 	mkdir -p experiments
 	BENCH_SMOKE=1 BENCH_SCAN_JSON=$(SMOKE_SCAN) \
-		BENCH_SERVE_JSON=$(SMOKE_SERVE) REPRO_TUNE_CACHE=$(SMOKE_TUNE) \
-		$(PY) -m benchmarks.run fig2 serve serve_open
-	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE)
+		BENCH_SERVE_JSON=$(SMOKE_SERVE) BENCH_TRAIN_JSON=$(SMOKE_TRAIN) \
+		REPRO_TUNE_CACHE=$(SMOKE_TUNE) \
+		$(PY) -m benchmarks.run fig2 serve serve_open train
+	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE) \
+		$(SMOKE_TRAIN)
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -87,10 +87,13 @@ REQUIRED_STR = ("op", "shape", "schedule")
 REQUIRED_NUM = ("us_per_call", "tok_per_s")
 # scheduler-v2 serve rows carry arrival-process parameters (arrival_*),
 # queue pressure (queue_*), and the engine-phase wall-time split
-# (prefill_/chunk_/decode_/host_ms) next to the ttft percentiles — all
-# non-negative numbers when present
+# (prefill_/chunk_/decode_/host_ms) next to the ttft percentiles; train
+# rows split tok/s into real_/buffer_tok_per_s and carry the padding_rate
+# connecting them (dtype lives in the schedule string, e.g. "pack_bf16") —
+# all non-negative numbers when present
 OPTIONAL_NUM_PREFIXES = ("ttft_", "arrival_", "queue_", "prefill_",
-                         "chunk_", "decode_", "host_")
+                         "chunk_", "decode_", "host_", "real_", "buffer_",
+                         "padding_")
 
 
 def schema_errors(path):

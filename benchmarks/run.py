@@ -7,6 +7,9 @@
   roof   roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
   serve  serving throughput: padded-wave vs packed-continuous batching
          (launch/serve.py engine; emits BENCH_serve.json)
+  train  gated training benchmark: single vs padded vs packed train steps
+         in f32 and bf16, real-vs-buffer tok/s + padding_rate per row
+         (emits BENCH_train.json)
 
 Output: ``name,us_per_call,derived`` CSV rows (plus commented context lines).
 CPU timings are for *ratios* (the paper's A100 wall-clock is not reproducible
@@ -319,6 +322,129 @@ def fig5_training_throughput(seq_len=512, n_stream=48):
          f"5.05x@110m bf16)")
     _row("fig5/speedup_pack_vs_pad", results["pad"] / results["pack"] * 100,
          f"{results['pad'] / results['pack']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# train — the paper's experiment as a gated benchmark: full train steps,
+# single vs padded vs packed, f32 vs bf16 (emits BENCH_train.json)
+# ---------------------------------------------------------------------------
+
+TRAIN_RECORDS = []
+TRAIN_JSON = os.environ.get("BENCH_TRAIN_JSON", "BENCH_train.json")
+
+
+def train_throughput(seq_len=512, rows=4, steps=4):
+    """PackMamba's headline experiment, gated: the SAME lognormal sequence
+    stream through three training regimes as full train steps (fwd+bwd+
+    AdamW), in f32 and in the bf16 mixed-precision lane (activations bf16,
+    scan carries and loss reduction f32 — models/lm.py). Paper (A100,
+    bf16): pack/single 3.06× (1.4B) / 5.05× (110m); pack > pad always.
+
+    The three regimes are the paper's three pipelines under jit's static-
+    shape discipline (every shape is warmed before timing):
+
+      single  batch-1 fixed-context pipeline: one sequence per step,
+              padded to the compiled (1, seq_len) buffer. (The pow2-
+              bucketed batch-1 variant is fig5 / loader mode="single" —
+              published there; on a CPU box it under-represents the
+              paper's GPU underutilization cost.)
+      pad     standard dynamic batch padding: `rows` sequences per step,
+              one per row, padded to the longest in the batch rounded up
+              to a power of two (bounded compiled-shape count).
+      pack    PackingLoader first_fit_decreasing packed (rows, seq_len)
+              buffers.
+
+    tok/s = stream (real) tokens / wall; every row also reports the
+    buffer-token rate and the padding_rate connecting them — the packed
+    regime wins precisely because its buffer work is ~all real."""
+    if SMOKE:
+        seq_len, rows, steps = 256, 2, 2
+    print(f"# train: single vs pad vs pack train steps x f32/bf16, "
+          f"tiny-mamba, rows={rows}, seq_len={seq_len}, {steps} stream "
+          f"draws, policy=first_fit_decreasing")
+    from repro.core.packing import pad_to_max
+    from repro.data.dataset import SyntheticCorpus, CorpusConfig
+    from repro.data.packing_loader import PackingLoader, LoaderConfig
+    from repro.models.lm import build_model
+    from repro.optim.adamw import AdamW, constant_schedule
+    from repro.train.trainer import make_train_step
+
+    # lognormal with mass well below seq_len (paper Fig 1: mean ~646 at a
+    # 4096 capacity) — the regime where packing pays and fixed-context
+    # padding hurts
+    corpus = SyntheticCorpus(CorpusConfig(
+        vocab=256, seed=0, len_min=seq_len // 16, len_max=seq_len,
+        mu=float(np.log(seq_len / 4.5)), sigma=0.45))
+    loader = PackingLoader(corpus, LoaderConfig(
+        rows=rows, seq_len=seq_len, mode="pack",
+        policy="first_fit_decreasing"))
+    n_draw = loader._n_draw()
+    streams = [corpus.batch_of_sequences(s, n_draw) for s in range(steps)]
+
+    def as_batch(pb):
+        return {"tokens": pb.tokens, "positions": pb.positions,
+                "segment_ids": pb.segment_ids}
+
+    def batches_for(mode):
+        if mode == "pack":
+            return [loader.batch(s) for s in range(steps)]
+        out = []
+        for seqs in streams:
+            if mode == "single":
+                out += [as_batch(pad_to_max([s], seq_len)) for s in seqs]
+            else:
+                for i in range(0, len(seqs), rows):
+                    group = seqs[i:i + rows]
+                    cap = 1 << (max(len(s) for s in group) - 1).bit_length()
+                    out.append(as_batch(pad_to_max(group, cap)))
+        return out
+
+    shape = f"tiny-mamba_rows{rows}x{seq_len}"
+    real_tps = {}
+    for mode in ("single", "pad", "pack"):
+        bs = batches_for(mode)
+        real = sum(int((b["segment_ids"] > 0).sum()) for b in bs)
+        buf = sum(int(b["tokens"].size) for b in bs)
+        pad_rate = 1.0 - real / buf
+        for dtag, dname in (("f32", "float32"), ("bf16", "bfloat16")):
+            cfg = dataclasses.replace(_tiny_mamba(), dtype=dname)
+            model = build_model(cfg)
+            opt = AdamW(constant_schedule(1e-3))
+            step = jax.jit(make_train_step(model, opt))
+            params = model.init(jax.random.PRNGKey(0))
+            state = {"params": params, "opt": opt.init(params)}
+            # warmup compile for every distinct shape (pad's remainder
+            # group adds at most one)
+            for b in {bb["tokens"].shape: bb for bb in bs}.values():
+                state, _ = step(state, b)
+            jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+            best_dt = np.inf
+            for _ in range(2):              # min-of-rounds vs load spikes
+                t0 = time.perf_counter()
+                for b in bs:
+                    state, m = step(state, b)
+                jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+                best_dt = min(best_dt, time.perf_counter() - t0)
+            sched = f"{mode}_{dtag}"
+            real_tps[sched] = real / best_dt
+            TRAIN_RECORDS.append({
+                "op": "train", "shape": shape, "schedule": sched,
+                "us_per_call": round(best_dt / len(bs) * 1e6, 1),
+                "tok_per_s": round(real / best_dt, 1),
+                "real_tok_per_s": round(real / best_dt, 1),
+                "buffer_tok_per_s": round(buf / best_dt, 1),
+                "padding_rate": round(pad_rate, 4)})
+            _row(f"train/{sched}", best_dt / len(bs) * 1e6,
+                 f"{real / best_dt:.0f} real tok/s "
+                 f"({buf / best_dt:.0f} buffer, "
+                 f"padding {pad_rate * 100:.1f}%, "
+                 f"{len(bs)} step(s))")
+    for dtag in ("f32", "bf16"):
+        s, p, k = (real_tps[f"{m}_{dtag}"] for m in ("single", "pad",
+                                                     "pack"))
+        _row(f"train/speedup_pack_vs_single_{dtag}", k / s * 100,
+             f"{k / s:.2f}x (paper bf16: 3.06x@1.4B 5.05x@110m); "
+             f"pack/pad {k / p:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -727,7 +853,8 @@ ALL = {"fig2": fig2_ssm_operator_profile,
        "disc": discussion_packing_policies,
        "roof": roofline_table,
        "serve": serve_throughput,
-       "serve_open": serve_open_loop}
+       "serve_open": serve_open_loop,
+       "train": train_throughput}
 
 
 def main() -> None:
@@ -744,6 +871,10 @@ def main() -> None:
         with open(SERVE_JSON, "w") as f:
             json.dump(SERVE_RECORDS, f, indent=1)
         print(f"# wrote {len(SERVE_RECORDS)} serve records to {SERVE_JSON}")
+    if TRAIN_RECORDS:
+        with open(TRAIN_JSON, "w") as f:
+            json.dump(TRAIN_RECORDS, f, indent=1)
+        print(f"# wrote {len(TRAIN_RECORDS)} train records to {TRAIN_JSON}")
 
 
 if __name__ == "__main__":

@@ -71,8 +71,39 @@ def main():
     state = {"params": params, "opt": opt.init(params)}
     for i in range(10):
         state, metrics = step(state, batch)
+        if i == 0:
+            f32_first_loss = float(metrics["loss"])
         if i % 3 == 0:
             print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+    # 4b. the production training lane (examples/train_packed.py runs all
+    #     of this end to end; `python -m repro.launch.train` is the real
+    #     entry):
+    #     * PackingLoader streams packed (rows, seq_len) buffers as a pure
+    #       function of `step` (restart replay is exact); its
+    #       policy="first_fit_decreasing" cuts padding_rate vs arrival
+    #       order, and data/prefetch.PrefetchLoader packs the next batches
+    #       on a background thread while the device trains — memoized, so
+    #       every batch stays bit-identical to the synchronous loader.
+    #     * dtype="bfloat16" turns on carry-aware mixed precision: the
+    #       forward/backward runs bf16 while the scan/rglru/mLSTM
+    #       recurrence carries and the loss reduction stay f32 (Mamba keeps
+    #       SSM carries f32 — a blanket cast diverges);
+    #       param_dtype="bfloat16" additionally stores params in bf16 with
+    #       f32 master weights inside AdamW, so tiny updates are never
+    #       lost to bf16's 8-bit mantissa.
+    #     * the Trainer logs real tok/s (segment_ids > 0) next to buffer
+    #       tok/s, so padding overhead is visible per step; the gated
+    #       single-vs-pad-vs-pack × f32/bf16 numbers live in
+    #       BENCH_train.json (`make bench-train`).
+    bf16_cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    bf16_model = build_model(bf16_cfg)
+    bf16_step = jax.jit(make_train_step(bf16_model, opt))
+    p16 = bf16_model.init(jax.random.PRNGKey(0))
+    s16 = {"params": p16, "opt": opt.init(p16)}
+    s16, m16 = bf16_step(s16, batch)
+    print(f"bf16 lane: loss {float(m16['loss']):.4f} "
+          f"(f32 step 0 was {f32_first_loss:.4f}; carries stay f32)")
 
     # 5. serving: the same packing trick on the inference path. The
     #    ServeEngine packs queued prompts into ONE prefill forward, hands

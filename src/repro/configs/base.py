@@ -96,6 +96,12 @@ class ArchConfig:
                                       # resolve from that cache file.
                                       # launch/train.py + launch/serve.py
                                       # warm the cache for their shapes.
+    tune_objective: str = "fwd"       # which sweep's winners scan_tune
+                                      # resolves: "fwd" (forward-only —
+                                      # serving) | "fwdbwd" (forward+backward
+                                      # — what launch/train.py sets so the
+                                      # training step gets schedules tuned
+                                      # for its own gradient shapes)
     scan_dtype: str = "float32"       # recurrence compute dtype (bf16 halves
                                       # the scan's HBM traffic on the XLA path)
     act_pspec: Optional[Tuple] = None  # sharding constraint on the residual

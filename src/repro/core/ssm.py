@@ -67,19 +67,22 @@ _HEADS_DUAL_CHUNK_CAP = 128  # dual form: the T² term is only (dh + N) wide,
 
 
 def _tuned_knobs(op, tune, *, B, L, D=0, N=0, H=0, dh=0, dtype,
-                 positions):
+                 positions, objective="fwd"):
     """Resolve measured xla-path knobs for one call site (or {} on miss).
 
     ``tune``: "auto" (process-default cache), a cache path, or a TuneCache.
-    Resolution is trace-time Python over static shapes — nothing here ever
-    blocks a traced computation; a cache miss falls through to the caller's
-    explicit arguments. Winners recorded for the pallas backend are ignored
-    at this (xla-only) level — kernels/ops.py resolves those.
+    ``objective``: "fwd" | "fwdbwd" — which sweep's winner to serve (a
+    training step resolves against forward+backward timings). Resolution is
+    trace-time Python over static shapes — nothing here ever blocks a
+    traced computation; a cache miss falls through to the caller's explicit
+    arguments. Winners recorded for the pallas backend are ignored at this
+    (xla-only) level — kernels/ops.py resolves those.
     """
     from repro.tune import tuned       # lazy: repro.tune imports this module
     kn = tuned(op, cache=None if tune == "auto" else tune,
                B=B, L=L, D=D, N=N, H=H, dh=dh, dtype=dtype,
-               reset_density=None if positions is not None else 0.0)
+               reset_density=None if positions is not None else 0.0,
+               objective=objective)
     if not kn or kn.get("backend", "xla") != "xla":
         return {}
     return kn
@@ -94,7 +97,7 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                    return_state: bool = False,
                    compute_dtype=None, intra: Optional[str] = None,
                    collect_ends: Optional[jnp.ndarray] = None,
-                   tune=None):
+                   tune=None, tune_objective: str = "fwd"):
     """Mamba-1 surface: u,delta: (B,L,D); A: (D,N); B,C: (B,L,N); D: (D,).
 
     The degenerate head-structured case H = D, dh = 1 — dispatches through
@@ -117,7 +120,7 @@ def selective_scan(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
         h0=None if h0 is None else h0[:, :, None, :],
         method=method, chunk=chunk, return_state=return_state,
         compute_dtype=compute_dtype, intra=intra,
-        collect_ends=collect_ends, tune=tune)
+        collect_ends=collect_ends, tune=tune, tune_objective=tune_objective)
     if not (return_state or collect_ends is not None):
         return out[..., 0]
     out = list(out)
@@ -136,7 +139,7 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
                          return_state: bool = False,
                          compute_dtype=None, intra: Optional[str] = None,
                          collect_ends: Optional[jnp.ndarray] = None,
-                         tune=None):
+                         tune=None, tune_objective: str = "fwd"):
     """Unified head-structured state-space interface (module docstring).
 
     u: (B, L, H, dh); delta: (B, L, H); B, C: (B, L, N) (shared across the
@@ -170,7 +173,7 @@ def selective_scan_heads(u: jnp.ndarray, delta: jnp.ndarray, A: jnp.ndarray,
             tune, B=Bsz, L=L, D=(H if A.ndim == 2 else 0),
             N=B.shape[-1], H=(0 if A.ndim == 2 else H),
             dh=(0 if A.ndim == 2 else P), dtype=u.dtype,
-            positions=positions)
+            positions=positions, objective=tune_objective)
         if kn:
             method = kn.get("method", method)
             chunk = kn.get("chunk", chunk)

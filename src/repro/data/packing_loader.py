@@ -42,6 +42,15 @@ class LoaderConfig:
 
 class PackingLoader:
     def __init__(self, corpus: SyntheticCorpus, cfg: LoaderConfig):
+        if cfg.balance_shards > 1 and cfg.rows % cfg.balance_shards:
+            raise ValueError(
+                f"balance_shards={cfg.balance_shards} must divide "
+                f"rows={cfg.rows}: shard balancing permutes rows into "
+                f"contiguous per-shard slices of rows/balance_shards, which "
+                f"is ill-defined on a remainder. Pick rows as a multiple of "
+                f"balance_shards (e.g. rows="
+                f"{cfg.rows + (-cfg.rows) % cfg.balance_shards}) or set "
+                f"balance_shards=0.")
         self.corpus = corpus
         self.cfg = cfg
         self._mean = corpus.mean_length(probe_steps=20, per_step=64)
@@ -84,7 +93,10 @@ class PackingLoader:
         seg = np.asarray(batch["segment_ids"])
         rows = seg.shape[0]
         if rows % n_shards:
-            return batch
+            # unreachable through PackingLoader (validated in __init__);
+            # loud here too for direct callers
+            raise ValueError(f"_balance: {rows} rows not divisible by "
+                             f"{n_shards} shards")
         load = (seg > 0).sum(axis=1)
         order = np.argsort(-load, kind="stable")
         fill = [[] for _ in range(n_shards)]
@@ -103,4 +115,5 @@ class PackingLoader:
         used = sum(lens[i] for row in plan[:c.rows] for i in row)
         return {"padding_rate": 1.0 - used / (c.rows * c.seq_len),
                 "n_seqs": float(len(lens)),
-                "dropped_rows": float(max(0, len(plan) - c.rows))}
+                "dropped_rows": float(max(0, len(plan) - c.rows)),
+                "balanced": bool(c.balance_shards > 1 and c.mode == "pack")}

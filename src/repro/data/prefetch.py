@@ -1,0 +1,92 @@
+"""Background-prefetching wrapper for step-keyed dataloaders.
+
+Host-side packing (lognormal draws -> plan_packing -> PackedBatch) costs
+real milliseconds per step; PrefetchLoader overlaps it with the device
+step by computing the next ``depth`` batches on a worker thread while the
+current one trains.
+
+Determinism contract: the wrapped loader's ``batch(step)`` must be a pure
+function of ``step`` (PackingLoader's is — every batch derives from
+(seed, step) alone). The wrapper only *memoizes* those calls; it never
+reorders or consumes a stream, so ``batch(step)`` is bit-identical to the
+synchronous loader at every step and restart replay (checkpoint at step k,
+re-create the loader, resume at k) is preserved by construction.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict
+
+
+class PrefetchLoader:
+    """Wrap any loader with ``batch(step)`` (and optionally ``stats``).
+
+    ``batch(step)`` returns the wrapped loader's result for that step,
+    served from the prefetch buffer when the background thread got there
+    first, computed synchronously otherwise — then schedules steps
+    ``step+1 .. step+depth`` so the buffer stays ahead of a sequentially
+    advancing training loop.
+    """
+
+    def __init__(self, loader: Any, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.loader = loader
+        self.depth = depth
+        self._lock = threading.Lock()
+        self._futures: Dict[int, Future] = {}
+        # one worker: the wrapped loader is not assumed thread-safe, and a
+        # single thread already fully overlaps host packing with the device
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="prefetch")
+        self.hits = 0      # batches served from the prefetch buffer
+        self.misses = 0    # batches computed on the caller's thread
+
+    def _schedule(self, step: int) -> None:
+        with self._lock:
+            if step not in self._futures:
+                self._futures[step] = self._pool.submit(
+                    self.loader.batch, step)
+
+    def batch(self, step: int):
+        with self._lock:
+            fut = self._futures.pop(step, None)
+        # keep the buffer ahead before blocking on the current step
+        for k in range(step + 1, step + 1 + self.depth):
+            self._schedule(k)
+        if fut is not None:
+            self.hits += 1
+            out = fut.result()
+        else:
+            self.misses += 1
+            out = self.loader.batch(step)
+        # drop stale entries (restarts / non-monotonic access): anything
+        # at or before `step` can never be requested by a forward-moving
+        # loop again, and re-scheduling is cheap if it is
+        with self._lock:
+            stale = [k for k in self._futures if k <= step]
+            for k in stale:
+                self._futures.pop(k)
+        return out
+
+    def stats(self, step: int) -> Dict[str, Any]:
+        out = dict(self.loader.stats(step)) if hasattr(self.loader, "stats") \
+            else {}
+        out["prefetch_hits"] = self.hits
+        out["prefetch_misses"] = self.misses
+        return out
+
+    def __getattr__(self, name):
+        # transparent passthrough (cfg, corpus, ...) for drop-in use
+        return getattr(self.loader, name)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

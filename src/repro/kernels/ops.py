@@ -72,18 +72,21 @@ def _scan_bwd_rule(block_d, chunk, schedule, sub_t, res, dy):
 _scan_padded.defvjp(_scan_fwd_rule, _scan_bwd_rule)
 
 
-def _resolve_tune(op, tune, *, B, L, D=0, N=0, H=0, dh=0, dtype, positions):
+def _resolve_tune(op, tune, *, B, L, D=0, N=0, H=0, dh=0, dtype, positions,
+                  objective="fwd"):
     """Resolve the measured winner for one call site from the tuning cache.
 
     Unlike the xla-only resolver in core/ssm.py, this level owns the
     backend decision too: a pallas winner flips ``backend`` and carries
     (schedule, pchunk, sub_t); an xla winner carries (method, chunk, intra).
+    ``objective`` picks which sweep's winner ("fwd" | "fwdbwd") is served.
     Returns {} on miss (→ the caller's explicit arguments stand).
     """
     from repro.tune import tuned       # lazy: repro.tune imports this module
     return tuned(op, cache=None if tune == "auto" else tune,
                  B=B, L=L, D=D, N=N, H=H, dh=dh, dtype=dtype,
-                 reset_density=None if positions is not None else 0.0) or {}
+                 reset_density=None if positions is not None else 0.0,
+                 objective=objective) or {}
 
 
 def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
@@ -91,7 +94,7 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
                    chunk: int = scan_k.DEF_CHUNK_T, xla_chunk: int = 256,
                    xla_method: str = "blocked", xla_dtype=None,
                    xla_intra=None, schedule: str = "blocked",
-                   sub_t=None, tune=None):
+                   sub_t=None, tune=None, tune_objective: str = "fwd"):
     """Fused segmented selective scan. See kernels/ref.py for semantics.
 
     u, delta: (B, L, Dm) | A: (Dm, N) | B, C: (B, L, N) | D: (Dm,) |
@@ -109,7 +112,8 @@ def selective_scan(u, delta, A, B, C, D=None, positions=None, *,
     if tune is not None:
         kn = _resolve_tune("selective_scan", tune, B=u.shape[0],
                            L=u.shape[1], D=u.shape[2], N=A.shape[-1],
-                           dtype=u.dtype, positions=positions)
+                           dtype=u.dtype, positions=positions,
+                           objective=tune_objective)
         if kn:
             backend = kn.get("backend", backend)
             if backend == "pallas":
@@ -188,7 +192,7 @@ def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
                          xla_chunk: int = 64, xla_method: str = "blocked",
                          xla_dtype=None, xla_intra=None,
                          schedule: str = "blocked_heads",
-                         sub_t=None, tune=None):
+                         sub_t=None, tune=None, tune_objective: str = "fwd"):
     """Fused head-structured segmented selective scan (scalar per-head
     decay — Mamba-2/SSD). See core/ssm.py::selective_scan_heads for
     semantics; this wrapper adds backend dispatch.
@@ -207,7 +211,8 @@ def selective_scan_heads(u, delta, A, B, C, D=None, positions=None, *,
     if tune is not None:
         kn = _resolve_tune("selective_scan_heads", tune, B=u.shape[0],
                            L=u.shape[1], N=B.shape[-1], H=u.shape[2],
-                           dh=u.shape[3], dtype=u.dtype, positions=positions)
+                           dh=u.shape[3], dtype=u.dtype, positions=positions,
+                           objective=tune_objective)
         if kn:
             backend = kn.get("backend", backend)
             if backend == "pallas":

@@ -41,7 +41,19 @@ def main():
     ap.add_argument("--seq-len", type=int, default=4096)
     ap.add_argument("--mode", default="pack",
                     choices=["pack", "pad", "single"])
-    ap.add_argument("--policy", default="sequential")
+    ap.add_argument("--policy", default="sequential",
+                    choices=["sequential", "sorted_greedy", "first_fit",
+                             "first_fit_decreasing"])
+    ap.add_argument("--dtype", default=None,
+                    help="activation/compute dtype override (e.g. bfloat16 "
+                         "for the mixed-precision lane; scan carries and "
+                         "the loss reduction stay f32 regardless)")
+    ap.add_argument("--param-dtype", default=None,
+                    help="parameter storage dtype (bfloat16 keeps f32 "
+                         "master weights in the optimizer)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host-side batches packed ahead of the device "
+                         "step (0 = synchronous loader)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
@@ -65,18 +77,29 @@ def main():
             f"{args.arch} --shape train_4k --mesh both")
 
     cfg = get_config(args.arch)
+    if args.dtype or args.param_dtype:
+        cfg = dataclasses.replace(
+            cfg, dtype=args.dtype or cfg.dtype,
+            param_dtype=args.param_dtype or cfg.param_dtype)
     if args.scan_tune != "off":
         # measure-or-load the scan schedule winners for THIS run's shape
         # bucket before any step compiles — the model then resolves its
-        # scan knobs from the cache at trace time (configs/base.py)
-        cfg = dataclasses.replace(cfg, scan_tune=args.scan_tune)
+        # scan knobs from the cache at trace time (configs/base.py).
+        # objective="fwdbwd": this is a training launcher, so the sweep
+        # times forward+backward and the step resolves those winners.
+        cfg = dataclasses.replace(cfg, scan_tune=args.scan_tune,
+                                  tune_objective="fwdbwd")
         from repro.tune import warm_for_config
-        warm_for_config(cfg, [(args.rows, args.seq_len)])
+        warm_for_config(cfg, [(args.rows, args.seq_len)],
+                        objective="fwdbwd")
     model = build_model(cfg)
     corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=0))
     loader = PackingLoader(corpus, LoaderConfig(
         rows=args.rows, seq_len=args.seq_len, mode=args.mode,
         policy=args.policy))
+    if args.prefetch > 0:
+        from repro.data.prefetch import PrefetchLoader
+        loader = PrefetchLoader(loader, depth=args.prefetch)
     opt = AdamW(cosine_schedule(args.lr, warmup=max(1, args.steps // 20),
                                 total=args.steps),
                 AdamWConfig(weight_decay=0.1, clip_norm=1.0))

@@ -393,6 +393,13 @@ def _cfg_tune(cfg: ArchConfig):
     return None if cfg.scan_tune == "off" else cfg.scan_tune
 
 
+def _tune_kw(cfg: ArchConfig):
+    """The scan entry points' tuning kwargs: cache identity plus which
+    sweep objective's winners to resolve (fwd vs fwdbwd — training configs
+    set tune_objective="fwdbwd")."""
+    return {"tune": _cfg_tune(cfg), "tune_objective": cfg.tune_objective}
+
+
 def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                 collect_ends=None):
     B, L, d = x.shape
@@ -418,7 +425,7 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
             x_c, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
             method=cfg.scan_impl, chunk=cfg.scan_chunk,
             intra=cfg.scan_intra, collect_ends=collect_ends,
-            tune=_cfg_tune(cfg))
+            **_tune_kw(cfg))
         state = {"conv": _conv_tail_ends(x_in, collect_ends,
                                          _ends_lens(ctx, collect_ends),
                                          cfg.d_conv),
@@ -435,7 +442,7 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         y, h_last = core_ssm.selective_scan(
             x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
             method=cfg.scan_impl, chunk=cfg.scan_chunk, return_state=True,
-            intra=cfg.scan_intra, tune=_cfg_tune(cfg))
+            intra=cfg.scan_intra, **_tune_kw(cfg))
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
         y = y * jax.nn.silu(z)
@@ -448,7 +455,7 @@ def apply_mamba(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                                        else cfg.scan_dtype),
                             xla_intra=cfg.scan_intra,
                             schedule=cfg.pallas_schedule,
-                            tune=_cfg_tune(cfg))
+                            **_tune_kw(cfg))
     y = y * jax.nn.silu(z)
     return x + y @ p["out_proj"].astype(x.dtype)
 
@@ -551,7 +558,7 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         y, h_ends = core_ssm.selective_scan_heads(
             u_h, delta, A, Bm, Cm, p["D"], positions=ctx.positions,
             method="blocked", chunk=cfg.scan_chunk, intra=cfg.scan_intra,
-            collect_ends=collect_ends, tune=_cfg_tune(cfg))
+            collect_ends=collect_ends, **_tune_kw(cfg))
         state = {"conv": _conv_tail_ends(x_in, collect_ends,
                                          _ends_lens(ctx, collect_ends),
                                          cfg.d_conv),
@@ -568,7 +575,7 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
         y, h_last = core_ssm.selective_scan_heads(
             u_h, delta, A, Bm, Cm, p["D"], positions=pos_nz,
             method="blocked", chunk=cfg.scan_chunk, return_state=True,
-            intra=cfg.scan_intra, tune=_cfg_tune(cfg))
+            intra=cfg.scan_intra, **_tune_kw(cfg))
         state = {"conv": _conv_tail(x_in, valid.sum(-1), cfg.d_conv),
                  "ssm": h_last}
         y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
@@ -580,7 +587,7 @@ def apply_mamba2(p, x, ctx: Ctx, cfg: ArchConfig, collect: int = 0,
                                              if cfg.scan_dtype == "float32"
                                              else cfg.scan_dtype),
                                   xla_intra=cfg.scan_intra,
-                                  tune=_cfg_tune(cfg))
+                                  **_tune_kw(cfg))
     y = _mamba2_gate_out(p, y.reshape(B, L, di), z, cfg)
     return x + y @ p["out_proj"].astype(x.dtype)
 
@@ -971,7 +978,7 @@ def chunk_mamba(p, x, cache, ctx: Ctx, cfg: ArchConfig):
     y, h_last = core_ssm.selective_scan(
         x_c, delta, A, Bm, Cm, p["D"], positions=pos_nz,
         method=cfg.scan_impl, chunk=cfg.scan_chunk, return_state=True,
-        h0=cache["ssm"], intra=cfg.scan_intra, tune=_cfg_tune(cfg))
+        h0=cache["ssm"], intra=cfg.scan_intra, **_tune_kw(cfg))
     ext = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
     state = {"conv": _conv_tail(ext, (W - 1) + valid.sum(-1), W),
              "ssm": h_last}
@@ -998,7 +1005,7 @@ def chunk_mamba2(p, x, cache, ctx: Ctx, cfg: ArchConfig):
         x_c.reshape(B, T, H, P), delta, A, Bm, Cm, p["D"],
         positions=pos_nz, method="blocked", chunk=cfg.scan_chunk,
         return_state=True, h0=cache["ssm"], intra=cfg.scan_intra,
-        tune=_cfg_tune(cfg))
+        **_tune_kw(cfg))
     ext = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
     state = {"conv": _conv_tail(ext, (W - 1) + valid.sum(-1), W),
              "ssm": h_last}

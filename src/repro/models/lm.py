@@ -134,6 +134,13 @@ class LM:
         params["final_norm"] = jnp.ones((cfg.d_model,))
         if not cfg.tie_embeddings:
             params["head"] = B._dense(k_head, cfg.d_model, cfg.vocab)
+        pdt = jnp.dtype(cfg.param_dtype)
+        if pdt != jnp.float32:
+            # low-precision storage: cast float leaves only (optim keeps f32
+            # masters; blocks re-cast at use via the .astype(h.dtype) idiom)
+            params = jax.tree.map(
+                lambda x: x.astype(pdt)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
         return params
 
     # ------------------------------------------------------------- embedding

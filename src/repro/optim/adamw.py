@@ -5,6 +5,13 @@ Built from scratch (no optax in the environment). State is a pytree pair
 scalar step. Weight decay applies only to rank≥2 weights (norm scales,
 biases, per-channel gains like Mamba's D are excluded), the standard LLM
 recipe.
+
+Mixed precision: when any param leaf is low-precision (bf16/f16), ``init``
+also stores an f32 **master** copy. ``update`` then accumulates into the
+master and re-rounds to the param dtype each step, so tiny updates are
+never lost to bf16's 8-bit mantissa. For all-f32 params ``master`` is
+None and the state tree is unchanged from earlier revisions (checkpoints
+stay compatible).
 """
 from __future__ import annotations
 
@@ -19,6 +26,13 @@ class AdamWState(NamedTuple):
     step: jnp.ndarray     # () int32
     m: Any                # pytree like params (f32)
     v: Any                # pytree like params (f32)
+    master: Any = None    # f32 param copy when params are low-precision
+
+
+def _needs_master(params) -> bool:
+    return any(jnp.issubdtype(x.dtype, jnp.floating)
+               and jnp.dtype(x.dtype).itemsize < 4
+               for x in jax.tree.leaves(params))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +80,10 @@ class AdamW:
     def init(self, params) -> AdamWState:
         zeros = lambda p: jax.tree.map(
             lambda x: jnp.zeros(x.shape, jnp.float32), p)
+        master = (jax.tree.map(lambda x: x.astype(jnp.float32), params)
+                  if _needs_master(params) else None)
         return AdamWState(step=jnp.zeros((), jnp.int32),
-                          m=zeros(params), v=zeros(params))
+                          m=zeros(params), v=zeros(params), master=master)
 
     def update(self, grads, state: AdamWState, params
                ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
@@ -83,22 +99,27 @@ class AdamW:
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
 
-        def upd(g, m, v, p):
+        # mixed precision: step from the f32 master (when kept), so bf16
+        # rounding never swallows a small update; weight decay also reads
+        # the master, not the rounded copy
+        masters = state.master if state.master is not None else params
+
+        def upd(g, m, v, p, w):
             m = b1 * m + (1 - b1) * g
             v = b2 * v + (1 - b2) * jnp.square(g)
             mh = m / bc1
             vh = v / bc2
             delta = mh / (jnp.sqrt(vh) + c.eps)
+            w32 = w.astype(jnp.float32)
             if c.weight_decay and p.ndim >= 2:
-                delta = delta + c.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+                delta = delta + c.weight_decay * w32
+            new_w = w32 - lr * delta
+            return new_w.astype(p.dtype), m, v, new_w
 
-        out = jax.tree.map(upd, grads, state.m, state.v, params)
-        new_params = jax.tree.map(lambda t: t[0], out,
-                                  is_leaf=lambda t: isinstance(t, tuple))
-        new_m = jax.tree.map(lambda t: t[1], out,
-                             is_leaf=lambda t: isinstance(t, tuple))
-        new_v = jax.tree.map(lambda t: t[2], out,
-                             is_leaf=lambda t: isinstance(t, tuple))
+        out = jax.tree.map(upd, grads, state.m, state.v, params, masters)
+        pick = lambda i: jax.tree.map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_params, new_m, new_v = pick(0), pick(1), pick(2)
+        new_master = pick(3) if state.master is not None else None
         stats = {"grad_norm": gnorm, "lr": lr}
-        return new_params, AdamWState(step, new_m, new_v), stats
+        return new_params, AdamWState(step, new_m, new_v, new_master), stats

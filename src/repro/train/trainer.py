@@ -126,23 +126,36 @@ class Trainer:
             step0 = start_step
         history = []
         t_last = time.perf_counter()
-        tokens_since = 0
+        real_since = 0       # non-padding tokens (segment_ids > 0)
+        buffer_since = 0     # full buffer positions fed to the device
         for step in range(step0, self.cfg.steps):
             batch = self.loader.batch(step)
+            # meter from the batch itself, not metrics["tokens"]: a loss fn
+            # that omits the metric must not silently report 0 tok/s
+            seg = batch.get("segment_ids")
+            real = int((seg > 0).sum()) if seg is not None \
+                else int(batch["tokens"].size)
             state, metrics = self.step_fn(state, batch)
-            tokens_since += int(metrics.get(
-                "tokens", jnp.asarray(0.0)))
+            real_since += real
+            buffer_since += int(batch["tokens"].size)
             if verbose and (step + 1) % self.cfg.log_every == 0:
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t_last
-                tput = tokens_since / max(dt, 1e-9)
+                real_tput = real_since / max(dt, 1e-9)
+                buf_tput = buffer_since / max(dt, 1e-9)
                 print(f"step {step + 1:5d} loss {float(metrics['loss']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"tok/s {tput:,.0f}")
+                      f"tok/s {real_tput:,.0f} "
+                      f"(buffer {buf_tput:,.0f}, "
+                      f"{real_since / max(buffer_since, 1):.0%} real)")
                 t_last = time.perf_counter()
-                tokens_since = 0
-            history.append({k: float(v) for k, v in metrics.items()
-                            if jnp.ndim(v) == 0})
+                real_since = 0
+                buffer_since = 0
+            row = {k: float(v) for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}
+            row["real_tokens"] = float(real)
+            row["buffer_tokens"] = float(batch["tokens"].size)
+            history.append(row)
             if self.ckpt and self.cfg.ckpt_every and \
                     (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save(step + 1, state, meta={"step": step + 1})

@@ -24,25 +24,29 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-from repro.tune.space import (OPS, ShapeKey, shape_key, space_for,  # noqa: F401
-                              candidate_name, l_bucket, reset_bucket)
+from repro.tune.space import (OPS, OBJECTIVES, ShapeKey, shape_key,  # noqa: F401
+                              space_for, candidate_name, l_bucket,
+                              reset_bucket)
 from repro.tune.cache import (TuneCache, fingerprint, get_cache,  # noqa: F401
                               set_cache, reset_caches, default_path)
 
 
 def tuned(op: str, *, B: int, L: int, D: int = 0, N: int = 0, H: int = 0,
           dh: int = 0, dtype="float32", reset_density: Optional[float] = None,
-          cache=None, default: Optional[Dict] = None) -> Dict:
+          objective: str = "fwd", cache=None,
+          default: Optional[Dict] = None) -> Dict:
     """Measured knobs for one operator invocation, or the defaults on miss.
 
     ``cache``: a TuneCache, a path, or None (process-default cache —
     $REPRO_TUNE_CACHE or ./TUNE_CACHE.json). Lookup is exact on the
-    bucketed key, then nearest-key within the op, then ``default`` (or {});
-    a stale cache (fingerprint mismatch) always misses.
+    bucketed key, then nearest-key within the op *and objective*
+    ("fwd"-swept winners are never served to "fwdbwd" queries), then
+    ``default`` (or {}); a stale cache (fingerprint mismatch) always
+    misses.
     """
     c = cache if isinstance(cache, TuneCache) else get_cache(cache)
     key = shape_key(op, dtype=dtype, B=B, L=L, D=D, N=N, H=H, dh=dh,
-                    reset_density=reset_density)
+                    reset_density=reset_density, objective=objective)
     knobs, _how = c.lookup(key)
     if knobs is None:
         return dict(default) if default else {}
@@ -90,14 +94,18 @@ def tuned_config_overrides(cfg, B: int, L: int, cache=None) -> Dict:
 
 
 def warm_for_config(cfg, shapes, cache: Optional[TuneCache] = None,
-                    rounds: int = 3, save: bool = True, verbose: bool = True):
+                    rounds: int = 3, save: bool = True, verbose: bool = True,
+                    objective: str = "fwd"):
     """Warm the tuning cache for a config's scan shapes at launcher startup.
 
     ``shapes``: iterable of (rows, seq_len) the launcher will actually run
     (training batch shape, serve prefill buckets, …). Shapes whose bucketed
     key is already cached are skipped; new winners are measured with the
-    runner and saved back to the cache file. Returns the cache (None when
-    the config has no scan hot path or tuning is off)."""
+    runner and saved back to the cache file. ``objective="fwdbwd"`` makes
+    the sweep time forward+backward — what launch/train.py warms so the
+    training step gets schedules tuned for its own gradient shapes instead
+    of inference's. Returns the cache (None when the config has no scan
+    hot path or tuning is off)."""
     if getattr(cfg, "scan_tune", "off") == "off":
         return None
     from repro.tune import runner
@@ -110,7 +118,8 @@ def warm_for_config(cfg, shapes, cache: Optional[TuneCache] = None,
             return None
         op = args.pop("op")
         touched |= runner.ensure(op, cache=c, rounds=rounds,
-                                 verbose=verbose, **args)
+                                 verbose=verbose, objective=objective,
+                                 **args)
     if touched and save:
         c.save()
     return c

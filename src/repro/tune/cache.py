@@ -83,7 +83,10 @@ class TuneCache:
         best, best_d = None, math.inf
         for ks, rec in self.entries.items():
             k = ShapeKey.decode(ks)
-            if k.op != key.op:
+            # objective isolation: a fwd winner must never be served to a
+            # fwdbwd query (recompute structure flips winners) — same hard
+            # boundary as the operator itself
+            if k.op != key.op or k.objective != key.objective:
                 continue
             d = _distance(key, k)
             if d < best_d:

@@ -3,9 +3,12 @@ at one shape key, cache the winner.
 
 The timing discipline is the benchmark harness's own (benchmarks/timing.py:
 interleaved min-of-rounds) so tuner numbers and fig2 numbers are directly
-comparable. Sweeps measure the *forward* operator — the training backward
-shares the schedule decision through the same knobs (the chunk bodies are
-checkpointed, so forward structure dictates backward structure).
+comparable. What a sweep measures is the key's ``objective``: "fwd" times
+the forward operator (the serving regime); "fwdbwd" times forward + full
+VJP of a scalar loss (the training regime — the backward recomputes the
+chunk bodies, so its cost structure, and therefore the winning schedule,
+can differ from the forward's). Winners are cached under objective-tagged
+keys and never served across objectives.
 
 Pallas candidates are included only where their timings mean something:
 real TPU kernels, not interpret mode (`INTERPRET` in
@@ -24,6 +27,7 @@ L ∈ {256…4096}, plus the wide-head dh ≫ T cell where the dual form wins);
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import sys
 from typing import Dict, List, Optional, Tuple
@@ -95,8 +99,14 @@ def synth_args(key: ShapeKey, seed: int = 0) -> Tuple:
 
 
 def make_thunk(key: ShapeKey, knobs: Dict, args: Tuple):
-    """A zero-arg jitted callable evaluating one candidate at this shape."""
+    """A zero-arg jitted callable evaluating one candidate at this shape.
+
+    ``key.objective == "fwdbwd"`` wraps the candidate in a value_and_grad
+    of a scalar loss over every differentiable operand, so the sweep times
+    the full training-step cost of the schedule (forward + VJP recompute),
+    not just the forward."""
     import jax
+    import jax.numpy as jnp
     from repro.kernels import ops as kops
     u, delta, A, Bm, Cm, Dk, pos = args
     heads = key.op == "selective_scan_heads"
@@ -105,12 +115,12 @@ def make_thunk(key: ShapeKey, knobs: Dict, args: Tuple):
                   sub_t=knobs.get("sub_t"))
         if heads:
             kw["schedule"] = knobs.get("schedule", "blocked_heads")
-            fn = jax.jit(lambda u, d, Bm, Cm, p: kops.selective_scan_heads(
-                u, d, A, Bm, Cm, Dk, p, **kw))
+            raw = lambda u, d, Bm, Cm, p: kops.selective_scan_heads(
+                u, d, A, Bm, Cm, Dk, p, **kw)
         else:
             kw["schedule"] = knobs.get("schedule", "blocked")
-            fn = jax.jit(lambda u, d, Bm, Cm, p: kops.selective_scan(
-                u, d, A, Bm, Cm, Dk, p, **kw))
+            raw = lambda u, d, Bm, Cm, p: kops.selective_scan(
+                u, d, A, Bm, Cm, Dk, p, **kw)
     else:
         from repro.core import ssm as core_ssm
         kw = dict(method=knobs.get("method", "blocked"))
@@ -119,8 +129,14 @@ def make_thunk(key: ShapeKey, knobs: Dict, args: Tuple):
         if "intra" in knobs:
             kw["intra"] = knobs["intra"]
         f = core_ssm.selective_scan_heads if heads else core_ssm.selective_scan
-        fn = jax.jit(lambda u, d, Bm, Cm, p, f=f: f(
-            u, d, A, Bm, Cm, Dk, p, **kw))
+        raw = lambda u, d, Bm, Cm, p, f=f: f(u, d, A, Bm, Cm, Dk, p, **kw)
+    if key.objective == "fwdbwd":
+        def scalar_loss(u, d, Bm, Cm, p):
+            y = raw(u, d, Bm, Cm, p)
+            return (y.astype(jnp.float32) ** 2).mean()
+        fn = jax.jit(jax.value_and_grad(scalar_loss, argnums=(0, 1, 2, 3)))
+    else:
+        fn = jax.jit(raw)
     return lambda: fn(u, delta, Bm, Cm, pos)
 
 
@@ -170,14 +186,14 @@ def tune_key(key: ShapeKey, cache: Optional[TuneCache] = None,
 
 def ensure(op: str, *, B: int, L: int, D: int = 0, N: int = 0, H: int = 0,
            dh: int = 0, dtype="float32", reset_density=None,
-           cache: Optional[TuneCache] = None, rounds: int = 3,
-           include_pallas: Optional[bool] = None, force: bool = False,
-           verbose: bool = False) -> bool:
+           objective: str = "fwd", cache: Optional[TuneCache] = None,
+           rounds: int = 3, include_pallas: Optional[bool] = None,
+           force: bool = False, verbose: bool = False) -> bool:
     """Tune ``op`` at this shape unless its exact bucketed key is already
     cached. Returns True iff a new measurement was taken."""
     c = cache if cache is not None else get_cache()
     key = shape_key(op, dtype=dtype, B=B, L=L, D=D, N=N, H=H, dh=dh,
-                    reset_density=reset_density)
+                    reset_density=reset_density, objective=objective)
     if not force and c.get(key) is not None:
         return False
     tune_key(key, cache=c, rounds=rounds, include_pallas=include_pallas,
@@ -224,16 +240,24 @@ def main(argv=None):
     ap.add_argument("--include-pallas", action="store_true",
                     help="force pallas candidates into the space (default: "
                          "only on real TPU)")
+    ap.add_argument("--objective", default="fwd",
+                    choices=["fwd", "fwdbwd", "both"],
+                    help="time forward only (serving), forward+backward "
+                         "(training), or sweep both")
     args = ap.parse_args(argv)
     cache = get_cache(args.out)
+    objectives = ("fwd", "fwdbwd") if args.objective == "both" \
+        else (args.objective,)
     n_new = 0
-    for key in sweep_grid(args.grid):
-        if not args.force and cache.get(key) is not None:
-            continue
-        tune_key(key, cache=cache, rounds=args.rounds,
-                 include_pallas=True if args.include_pallas else None,
-                 verbose=True)
-        n_new += 1
+    for base in sweep_grid(args.grid):
+        for obj in objectives:
+            key = dataclasses.replace(base, objective=obj)
+            if not args.force and cache.get(key) is not None:
+                continue
+            tune_key(key, cache=cache, rounds=args.rounds,
+                     include_pallas=True if args.include_pallas else None,
+                     verbose=True)
+            n_new += 1
     path = cache.save(args.out)
     print(f"# tuned {n_new} new key(s); {len(cache.entries)} total -> {path}")
 

@@ -31,6 +31,12 @@ from typing import Dict, List, Optional
 
 OPS = ("selective_scan", "selective_scan_heads")
 
+# what a sweep measures: "fwd" times the forward evaluation only (the
+# inference/serving regime); "fwdbwd" times forward + full VJP (the
+# training-step regime, where checkpoint/recompute structure can flip the
+# winner). Cached winners are objective-tagged and never cross-served.
+OBJECTIVES = ("fwd", "fwdbwd")
+
 # reset-density bands: resets per token. "none" is the unpacked case; packed
 # training with paper-like segment lengths (~100-600 tokens) lands in "mid".
 RESET_BANDS = (("none", 0.0), ("sparse", 1 / 256), ("mid", 1 / 32),
@@ -69,27 +75,39 @@ class ShapeKey:
     H: int           # heads (0 for the per-channel op)
     dh: int          # head dim (0 for the per-channel op)
     resets: str      # reset-density band
+    objective: str = "fwd"   # "fwd" | "fwdbwd" — what the sweep timed
 
     def encode(self) -> str:
-        return (f"{self.op}|{self.dtype}|B{self.B}|L{self.Lb}|D{self.D}|"
+        base = (f"{self.op}|{self.dtype}|B{self.B}|L{self.Lb}|D{self.D}|"
                 f"N{self.N}|H{self.H}|dh{self.dh}|{self.resets}")
+        # 10th field only for non-default objectives: committed fwd caches
+        # keep their pre-objective key strings byte-identical
+        return base if self.objective == "fwd" else \
+            base + f"|{self.objective}"
 
     @classmethod
     def decode(cls, s: str) -> "ShapeKey":
-        op, dtype, B, Lb, D, N, H, dh, resets = s.split("|")
+        parts = s.split("|")
+        if len(parts) == 9:
+            parts = parts + ["fwd"]
+        op, dtype, B, Lb, D, N, H, dh, resets, objective = parts
         return cls(op, dtype, int(B[1:]), int(Lb[1:]), int(D[1:]),
-                   int(N[1:]), int(H[1:]), int(dh[2:]), resets)
+                   int(N[1:]), int(H[1:]), int(dh[2:]), resets, objective)
 
 
 def shape_key(op: str, *, dtype="float32", B: int, L: int, D: int = 0,
               N: int = 0, H: int = 0, dh: int = 0,
-              reset_density: Optional[float] = None) -> ShapeKey:
+              reset_density: Optional[float] = None,
+              objective: str = "fwd") -> ShapeKey:
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; have {OPS}")
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; have {OBJECTIVES}")
     import numpy as np
     dt = np.dtype(dtype).name if dtype is not None else "float32"
     return ShapeKey(op, dt, int(B), l_bucket(L), int(D), int(N), int(H),
-                    int(dh), reset_bucket(reset_density))
+                    int(dh), reset_bucket(reset_density), objective)
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,11 @@
-"""Data pipeline: determinism, paper length statistics, loader modes."""
+"""Data pipeline: determinism, paper length statistics, loader modes,
+background prefetch."""
 import numpy as np
 import pytest
 
 from repro.data.dataset import SyntheticCorpus, CorpusConfig
 from repro.data.packing_loader import PackingLoader, LoaderConfig
+from repro.data.prefetch import PrefetchLoader
 
 
 def test_deterministic_replay():
@@ -93,6 +95,77 @@ def test_shard_load_balancing():
     assert balanced_spread <= unbalanced_spread
     # balanced spread is within one buffer's capacity of perfectly even
     assert balanced_spread <= 4096
+
+
+def test_balance_shards_indivisible_raises():
+    """rows % balance_shards != 0 must fail loudly at construction (the
+    old code silently returned the unbalanced batch)."""
+    c = SyntheticCorpus()
+    with pytest.raises(ValueError, match="balance_shards"):
+        PackingLoader(c, LoaderConfig(rows=6, seq_len=2048, mode="pack",
+                                      balance_shards=4))
+    # _balance itself also raises for direct callers
+    with pytest.raises(ValueError, match="not divisible"):
+        PackingLoader._balance(
+            {"segment_ids": np.ones((6, 8), np.int32)}, 4)
+
+
+def test_stats_reports_balanced_flag():
+    c = SyntheticCorpus()
+    ld = PackingLoader(c, LoaderConfig(rows=8, seq_len=4096, mode="pack",
+                                       balance_shards=2))
+    assert ld.stats(0)["balanced"] is True
+    ld0 = PackingLoader(c, LoaderConfig(rows=8, seq_len=4096, mode="pack"))
+    assert ld0.stats(0)["balanced"] is False
+
+
+def _small_loader(**kw):
+    c = SyntheticCorpus(CorpusConfig(seed=1, len_min=5, len_max=40,
+                                     mu=3.0, sigma=0.5))
+    return PackingLoader(c, LoaderConfig(rows=4, seq_len=64, mode="pack",
+                                         **kw))
+
+
+def test_prefetch_bit_identity():
+    """PrefetchLoader is a pure memoizer: every step's batch is
+    bit-identical to the synchronous loader, in any access order."""
+    sync = _small_loader()
+    with PrefetchLoader(_small_loader(), depth=3) as pf:
+        for step in (0, 1, 2, 3, 7, 4, 0):      # incl. replay + a jump back
+            a, b = sync.batch(step), pf.batch(step)
+            for k in ("tokens", "positions", "segment_ids"):
+                np.testing.assert_array_equal(np.asarray(a[k]),
+                                              np.asarray(b[k]))
+
+
+def test_prefetch_hits_on_sequential_access():
+    with PrefetchLoader(_small_loader(), depth=2) as pf:
+        for step in range(6):
+            pf.batch(step)
+        st = pf.stats(5)
+        # step 0 is a miss; the buffer then stays ahead
+        assert st["prefetch_misses"] >= 1
+        assert st["prefetch_hits"] >= 3
+        assert "padding_rate" in st              # wrapped stats passthrough
+    assert pf.cfg.rows == 4                      # attribute passthrough
+
+
+def test_prefetch_rejects_bad_depth():
+    with pytest.raises(ValueError):
+        PrefetchLoader(_small_loader(), depth=0)
+
+
+def test_first_fit_decreasing_loader_padding_not_worse():
+    """FFD is the offline padding reducer: never more padding than the
+    arrival-order sequential policy on the same draw."""
+    c = SyntheticCorpus()
+    seqr = PackingLoader(c, LoaderConfig(rows=8, seq_len=4096, mode="pack",
+                                         policy="sequential"))
+    ffd = PackingLoader(c, LoaderConfig(rows=8, seq_len=4096, mode="pack",
+                                        policy="first_fit_decreasing"))
+    for step in range(3):
+        assert ffd.stats(step)["padding_rate"] <= \
+            seqr.stats(step)["padding_rate"] + 1e-9
 
 
 def test_balance_preserves_rows():

@@ -66,6 +66,44 @@ def test_cosine_schedule():
     assert float(lr(60)) < 1.0
 
 
+def test_no_master_for_f32_params():
+    """All-f32 params keep master=None so the state tree (and checkpoints)
+    match pre-mixed-precision revisions exactly."""
+    opt = AdamW(constant_schedule(1e-2))
+    params = {"w": jnp.ones((4, 4), jnp.float32)}
+    state = opt.init(params)
+    assert state.master is None
+    new_params, state2, _ = opt.update(
+        {"w": jnp.full((4, 4), 1e-3, jnp.float32)}, state, params)
+    assert state2.master is None
+    assert new_params["w"].dtype == jnp.float32
+
+
+def test_bf16_params_get_f32_master_and_track_f32_run():
+    """bf16 storage: the optimizer steps from an f32 master, so the master
+    trajectory equals an all-f32 run fed the same grads — and tiny updates
+    are not swallowed by bf16 rounding."""
+    opt = AdamW(constant_schedule(1e-3),
+                AdamWConfig(weight_decay=0.0, clip_norm=None))
+    w0 = jnp.full((8, 8), 1.0, jnp.float32)
+    p16 = {"w": w0.astype(jnp.bfloat16)}
+    p32 = {"w": w0}
+    s16, s32 = opt.init(p16), opt.init(p32)
+    assert s16.master is not None
+    assert s16.master["w"].dtype == jnp.float32
+    g = {"w": jnp.full((8, 8), 1e-4, jnp.float32)}
+    for _ in range(10):
+        p16, s16, _ = opt.update(g, s16, p16)
+        p32, s32, _ = opt.update(g, s32, p32)
+    # identical grads -> the master IS the f32 trajectory
+    np.testing.assert_allclose(s16.master["w"], p32["w"], rtol=0, atol=1e-7)
+    # the bf16 copy is the rounded master, and it did move
+    np.testing.assert_allclose(np.asarray(p16["w"], np.float32),
+                               np.asarray(s16.master["w"]).astype(
+                                   np.float32), rtol=8e-3)
+    assert not np.array_equal(np.asarray(p16["w"], np.float32), w0)
+
+
 def test_loss_decreases_on_quadratic():
     """End-to-end sanity: AdamW minimizes a quadratic."""
     target = jnp.asarray([1.0, -2.0, 3.0])

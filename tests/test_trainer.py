@@ -93,6 +93,52 @@ def test_bf16_grad_accum_runs():
     assert np.isfinite(float(metrics["loss"]))
 
 
+def test_history_reports_real_and_buffer_tokens():
+    """Metering derives real tokens from segment_ids > 0 in the batch —
+    never from an optional loss metric — and logs the buffer count too."""
+    model = build_model(_tiny())
+    opt = AdamW(constant_schedule(1e-3))
+    loader = _loader(rows=4, seq=64)
+    tr = Trainer(model, opt, loader, TrainerConfig(steps=3, log_every=100))
+    _, hist = tr.train(jax.random.PRNGKey(0), verbose=False)
+    assert len(hist) == 3
+    for step, row in enumerate(hist):
+        seg = np.asarray(loader.batch(step)["segment_ids"])
+        assert row["real_tokens"] == float((seg > 0).sum())
+        assert row["buffer_tokens"] == float(seg.size)
+        assert 0 < row["real_tokens"] <= row["buffer_tokens"]
+
+
+def test_resume_is_deterministic_under_prefetch(tmp_path):
+    """Mid-stream checkpoint -> restore replays the exact stream even with
+    the background prefetcher in the loop (batch(step) is memoized, never
+    consumed)."""
+    from repro.data.prefetch import PrefetchLoader
+    model = build_model(_tiny())
+
+    def mk(dirname, steps, every, prefetch):
+        opt = AdamW(constant_schedule(1e-3))
+        loader = _loader()
+        if prefetch:
+            loader = PrefetchLoader(loader, depth=2)
+        return Trainer(model, opt, loader,
+                       TrainerConfig(steps=steps, log_every=100,
+                                     ckpt_every=every, ckpt_dir=dirname,
+                                     keep_ckpts=5))
+
+    t_a = mk(str(tmp_path / "a"), 10, 100, prefetch=False)
+    state_a, _ = t_a.train(jax.random.PRNGKey(7), verbose=False)
+
+    t_b1 = mk(str(tmp_path / "b"), 5, 5, prefetch=True)
+    t_b1.train(jax.random.PRNGKey(7), verbose=False)
+    t_b2 = mk(str(tmp_path / "b"), 10, 100, prefetch=True)
+    state_b, hist_b = t_b2.train(jax.random.PRNGKey(999), verbose=False)
+    assert len(hist_b) == 5                     # resumed at step 5
+    for a, b in zip(jax.tree.leaves(state_a["params"]),
+                    jax.tree.leaves(state_b["params"])):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
 def test_single_vs_padding_vs_pack_same_model():
     """All three paper regimes drive the same model/loss code."""
     model = build_model(_tiny())

@@ -57,6 +57,70 @@ def test_shape_key_encode_roundtrip():
     assert ShapeKey.decode(k.encode()) == k
 
 
+def test_shape_key_objective_roundtrip_and_legacy_decode():
+    """fwdbwd keys append a 10th field; fwd keys encode byte-identically
+    to the 9-field pre-objective format (committed caches stay valid) and
+    9-field strings decode as objective='fwd'."""
+    kf = shape_key("selective_scan", B=1, L=256, D=64, N=8)
+    kb = shape_key("selective_scan", B=1, L=256, D=64, N=8,
+                   objective="fwdbwd")
+    assert kf.objective == "fwd"
+    assert kf.encode().count("|") == 8            # legacy 9-field format
+    assert kb.encode() == kf.encode() + "|fwdbwd"
+    assert ShapeKey.decode(kb.encode()) == kb
+    assert ShapeKey.decode(kf.encode()) == kf     # 9 fields -> fwd
+    with pytest.raises(ValueError):
+        shape_key("selective_scan", B=1, L=256, D=64, N=8,
+                  objective="backward-only")
+
+
+def test_nearest_lookup_never_crosses_objectives():
+    """A forward-tuned winner must not be served to a training (fwdbwd)
+    query, and vice versa — the schedules optimize different graphs."""
+    c = TuneCache(fp=FP_A)
+    kf = shape_key("selective_scan", B=1, L=512, D=256, N=16)
+    c.put(kf, {"backend": "xla", "method": "associative"}, 10.0)
+    near_fwd = shape_key("selective_scan", B=1, L=600, D=256, N=16)
+    assert c.lookup(near_fwd)[1] == "nearest"
+    near_bwd = shape_key("selective_scan", B=1, L=600, D=256, N=16,
+                         objective="fwdbwd")
+    assert c.lookup(near_bwd) == (None, None)
+    # and a fwdbwd entry resolves for fwdbwd queries only
+    kb = shape_key("selective_scan", B=1, L=512, D=256, N=16,
+                   objective="fwdbwd")
+    c.put(kb, {"backend": "xla", "method": "blocked", "chunk": 64}, 20.0)
+    got, how = c.lookup(near_bwd)
+    assert how == "nearest" and got["method"] == "blocked"
+    assert c.lookup(near_fwd)[0]["method"] == "associative"
+
+
+def test_runner_fwdbwd_objective_sweeps_and_caches(monkeypatch):
+    """The fwdbwd thunk (jit value_and_grad over the candidate scan) runs,
+    and ensure() keys the measurement under the objective-tagged entry."""
+    monkeypatch.setattr(
+        trunner, "space_for",
+        lambda key, include_pallas=False: [
+            {"backend": "xla", "method": "blocked", "chunk": 16,
+             "intra": "quad"},
+            {"backend": "xla", "method": "sequential"},
+        ])
+    c = TuneCache()
+    assert trunner.ensure("selective_scan_heads", B=1, L=64, H=2, dh=8,
+                          N=4, cache=c, rounds=1, objective="fwdbwd")
+    kb = shape_key("selective_scan_heads", B=1, L=64, H=2, dh=8, N=4,
+                   objective="fwdbwd")
+    assert kb.encode() in c.entries
+    # the forward entry is untouched -> a fwd ensure() measures separately
+    kf = shape_key("selective_scan_heads", B=1, L=64, H=2, dh=8, N=4)
+    assert kf.encode() not in c.entries
+    assert trunner.ensure("selective_scan_heads", B=1, L=64, H=2, dh=8,
+                          N=4, cache=c, rounds=1)
+    assert kf.encode() in c.entries
+    # cached -> no re-measure
+    assert trunner.ensure("selective_scan_heads", B=1, L=64, H=2, dh=8,
+                          N=4, cache=c, objective="fwdbwd") is False
+
+
 def test_space_bounded_and_has_dual():
     k = shape_key("selective_scan_heads", B=1, L=1024, H=2, dh=128, N=16)
     cands = space_for(k)
