@@ -24,6 +24,11 @@ SMOKE_SERVE ?= experiments/smoke_serve.json
 SMOKE_TRAIN ?= experiments/smoke_train.json
 SMOKE_TUNE ?= experiments/smoke_tune_cache.json
 
+# obs-smoke scratch traces (gitignored experiments/): Chrome trace-event
+# JSON from tiny traced serve + train launcher runs
+OBS_SERVE_TRACE ?= experiments/obs_serve_trace.json
+OBS_TRAIN_TRACE ?= experiments/obs_train_trace.json
+
 # seed for the chaos lane's randomized-but-seeded FaultPlan (verify-faults);
 # bump it (or set it per-run) to explore a different fault schedule — the
 # same value always replays the same faults
@@ -31,7 +36,7 @@ FAULT_CHAOS_SEED ?= 0
 
 .PHONY: verify verify-fast verify-faults ci bench-scan bench-serve \
 	bench-serve-open bench-train bench-tune tune-check bench-compare \
-	bench-smoke bench-accept quickstart
+	bench-smoke bench-accept obs-smoke quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -49,9 +54,10 @@ verify-faults:
 		$(PY) -m pytest -q -m "not slow" tests/test_faults.py
 
 # one-shot CI bundle (what .github/workflows/ci.yml runs): fast tier-1 lane,
-# chaos lane, tune-cache audit, and a bounded bench smoke whose JSON
-# structure — never its timings — is checked
-ci: verify-fast verify-faults tune-check bench-smoke
+# chaos lane, tune-cache audit, a bounded bench smoke whose JSON structure
+# — never its timings — is checked, and the observability smoke (traced
+# tiny serve+train runs, trace structure validated)
+ci: verify-fast verify-faults tune-check bench-smoke obs-smoke
 
 # regenerate the scan-schedule matrix into $(NEW) (fig2 also warms $(TUNE)
 # for any of its shape keys the bounded sweep hasn't covered yet)
@@ -112,6 +118,25 @@ bench-smoke:
 		$(PY) -m benchmarks.run fig2 serve serve_open train
 	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE) \
 		$(SMOKE_TRAIN)
+
+# observability smoke: tiny traced serve + train runs through the REAL
+# launchers (--obs-trace), then structural validation of the emitted Chrome
+# trace-event JSON — parseable, B/E span nesting balanced per track,
+# required metrics present — via the repro.obs.check CLI. The train run
+# needs --seq-len 2048: the synthetic corpus draws sequences up to ~2k and
+# the packing loader rejects capacities below the longest draw.
+obs-smoke:
+	mkdir -p experiments
+	$(PY) -m repro.launch.serve --tiny --slots 4 --requests 8 \
+		--new-tokens 6 --max-len 64 --obs-trace $(OBS_SERVE_TRACE)
+	$(PY) -m repro.launch.train --tiny --rows 2 --seq-len 2048 --steps 4 \
+		--obs-trace $(OBS_TRAIN_TRACE)
+	$(PY) -m repro.obs.check $(OBS_SERVE_TRACE) \
+		--require serve.prefills --require serve.generated \
+		--require serve.decode_steps
+	$(PY) -m repro.obs.check $(OBS_TRAIN_TRACE) --allow-zero \
+		--require train.steps --require train.real_tokens \
+		--require data.prefetch_hits
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -94,6 +94,10 @@ REQUIRED_NUM = ("us_per_call", "tok_per_s")
 OPTIONAL_NUM_PREFIXES = ("ttft_", "arrival_", "queue_", "prefill_",
                          "chunk_", "decode_", "host_", "real_", "buffer_",
                          "padding_")
+# observability-cost fields (obs_overhead_pct on the serve packed_obs row)
+# are deltas vs a baseline mode — legitimately negative under CPU timing
+# noise, so they only need to be numeric
+OPTIONAL_SIGNED_PREFIXES = ("obs_",)
 
 
 def schema_errors(path):
@@ -126,6 +130,11 @@ def schema_errors(path):
                     or v < 0):
                 errs.append(f"{path}[{i}]: field {k!r} must be a "
                             f"non-negative number, got {v!r}")
+            if any(k.startswith(p) for p in OPTIONAL_SIGNED_PREFIXES) and (
+                    not isinstance(v, (int, float))
+                    or isinstance(v, bool)):
+                errs.append(f"{path}[{i}]: field {k!r} must be a number, "
+                            f"got {v!r}")
         if all(isinstance(r.get(k), str) for k in REQUIRED_STR):
             key = _key(r)
             if key in seen:

@@ -17,6 +17,8 @@ here); the structural effects — padding-rate, token-density, step-count —
 are hardware-independent and checked against the paper's numbers.
 
 Run: PYTHONPATH=src python -m benchmarks.run [fig2 fig5 fig6 disc roof]
+(add ``--obs-trace PATH`` to any selection to export a Chrome trace-event
+JSON of the serve packed_obs engine + train timing rounds — repro/obs)
 """
 from __future__ import annotations
 
@@ -55,6 +57,21 @@ BENCH_JSON = os.environ.get("BENCH_SCAN_JSON", "BENCH_scan.json")
 # workloads — the JSON structure is checked (compare.py --schema), timings
 # are NOT gated, so the job stays minutes-bounded on a cold cache
 SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+# --obs-trace PATH (stripped from argv in main()): record host span traces
+# for the obs-instrumented serve mode and the train timing rounds, and
+# export ONE Chrome trace-event JSON (Perfetto-loadable) at PATH
+OBS_TRACE = None
+_OBS = None
+
+
+def _obs():
+    """Process-wide Obs handle: recording iff --obs-trace was given."""
+    global _OBS
+    if _OBS is None:
+        from repro.obs import Obs
+        _OBS = Obs.on() if OBS_TRACE else Obs.off()
+    return _OBS
 
 
 def _bench(op, shape, schedule, us, tokens):
@@ -401,6 +418,7 @@ def train_throughput(seq_len=512, rows=4, steps=4):
 
     shape = f"tiny-mamba_rows{rows}x{seq_len}"
     real_tps = {}
+    tr = _obs().tracer          # records per-round spans iff --obs-trace
     for mode in ("single", "pad", "pack"):
         bs = batches_for(mode)
         real = sum(int((b["segment_ids"] > 0).sum()) for b in bs)
@@ -419,13 +437,16 @@ def train_throughput(seq_len=512, rows=4, steps=4):
                 state, _ = step(state, b)
             jax.block_until_ready(jax.tree.leaves(state["params"])[0])
             best_dt = np.inf
-            for _ in range(2):              # min-of-rounds vs load spikes
+            sched = f"{mode}_{dtag}"
+            for rnd in range(2):            # min-of-rounds vs load spikes
                 t0 = time.perf_counter()
                 for b in bs:
                     state, m = step(state, b)
                 jax.block_until_ready(jax.tree.leaves(state["params"])[0])
-                best_dt = min(best_dt, time.perf_counter() - t0)
-            sched = f"{mode}_{dtag}"
+                t1 = time.perf_counter()
+                tr.complete(f"bench.train.{sched}", t0, t1, track="bench",
+                            round=rnd, steps=len(bs), real_tokens=real)
+                best_dt = min(best_dt, t1 - t0)
             real_tps[sched] = real / best_dt
             TRAIN_RECORDS.append({
                 "op": "train", "shape": shape, "schedule": sched,
@@ -530,15 +551,19 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
     side's compile count is bounded by the bucket list, not the number of
     distinct prompt lengths). Packed rows also emit p50/p95 TTFT
     (submit→first token, measured at host observability) accumulated over
-    the timed rounds."""
+    the timed rounds. The packed_obs row repeats packed_overlap with the
+    host span tracer RECORDING (Obs.on()) — its delta vs packed_overlap,
+    serve/obs_overhead_pct, is the measured cost of enabled observability
+    (< 3% expected: two host timestamps per engine phase)."""
     rounds = 3
     if SMOKE:
         n_requests, max_new, slots, rounds = 10, 6, 4, 2
     print(f"# serve: padded-wave vs packed-continuous vs packed-overlap "
-          f"vs packed-guarded, tiny-mamba, {n_requests} requests, "
-          f"{slots} slots, max_new={max_new}")
+          f"vs packed-guarded vs packed-obs, tiny-mamba, {n_requests} "
+          f"requests, {slots} slots, max_new={max_new}")
     from repro.models.lm import build_model
     from repro.launch.serve import ServeEngine
+    from repro.obs import Obs
 
     cfg = _tiny_mamba()
     model = build_model(cfg)
@@ -589,7 +614,13 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
               # quarantine path); the probe is fused into the jitted step,
               # so the expected cost is <2% of decode throughput
               ServeEngine(model, params, slots, max_len, overlap=True,
-                          guard=True, **kw))]
+                          guard=True, **kw)),
+             ("packed_obs", run_packed,              # + host span tracer ON
+              # the observability cost row: same engine as packed_overlap
+              # but with per-request lifecycle + engine-phase spans being
+              # RECORDED; exported when --obs-trace is given
+              ServeEngine(model, params, slots, max_len, overlap=True,
+                          obs=_obs() if OBS_TRACE else Obs.on(), **kw))]
     for name, runner, eng in modes:            # warm-up: compile all shapes
         runner(eng)
         eng.stats = type(eng.stats)()          # count the timed rounds only
@@ -624,6 +655,10 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
         rec["chunk_ms"] = round(st.chunk_ms / rounds, 2)
         rec["decode_ms"] = round(st.decode_ms / rounds, 2)
         rec["host_ms"] = round(st.host_ms / rounds, 2)
+        if name == "packed_obs":
+            rec["obs_overhead_pct"] = round(
+                (results["packed_obs"] / results["packed_overlap"] - 1.0)
+                * 100, 2)
         _row(f"serve/{name}", dt * 1e6, extra)
         SERVE_RECORDS.append(rec)
         if name == "packed_overlap":
@@ -654,6 +689,12 @@ def serve_throughput(n_requests=32, max_new=16, slots=8):
     _row("serve/guard_overhead_pct", guard_pct,
          f"{guard_pct:+.1f}% decode throughput for the finiteness probes "
          f"(< 2% expected: the probe is a fused all-reduce per step)")
+    obs_pct = (results["packed_obs"] / results["packed_overlap"]
+               - 1.0) * 100
+    _row("serve/obs_overhead_pct", obs_pct,
+         f"{obs_pct:+.1f}% decode throughput with the host span tracer "
+         f"recording (< 3% expected: two perf_counter stamps per engine "
+         f"phase + per-request lifecycle spans)")
 
 
 def serve_open_loop(n_requests=48, max_new=16, slots=8):
@@ -858,7 +899,15 @@ ALL = {"fig2": fig2_ssm_operator_profile,
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    global OBS_TRACE
+    argv = list(sys.argv[1:])
+    if "--obs-trace" in argv:
+        i = argv.index("--obs-trace")
+        if i + 1 >= len(argv):
+            raise SystemExit("--obs-trace needs a PATH argument")
+        OBS_TRACE = argv[i + 1]
+        del argv[i:i + 2]
+    which = argv or list(ALL)
     print("name,us_per_call,derived")
     for k in which:
         ALL[k]()
@@ -875,6 +924,10 @@ def main() -> None:
         with open(TRAIN_JSON, "w") as f:
             json.dump(TRAIN_RECORDS, f, indent=1)
         print(f"# wrote {len(TRAIN_RECORDS)} train records to {TRAIN_JSON}")
+    if OBS_TRACE and _OBS is not None and _OBS.enabled:
+        _OBS.export(OBS_TRACE)
+        print(f"# obs: wrote {len(_OBS.tracer.chrome_events())} trace "
+              f"events to {OBS_TRACE} (chrome://tracing / ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

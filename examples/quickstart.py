@@ -8,9 +8,11 @@ tier-1 lane (`pytest -m "not slow"`; the slow-marked engine round-trips
 and grid sweeps stay in the full local `make verify`), the fault-injection
 chaos lane (`make verify-faults`, a randomized-but-seeded FaultPlan —
 same FAULT_CHAOS_SEED, same faults, any machine), the tune-cache
-audit (`make tune-check`), and a tiny-shape benchmark smoke whose JSON
+audit (`make tune-check`), a tiny-shape benchmark smoke whose JSON
 structure is schema-checked while its timings are never gated
-(`make bench-smoke`). Benchmark baselines are refreshed locally with
+(`make bench-smoke`), and the observability smoke (`make obs-smoke`:
+tiny traced serve+train launcher runs, Chrome-trace structure validated
+by `python -m repro.obs.check`). Benchmark baselines are refreshed with
 `make bench-scan` / `make bench-serve` and promoted via
 `make bench-accept` (the *.new.json staging files never get committed).
 """
@@ -171,6 +173,35 @@ def main():
                   N=cfg.d_state, cache=demo)
     print(f"tuned scan knobs for (B=1, L=256): {knobs} "
           f"(cfg: scan_tune='auto' applies these at trace time)")
+
+    # 7. observability (repro.obs): every engine/trainer above metered
+    #    through ONE MetricsRegistry — stats objects are thin views over it
+    #    — and, when you pass Obs.on(), a span tracer records per-request
+    #    lifecycles (queued → prefill → decode → done, one Perfetto row per
+    #    request) and per-step train spans (data wait / fused step / compile
+    #    marks). Off by default and provably cheap: the disabled tracer is
+    #    a no-op object, and BENCH_serve.json's obs_overhead_pct row
+    #    measures the ENABLED cost (< 3% expected). From the CLIs:
+    #      python -m repro.launch.serve --tiny --obs-trace trace.json
+    #      python -m repro.launch.train --tiny --seq-len 2048 \
+    #          --obs-trace trace.json   [--profile-dir d  # + XLA profile]
+    #      python -m benchmarks.run serve train --obs-trace trace.json
+    #    then open trace.json in chrome://tracing or https://ui.perfetto.dev
+    #    (`make obs-smoke` runs tiny traced launcher runs and validates the
+    #    trace structure via python -m repro.obs.check).
+    from repro.obs import Obs
+    obs = Obs.on()
+    engine2 = ServeEngine(model, state["params"], num_slots=4, max_len=64,
+                          buckets=(32,), max_segments=2, overlap=True,
+                          obs=obs)
+    for s in seqs[:3]:
+        engine2.submit(s[:16], max_new=4)
+    engine2.run()
+    print(f"obs: {len(obs.tracer.chrome_events())} trace events, "
+          f"metrics serve.generated="
+          f"{obs.metrics.counter('serve.generated').value}; "
+          f"timeline of req0:")
+    print(obs.tracer.timeline("req0"))
     print("done.")
 
 

@@ -15,8 +15,9 @@ re-create the loader, resume at k) is preserved by construction.
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 
 class PrefetchLoader:
@@ -29,7 +30,7 @@ class PrefetchLoader:
     advancing training loop.
     """
 
-    def __init__(self, loader: Any, depth: int = 2):
+    def __init__(self, loader: Any, depth: int = 2, obs=None):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.loader = loader
@@ -40,8 +41,40 @@ class PrefetchLoader:
         # single thread already fully overlaps host packing with the device
         self._pool = ThreadPoolExecutor(max_workers=1,
                                         thread_name_prefix="prefetch")
-        self.hits = 0      # batches served from the prefetch buffer
-        self.misses = 0    # batches computed on the caller's thread
+        # hit/miss/wait metering lives in data.* registry metrics (the
+        # instance attributes below are views over them); pass the
+        # Trainer's Obs to share one registry, or let it stand alone
+        if obs is None:
+            from repro.obs import Obs
+            obs = Obs.off()
+        self.obs = obs
+        m = obs.metrics
+        self._c_hits = m.counter(
+            "data.prefetch_hits",
+            help="batches served from the prefetch buffer")
+        self._c_misses = m.counter(
+            "data.prefetch_misses",
+            help="batches computed on the caller's thread")
+        self._g_wait = m.gauge(
+            "data.prefetch_wait_ms",
+            help="cumulative ms the consumer blocked waiting for a batch")
+
+    # consumer-visible counters (data.* registry metrics are the storage)
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def wait_ms(self) -> float:
+        """Cumulative time ``batch()`` spent blocked — on a future still
+        being computed (hit, but the worker wasn't done) or on synchronous
+        computation (miss). Near-zero waits mean the worker keeps up;
+        growing waits mean the loop is data-starved."""
+        return self._g_wait.value
 
     def _schedule(self, step: int) -> None:
         with self._lock:
@@ -55,12 +88,16 @@ class PrefetchLoader:
         # keep the buffer ahead before blocking on the current step
         for k in range(step + 1, step + 1 + self.depth):
             self._schedule(k)
+        t0 = time.perf_counter()
         if fut is not None:
-            self.hits += 1
+            self._c_hits.inc()
             out = fut.result()
         else:
-            self.misses += 1
+            self._c_misses.inc()
             out = self.loader.batch(step)
+        # blocked time either way: a hit whose future is still running
+        # blocks in result(), a miss blocks for the whole computation
+        self._g_wait.add((time.perf_counter() - t0) * 1e3)
         # drop stale entries (restarts / non-monotonic access): anything
         # at or before `step` can never be requested by a forward-moving
         # loop again, and re-scheduling is cheap if it is
@@ -75,6 +112,7 @@ class PrefetchLoader:
             else {}
         out["prefetch_hits"] = self.hits
         out["prefetch_misses"] = self.misses
+        out["prefetch_wait_ms"] = self.wait_ms
         return out
 
     def __getattr__(self, name):

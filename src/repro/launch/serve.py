@@ -119,6 +119,7 @@ from repro.faults import (EngineKilled, FaultPlan, poison_cache_rows,
                           poison_states)
 from repro.models import blocks as B
 from repro.models.lm import build_model
+from repro.obs import (MetricsRegistry, Obs, percentiles, profiler_session)
 
 
 class ShedError(RuntimeError):
@@ -143,53 +144,116 @@ class Request:
     deadline_ms: Optional[float] = None   # total budget from submit_t
 
 
-@dataclasses.dataclass
-class ServeStats:
-    prefills: int = 0              # packed prefill rounds issued
-    prefill_tokens: int = 0        # real prompt tokens prefilled
-    decode_steps: int = 0          # fused all-slot decode steps
-    generated: int = 0             # tokens handed back to requests
-    midflight_refills: int = 0     # prefills issued while slots were decoding
-    overlapped_prefills: int = 0   # prefills that stayed in flight across
-    #                                ≥1 decode step before landing
-    early_admits: int = 0          # admissions forced by the TTFT policy
-    #                                below the refill threshold
-    shed: int = 0                  # submits rejected by overload shedding
-    expired: int = 0               # requests terminated by their deadline
-    cancelled: int = 0             # requests revoked via cancel()
-    quarantined: int = 0           # slots failed by the finiteness probes
-    prefill_faults: int = 0        # prefill dispatches that raised
-    chunk_rounds: int = 0          # chunked-prefill forwards issued
-    chunk_tokens: int = 0          # prompt tokens consumed via chunk rounds
-    chunked_prefills: int = 0      # requests whose prompt landed via chunks
-    bucket_upgrades: int = 0       # TTFT policy took a bigger-than-fit bucket
-    deferred_upgrades: int = 0     # upgrade declined: head wait too long
-    queue_depth_max: int = 0       # deepest the admission queue ever got
-    # host-observed wall time per engine phase (the satellite diagnosis for
-    # packed_continuous trailing padded_wave: WHERE does a step spend time —
-    # admission/prefill sync, chunk rounds, fused decode, or host loop?)
-    prefill_ms: float = 0.0        # _land_prefill + _try_refill (incl. sync)
-    chunk_ms: float = 0.0          # chunked-prefill rounds
-    decode_ms: float = 0.0         # fused decode steps
-    host_ms: float = 0.0           # queue expiry + loop overhead
-    buckets: Optional[set] = None  # distinct (rows, L) prefill shapes used
-    ttft_ms: Optional[List[float]] = None   # per request: submit→first token
-    itl_ms: Optional[List[float]] = None    # per decode token: inter-token
+class _HistList(list):
+    """Per-sample latency list that ALSO feeds a registry histogram on
+    append — ``stats.ttft_ms`` keeps its list API (indexing, len,
+    ``np.percentile``-ability) while the obs registry sees every sample."""
 
-    def __post_init__(self):
-        if self.buckets is None:
-            self.buckets = set()
-        if self.ttft_ms is None:
-            self.ttft_ms = []
-        if self.itl_ms is None:
-            self.itl_ms = []
+    def __init__(self, hist):
+        super().__init__()
+        self.hist = hist
+
+    def append(self, v):
+        super().append(v)
+        self.hist.observe(v)
+
+
+# fixed histogram bounds (ms) for the registry view of per-request TTFT and
+# per-token ITL — wide enough for CPU-compile-included demo runs
+_TTFT_BUCKETS = (1, 2, 5, 10, 20, 50, 100, 200, 500, 1000, 2000, 5000)
+_ITL_BUCKETS = (0.5, 1, 2, 5, 10, 20, 50, 100, 200, 500)
+
+
+class ServeStats:
+    """Engine counters/latencies as a thin view over a ``MetricsRegistry``
+    (repro.obs): every attribute below is backed by a ``serve.*`` metric,
+    so ``engine.stats.shed`` and the registry's ``serve.shed`` are the SAME
+    number — one source for the CLI summary, the benchmark JSON, a
+    Prometheus scrape, and the trace's embedded snapshot.
+
+    ``ServeStats()`` stands alone (its own registry);
+    ``ServeStats(registry)`` binds to an existing one (the engine passes
+    its ``obs.metrics``). The attribute API is unchanged from the old
+    dataclass: ``st.shed += 1`` works, ``st.buckets`` is a plain set,
+    ``st.ttft_ms`` / ``st.itl_ms`` are lists (that also feed histograms).
+
+    Counters:
+      prefills            packed prefill rounds issued
+      prefill_tokens      real prompt tokens prefilled
+      decode_steps        fused all-slot decode steps
+      generated           tokens handed back to requests
+      midflight_refills   prefills issued while slots were decoding
+      overlapped_prefills prefills in flight across ≥1 decode step
+      early_admits        admissions forced by the TTFT policy
+      shed                submits rejected by overload shedding
+      expired             requests terminated by their deadline
+      cancelled           requests revoked via cancel()
+      quarantined         slots failed by the finiteness probes
+      prefill_faults      prefill dispatches that raised
+      chunk_rounds        chunked-prefill forwards issued
+      chunk_tokens        prompt tokens consumed via chunk rounds
+      chunked_prefills    requests whose prompt landed via chunks
+      bucket_upgrades     TTFT policy took a bigger-than-fit bucket
+      deferred_upgrades   upgrade declined: head wait too long
+    Gauges:
+      queue_depth_max     deepest the admission queue ever got
+      prefill_ms / chunk_ms / decode_ms / host_ms
+                          host wall time per engine phase (the satellite
+                          diagnosis for packed_continuous vs padded_wave:
+                          WHERE does a step spend time?)
+    """
+
+    _counters = ("prefills", "prefill_tokens", "decode_steps", "generated",
+                 "midflight_refills", "overlapped_prefills", "early_admits",
+                 "shed", "expired", "cancelled", "quarantined",
+                 "prefill_faults", "chunk_rounds", "chunk_tokens",
+                 "chunked_prefills", "bucket_upgrades", "deferred_upgrades")
+    _gauges = ("queue_depth_max", "prefill_ms", "chunk_ms", "decode_ms",
+               "host_ms")
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        # bypass our __setattr__ until the metric map exists
+        d = self.__dict__
+        d["registry"] = registry if registry is not None \
+            else MetricsRegistry()
+        d["_m"] = {n: d["registry"].counter(f"serve.{n}")
+                   for n in self._counters}
+        d["_m"].update({n: d["registry"].gauge(f"serve.{n}")
+                        for n in self._gauges})
+        d["buckets"] = set()   # distinct (rows, L) prefill shapes used
+        d["ttft_ms"] = _HistList(
+            d["registry"].histogram("serve.ttft_ms", _TTFT_BUCKETS,
+                                    help="submit to first token, ms"))
+        d["itl_ms"] = _HistList(
+            d["registry"].histogram("serve.itl_ms", _ITL_BUCKETS,
+                                    help="inter-token latency, ms"))
+
+    def __getattr__(self, name):
+        m = self.__dict__.get("_m", {})
+        if name in m:
+            return m[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        m = self.__dict__.get("_m", {})
+        if name in m:
+            m[name].set(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    def __repr__(self):
+        fields = ", ".join(f"{n}={self._m[n].value}"
+                           for n in self._counters + self._gauges)
+        return (f"ServeStats({fields}, buckets={self.buckets}, "
+                f"ttft_n={len(self.ttft_ms)}, itl_n={len(self.itl_ms)})")
 
     def ttft_percentiles(self) -> Dict[str, float]:
         """{'p50': ms, 'p95': ms} over recorded TTFTs ({} when none)."""
-        if not self.ttft_ms:
-            return {}
-        return {"p50": float(np.percentile(self.ttft_ms, 50)),
-                "p95": float(np.percentile(self.ttft_ms, 95))}
+        return percentiles(self.ttft_ms, (50, 95))
+
+    def itl_percentiles(self) -> Dict[str, float]:
+        """{'p50': ms, 'p95': ms} over inter-token latencies ({} = none)."""
+        return percentiles(self.itl_ms, (50, 95))
 
 
 # back-compat alias (pre-overlap name)
@@ -233,9 +297,17 @@ class ServeEngine:
                  bucket_policy: str = "smallest_fit",
                  chunk_rows: int = 1,
                  chunk_size: Optional[int] = None,
-                 max_prompt_len: Optional[int] = None):
+                 max_prompt_len: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         self.model = model
         self.params = params
+        # telemetry: metrics are always on (ServeStats is a view over
+        # obs.metrics); span tracing records only when the caller passes
+        # Obs.on() — the default NULL_TRACER makes every tracer call below
+        # a no-op, so token streams and schedules are bit-identical
+        self.obs = obs if obs is not None else Obs.off()
+        self._tr = self.obs.tracer
+        self._req_spans: Dict[int, Optional[int]] = {}
         self.num_slots = num_slots
         self.max_len = max_len
         self.prefill_rows = prefill_rows
@@ -380,7 +452,7 @@ class ServeEngine:
         self.status: Dict[int, str] = {}
         self.errors: Dict[int, str] = {}
         self.resumed: set = set()     # rids restored from a snapshot
-        self.stats = ServeStats()
+        self.stats = ServeStats(self.obs.metrics)
         self._next_rid = 0
 
     @property
@@ -454,12 +526,15 @@ class ServeEngine:
         now = self._clock()
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.stats.shed += 1
+            self._tr.instant("shed", track="engine", reason="max_queue")
             raise ShedError(f"shed: admission queue depth {len(self.queue)} "
                             f">= max_queue {self.max_queue}")
         if self.max_queue_age_ms is not None and self.queue:
             age_ms = (now - self.queue[0].submit_t) * 1e3
             if age_ms > self.max_queue_age_ms:
                 self.stats.shed += 1
+                self._tr.instant("shed", track="engine",
+                                 reason="max_queue_age_ms")
                 raise ShedError(
                     f"shed: head-of-line request has waited {age_ms:.0f}ms "
                     f"> max_queue_age_ms {self.max_queue_age_ms} — the "
@@ -473,6 +548,7 @@ class ServeEngine:
                                   now, deadline_ms))
         self.outputs[rid] = []
         self.status[rid] = "queued"
+        self._span_to(rid, "queued", prompt=len(tokens), max_new=max_new)
         self.stats.queue_depth_max = max(self.stats.queue_depth_max,
                                          len(self.queue))
         return rid
@@ -493,8 +569,23 @@ class ServeEngine:
         if tok == req.eos or self.slot_remaining[slot] <= 0:
             self.slot_req[slot] = None
             self.status[req.rid] = "done"
+            self._span_end(req.rid, "done",
+                           tokens=len(self.outputs[req.rid]))
 
     # ------------------------------------------------------------ lifecycle
+    def _span_to(self, rid: int, name: str, **attrs):
+        """Advance a request's lifecycle span (queued → prefill/chunk →
+        decode) on its own trace track — one Perfetto row per request."""
+        self._tr.finish(self._req_spans.pop(rid, None))
+        self._req_spans[rid] = self._tr.start(name, track=f"req{rid}",
+                                              rid=rid, **attrs)
+
+    def _span_end(self, rid: int, status: str, **attrs):
+        """Close a request's lifecycle span at a terminal status and mark
+        the terminal as an instant event on its track."""
+        self._tr.finish(self._req_spans.pop(rid, None))
+        self._tr.instant(status, track=f"req{rid}", rid=rid, **attrs)
+
     def _terminate(self, rid: int, status: str, reason: str):
         """Move a request to a terminal status with its diagnostic."""
         self.status[rid] = status
@@ -503,6 +594,7 @@ class ServeEngine:
             self.stats.expired += 1
         elif status == "cancelled":
             self.stats.cancelled += 1
+        self._span_end(rid, status, reason=reason)
 
     def _deadline_over(self, req: Request, now: float) -> bool:
         return req.deadline_ms is not None and \
@@ -669,7 +761,11 @@ class ServeEngine:
             r for r in self.queue if r.rid not in adm)
         for req in admitted:
             self.status[req.rid] = "active"
+            self._span_to(req.rid, "prefill", bucket=L)
         pidx = self.stats.prefills      # this dispatch's fault-plan index
+        dsid = self._tr.start("prefill_dispatch", track="engine", bucket=L,
+                              rows=self.prefill_rows, admitted=len(admitted),
+                              pidx=pidx)
         if self.faults is not None and self.faults.fails_prefill(pidx):
             # the packed forward died (injected stand-in for device OOM /
             # preemption): fail this round's requests with an explicit
@@ -681,6 +777,7 @@ class ServeEngine:
                 self._terminate(req.rid, "failed",
                                 f"prefill dispatch {pidx} failed "
                                 f"(injected fault)")
+            self._tr.finish(dsid, fault=True)
             return False
         pb = packing.pack([r.tokens for r in admitted], L,
                           policy=self.policy, num_rows=self.prefill_rows)
@@ -742,6 +839,7 @@ class ServeEngine:
         self.stats.prefills += 1
         self.stats.prefill_tokens += sum(lens)
         self.stats.buckets.add((self.prefill_rows, L))
+        self._tr.finish(dsid, tokens=sum(lens))
         if not self.overlap or not self._active_slots():
             self._land_prefill(block=True)
         return True
@@ -778,6 +876,9 @@ class ServeEngine:
 
     def _land_one(self, inf: dict):
         """Land one dispatched prefill: scatter states, activate slots."""
+        lsid = self._tr.start("prefill_land", track="engine",
+                              pidx=inf["pidx"],
+                              steps_waited=inf["steps_waited"])
         src_j, dst_j = inf["src"], inf["dst"]
         self.cache = self._scatter(self.cache, inf["states"], src_j, dst_j)
         flat_lens = inf["seg_lens"].reshape(-1)
@@ -816,6 +917,8 @@ class ServeEngine:
                 # the slot free (its cache row is fully overwritten at the
                 # next refill, so the poison never propagates)
                 self.stats.quarantined += 1
+                self._tr.instant("quarantined", track=f"req{req.rid}",
+                                 rid=req.rid)
                 self._terminate(req.rid, "failed",
                                 f"non-finite prefill state for request "
                                 f"{req.rid} (prefill {inf['pidx']}, row "
@@ -825,9 +928,13 @@ class ServeEngine:
             self.slot_remaining[slot] = req.max_new
             self.slot_last_t[slot] = now
             self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
+            self._span_to(req.rid, "decode", slot=slot)
+            self._tr.instant("first_token", track=f"req{req.rid}",
+                             rid=req.rid)
             self._finish_token(slot, int(first[k]))
         if inf["steps_waited"] > 0:
             self.stats.overlapped_prefills += 1
+        self._tr.finish(lsid)
 
     # ------------------------------------------------------- chunked prefill
     def _chunk_active(self) -> bool:
@@ -865,6 +972,8 @@ class ServeEngine:
             self.chunk_off[row] = 0
             self.chunk_slot[row] = free[0]
             claimed[row] = True
+            self._span_to(nxt.rid, "chunk", row=row, slot=free[0],
+                          prompt=len(nxt.tokens))
         if claimed.any():
             # wipe the claimed rows back to init_cache values — no stale
             # conv tail / attention ring / stabilizer state across tenants
@@ -928,10 +1037,13 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(toks),
                  "positions": jnp.asarray(pos),
                  "segment_ids": jnp.asarray(seg)}
+        csid = self._tr.start("chunk_slab", track="engine", round=cidx,
+                              rows=len(rows), tokens=sum(took.values()))
         logits, self.chunk_cache, self.chunk_clen = self._chunk_fn(
             self.params, self.chunk_cache, batch, self.chunk_clen)
         self.stats.chunk_rounds += 1
         self.stats.chunk_tokens += sum(took.values())
+        self._tr.finish(csid)
         if self.faults is not None:
             prs = self.faults.chunk_poison(cidx)
             if prs:
@@ -999,6 +1111,8 @@ class ServeEngine:
                 # overwritten at the next refill, so the poison never
                 # reaches a live stream
                 self.stats.quarantined += 1
+                self._tr.instant("quarantined", track=f"req{req.rid}",
+                                 rid=req.rid)
                 self._terminate(req.rid, "failed",
                                 f"non-finite chunked-prefill state for "
                                 f"request {req.rid} (chunk round {cidx}, "
@@ -1009,6 +1123,9 @@ class ServeEngine:
             self.slot_last_t[slot] = now
             self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
             self.stats.chunked_prefills += 1
+            self._span_to(req.rid, "decode", slot=slot)
+            self._tr.instant("first_token", track=f"req{req.rid}",
+                             rid=req.rid)
             self._finish_token(slot, int(first[i]))
 
     # --------------------------------------------------------------- decode
@@ -1025,6 +1142,8 @@ class ServeEngine:
             # persisted by the last snapshot() is gone
             raise EngineKilled(f"fault plan killed the engine before "
                                f"decode step {step_idx}")
+        dsid = self._tr.start("decode_step", track="engine", step=step_idx,
+                              active=len(active))
         sampling = any(self.slot_req[i].temperature > 0.0 for i in active)
         fin = None
         if self.guard:
@@ -1069,6 +1188,7 @@ class ServeEngine:
                 rid = self.slot_req[i].rid
                 self.slot_req[i] = None
                 self.stats.quarantined += 1
+                self._tr.instant("quarantined", track=f"req{rid}", rid=rid)
                 self._terminate(rid, "failed",
                                 f"non-finite decode logits for request "
                                 f"{rid} at step {step_idx} (slot {i}) — "
@@ -1085,6 +1205,7 @@ class ServeEngine:
                                 f"deadline {req.deadline_ms:.0f}ms exceeded "
                                 f"mid-decode (kept "
                                 f"{len(self.outputs[req.rid])} tokens)")
+        self._tr.finish(dsid)
 
     # ----------------------------------------------------------------- loop
     def step(self) -> bool:
@@ -1093,6 +1214,7 @@ class ServeEngine:
         bound), advance one chunked-prefill round, then one decode step.
         Wall time is split per phase into ``stats.*_ms``. Returns True
         while work remains."""
+        ssid = self._tr.start("serve.step", track="engine")
         t0 = time.perf_counter()
         self._expire_queued()
         t1 = time.perf_counter()
@@ -1112,6 +1234,7 @@ class ServeEngine:
         st.prefill_ms += (t2 - t1) * 1e3
         st.chunk_ms += (t3 - t2) * 1e3
         st.decode_ms += (t4 - t3) * 1e3
+        self._tr.finish(ssid)
         return bool(self.queue or self._active_slots()
                     or self._prefill_pool or self._chunk_active())
 
@@ -1384,6 +1507,13 @@ def main():
                     help="off | auto | <cache path>: shape-keyed scan "
                          "autotuning (the engine warms the cache for its "
                          "prefill buckets at startup)")
+    ap.add_argument("--obs-trace", default=None, metavar="PATH",
+                    help="record request-lifecycle spans and export a "
+                         "Chrome trace-event JSON here (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="also capture an XLA profile (jax.profiler, "
+                         "TensorBoard format) into this directory")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -1394,6 +1524,7 @@ def main():
         cfg = dataclasses.replace(cfg, scan_tune=args.scan_tune)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    obs = Obs.on() if args.obs_trace else Obs.off()
     engine = ServeEngine(model, params, args.slots, args.max_len,
                          policy=args.policy, overlap=not args.no_overlap,
                          target_ttft_ms=args.target_ttft_ms,
@@ -1402,21 +1533,23 @@ def main():
                          bucket_policy=args.bucket_policy,
                          chunk_size=args.chunk_size,
                          chunk_rows=args.chunk_rows,
-                         max_prompt_len=args.max_prompt_len)
+                         max_prompt_len=args.max_prompt_len,
+                         obs=obs)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(5, 40, size=args.requests)
     t0 = time.perf_counter()
     shed = 0
-    for n in lens:
-        try:
-            engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
-                          args.new_tokens, temperature=args.temperature,
-                          top_k=args.top_k, top_p=args.top_p,
-                          deadline_ms=args.deadline_ms)
-        except ShedError:
-            shed += 1
-    outs = engine.run()
+    with profiler_session(args.profile_dir) as profiling:
+        for n in lens:
+            try:
+                engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
+                              args.new_tokens, temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              deadline_ms=args.deadline_ms)
+            except ShedError:
+                shed += 1
+        outs = engine.run()
     dt = time.perf_counter() - t0
     st = engine.stats
     if shed or st.expired or st.quarantined:
@@ -1437,10 +1570,18 @@ def main():
     print(f"time split: prefill {st.prefill_ms:.0f}ms, chunk "
           f"{st.chunk_ms:.0f}ms, decode {st.decode_ms:.0f}ms, host "
           f"{st.host_ms:.0f}ms")
-    itl = f"{np.percentile(st.itl_ms, 50):.2f}ms" if st.itl_ms else "n/a"
+    ipct = st.itl_percentiles()
+    itl = f"{ipct['p50']:.2f}ms" if ipct else "n/a"
     print(f"TTFT p50 {pct.get('p50', 0):.1f}ms p95 {pct.get('p95', 0):.1f}ms "
           f"over {len(st.ttft_ms)} requests; "
           f"ITL p50 {itl} over {len(st.itl_ms)} decode tokens")
+    if args.obs_trace:
+        obs.export(args.obs_trace)
+        print(f"obs: wrote {len(obs.tracer.chrome_events())} trace events "
+              f"to {args.obs_trace} (open in chrome://tracing or "
+              f"ui.perfetto.dev)")
+    if args.profile_dir and profiling:
+        print(f"obs: XLA profile captured under {args.profile_dir}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ from repro.data.dataset import SyntheticCorpus, CorpusConfig
 from repro.data.packing_loader import PackingLoader, LoaderConfig
 from repro.distributed import sharding as shd
 from repro.models.lm import build_model
+from repro.obs import Obs, profiler_session
 from repro.optim.adamw import AdamW, AdamWConfig, cosine_schedule
 from repro.train.trainer import Trainer, TrainerConfig, make_train_step
 
@@ -36,6 +37,8 @@ from repro.train.trainer import Trainer, TrainerConfig, make_train_step
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba-110m")
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink the model for a CPU demo / smoke run")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--rows", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=4096)
@@ -66,6 +69,13 @@ def main():
                          "the training shape before the first step")
     ap.add_argument("--dry-run", action="store_true",
                     help="lower+compile on the 16x16 production mesh")
+    ap.add_argument("--obs-trace", default=None, metavar="PATH",
+                    help="record per-step train spans (data wait / fused "
+                         "step / compile marks) and export a Chrome "
+                         "trace-event JSON here")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="also capture an XLA profile (jax.profiler, "
+                         "TensorBoard format) into this directory")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -77,6 +87,9 @@ def main():
             f"{args.arch} --shape train_4k --mesh both")
 
     cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, d_model=128, n_layers=4, vocab=512,
+                                  dtype="float32", scan_chunk=64)
     if args.dtype or args.param_dtype:
         cfg = dataclasses.replace(
             cfg, dtype=args.dtype or cfg.dtype,
@@ -93,13 +106,14 @@ def main():
         warm_for_config(cfg, [(args.rows, args.seq_len)],
                         objective="fwdbwd")
     model = build_model(cfg)
+    obs = Obs.on() if args.obs_trace else Obs.off()
     corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=0))
     loader = PackingLoader(corpus, LoaderConfig(
         rows=args.rows, seq_len=args.seq_len, mode=args.mode,
         policy=args.policy))
     if args.prefetch > 0:
         from repro.data.prefetch import PrefetchLoader
-        loader = PrefetchLoader(loader, depth=args.prefetch)
+        loader = PrefetchLoader(loader, depth=args.prefetch, obs=obs)
     opt = AdamW(cosine_schedule(args.lr, warmup=max(1, args.steps // 20),
                                 total=args.steps),
                 AdamWConfig(weight_decay=0.1, clip_norm=1.0))
@@ -122,11 +136,19 @@ def main():
         steps=args.steps, accum=args.accum, log_every=10,
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
         ckpt_dir=args.ckpt_dir), step_fn=None if n_dev == 1 else step_fn,
-        jit=(n_dev == 1))
+        jit=(n_dev == 1), obs=obs)
     print(f"training {cfg.name}: {args.steps} steps, mode={args.mode}, "
           f"rows={args.rows}x{args.seq_len}, devices={n_dev}")
-    state, hist = trainer.train(jax.random.PRNGKey(0))
+    with profiler_session(args.profile_dir) as profiling:
+        state, hist = trainer.train(jax.random.PRNGKey(0))
     print(f"done; final loss {hist[-1]['loss']:.4f}")
+    if args.obs_trace:
+        obs.export(args.obs_trace)
+        print(f"obs: wrote {len(obs.tracer.chrome_events())} trace events "
+              f"to {args.obs_trace} (open in chrome://tracing or "
+              f"ui.perfetto.dev)")
+    if args.profile_dir and profiling:
+        print(f"obs: XLA profile captured under {args.profile_dir}")
 
 
 if __name__ == "__main__":

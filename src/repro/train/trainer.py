@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.optim.adamw import AdamW, AdamWState
 from repro.checkpoint.checkpoint import CheckpointManager
+from repro.obs import Obs
 
 
 @dataclasses.dataclass
@@ -84,7 +85,8 @@ def make_train_step(model, opt: AdamW, accum: int = 1,
 
 class Trainer:
     def __init__(self, model, opt: AdamW, loader, cfg: TrainerConfig,
-                 step_fn: Optional[Callable] = None, jit: bool = True):
+                 step_fn: Optional[Callable] = None, jit: bool = True,
+                 obs: Optional[Obs] = None):
         self.model = model
         self.opt = opt
         self.loader = loader
@@ -95,6 +97,29 @@ class Trainer:
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
             if cfg.ckpt_dir else None
         self._interrupted = False
+        # telemetry: the train.* counters are THE cumulative token/step
+        # metering (the log line reads deltas of these); span tracing is
+        # recording only when the caller passes Obs.on(). Note the fused
+        # train step is ONE jit-compiled function — forward-backward and
+        # the optimizer update share the "train.step" span (an XLA profile
+        # via --profile-dir splits them at operator level).
+        self.obs = obs if obs is not None else Obs.off()
+        m = self.obs.metrics
+        self._c_steps = m.counter("train.steps",
+                                  help="optimizer steps completed")
+        self._c_real = m.counter("train.real_tokens",
+                                 help="non-padding tokens trained on")
+        self._c_buf = m.counter("train.buffer_tokens",
+                                help="buffer tokens incl. padding")
+        self._c_compiles = m.counter(
+            "train.compiles", help="distinct batch token-shapes seen "
+                                   "(first-call = compile)")
+        self._g_data = m.gauge("train.data_ms",
+                               help="cumulative ms waiting on the loader")
+        self._g_step = m.gauge("train.step_ms",
+                               help="cumulative ms in the fused train step")
+        self._g_loss = m.gauge("train.loss", help="last logged loss")
+        self._shapes_seen = set()
 
     # ----------------------------------------------------------- lifecycle
     def init_state(self, key) -> Dict[str, Any]:
@@ -125,22 +150,49 @@ class Trainer:
         if start_step is not None:
             step0 = start_step
         history = []
+        tr = self.obs.tracer
         t_last = time.perf_counter()
-        real_since = 0       # non-padding tokens (segment_ids > 0)
-        buffer_since = 0     # full buffer positions fed to the device
+        # the log line meters real/buffer tokens as DELTAS of the train.*
+        # registry counters — one source of numbers shared with the trace
+        # snapshot and any Prometheus scrape
+        real_mark = self._c_real.value
+        buf_mark = self._c_buf.value
         for step in range(step0, self.cfg.steps):
-            batch = self.loader.batch(step)
+            t0 = time.perf_counter()
+            with tr.span("train.data", track="train", step=step):
+                batch = self.loader.batch(step)
+            t1 = time.perf_counter()
             # meter from the batch itself, not metrics["tokens"]: a loss fn
             # that omits the metric must not silently report 0 tok/s
             seg = batch.get("segment_ids")
             real = int((seg > 0).sum()) if seg is not None \
                 else int(batch["tokens"].size)
+            # first occurrence of a batch token-shape = jit compile on this
+            # call (first-call timing shows up as an outsized train.step)
+            shape = tuple(batch["tokens"].shape)
+            compiled = shape not in self._shapes_seen
+            if compiled:
+                self._shapes_seen.add(shape)
+                self._c_compiles.inc()
+            sid = tr.start("train.step", track="train", step=step,
+                           compile=compiled)
             state, metrics = self.step_fn(state, batch)
-            real_since += real
-            buffer_since += int(batch["tokens"].size)
+            # sync so the span covers device time, not dispatch time — a
+            # no-op on the disabled tracer (no extra syncs when off)
+            tr.sync(metrics["loss"])
+            tr.finish(sid)
+            t2 = time.perf_counter()
+            self._c_steps.inc()
+            self._c_real.inc(real)
+            self._c_buf.inc(int(batch["tokens"].size))
+            self._g_data.add((t1 - t0) * 1e3)
+            self._g_step.add((t2 - t1) * 1e3)
             if verbose and (step + 1) % self.cfg.log_every == 0:
                 jax.block_until_ready(metrics["loss"])
+                self._g_loss.set(float(metrics["loss"]))
                 dt = time.perf_counter() - t_last
+                real_since = self._c_real.value - real_mark
+                buffer_since = self._c_buf.value - buf_mark
                 real_tput = real_since / max(dt, 1e-9)
                 buf_tput = buffer_since / max(dt, 1e-9)
                 print(f"step {step + 1:5d} loss {float(metrics['loss']):.4f} "
@@ -149,8 +201,8 @@ class Trainer:
                       f"(buffer {buf_tput:,.0f}, "
                       f"{real_since / max(buffer_since, 1):.0%} real)")
                 t_last = time.perf_counter()
-                real_since = 0
-                buffer_since = 0
+                real_mark = self._c_real.value
+                buf_mark = self._c_buf.value
             row = {k: float(v) for k, v in metrics.items()
                    if jnp.ndim(v) == 0}
             row["real_tokens"] = float(real)

@@ -146,23 +146,32 @@ def make_thunk(key: ShapeKey, knobs: Dict, args: Tuple):
 
 def tune_key(key: ShapeKey, cache: Optional[TuneCache] = None,
              rounds: int = 3, include_pallas: Optional[bool] = None,
-             verbose: bool = False) -> Dict:
+             verbose: bool = False, obs=None) -> Dict:
     """Measure the candidate space at ``key``, cache and return the winner.
 
     Candidates that fail to build/compile are dropped (a knob combination
     can be invalid for a shape); at least the default-equivalent candidates
-    always survive."""
+    always survive. ``obs`` (repro.obs.Obs) records one ``tune.sweep`` span
+    per key with nested ``tune.candidate`` compile probes, plus
+    ``tune.sweeps`` / ``tune.candidates`` counters."""
+    if obs is None:
+        from repro.obs import Obs
+        obs = Obs.off()
+    tr = obs.tracer
     if include_pallas is None:
         include_pallas = _pallas_usable()
     cands = space_for(key, include_pallas=include_pallas)
     args = synth_args(key)
     cells: List[Tuple[str, object]] = []
     by_name: Dict[str, Dict] = {}
+    ssid = tr.start("tune.sweep", track="tune", key=key.encode(),
+                    candidates=len(cands))
     for c in cands:
         name = candidate_name(c)
         try:
-            thunk = make_thunk(key, c, args)
-            thunk()           # build + compile probe outside the timed loop
+            with tr.span("tune.candidate", track="tune", cand=name):
+                thunk = make_thunk(key, c, args)
+                thunk()       # build + compile probe outside the timed loop
         except Exception as e:
             if verbose:
                 print(f"#   tune drop {name}: {type(e).__name__}: {e}")
@@ -170,9 +179,14 @@ def tune_key(key: ShapeKey, cache: Optional[TuneCache] = None,
         cells.append((name, thunk))
         by_name[name] = c
     if not cells:
+        tr.finish(ssid, viable=0)
         raise RuntimeError(f"no viable candidates for {key.encode()}")
     best_us, _ = _timing()(cells, rounds=rounds, warmup=1)
     win = min(best_us, key=best_us.get)
+    obs.metrics.counter("tune.sweeps").inc()
+    obs.metrics.counter("tune.candidates").inc(len(cells))
+    tr.finish(ssid, viable=len(cells), winner=win,
+              winner_us=best_us[win])
     if verbose:
         ranked = sorted(best_us.items(), key=lambda kv: kv[1])
         print(f"# tune {key.encode()}: " +
@@ -188,7 +202,7 @@ def ensure(op: str, *, B: int, L: int, D: int = 0, N: int = 0, H: int = 0,
            dh: int = 0, dtype="float32", reset_density=None,
            objective: str = "fwd", cache: Optional[TuneCache] = None,
            rounds: int = 3, include_pallas: Optional[bool] = None,
-           force: bool = False, verbose: bool = False) -> bool:
+           force: bool = False, verbose: bool = False, obs=None) -> bool:
     """Tune ``op`` at this shape unless its exact bucketed key is already
     cached. Returns True iff a new measurement was taken."""
     c = cache if cache is not None else get_cache()
@@ -197,7 +211,7 @@ def ensure(op: str, *, B: int, L: int, D: int = 0, N: int = 0, H: int = 0,
     if not force and c.get(key) is not None:
         return False
     tune_key(key, cache=c, rounds=rounds, include_pallas=include_pallas,
-             verbose=verbose)
+             verbose=verbose, obs=obs)
     return True
 
 

@@ -155,6 +155,48 @@ def test_prefetch_rejects_bad_depth():
         PrefetchLoader(_small_loader(), depth=0)
 
 
+def test_prefetch_wait_time_metered():
+    """Cumulative blocked time: a scripted slow loader must show up in
+    ``data.prefetch_wait_ms`` — a miss blocks for the whole computation,
+    and a hit whose future is still running blocks in result()."""
+    import time
+
+    class SlowLoader:
+        def batch(self, step):
+            time.sleep(0.02)
+            return {"step": step}
+
+    with PrefetchLoader(SlowLoader(), depth=1) as pf:
+        assert pf.batch(0) == {"step": 0}            # miss: full 20ms wait
+        st = pf.stats(0)
+    assert st["prefetch_misses"] == 1
+    assert st["prefetch_wait_ms"] >= 15.0            # sleep minus slack
+    assert pf.wait_ms == st["prefetch_wait_ms"]
+    # the wait is stored in the shared registry, not a shadow attribute
+    assert pf.obs.metrics.gauge("data.prefetch_wait_ms").value == pf.wait_ms
+
+
+def test_prefetch_fast_loader_waits_near_zero():
+    """When the worker keeps up, hits barely block: the cumulative wait on
+    a buffer-ahead access pattern stays far below the work it overlapped."""
+    import time
+
+    class SlowLoader:
+        def batch(self, step):
+            time.sleep(0.01)
+            return {"step": step}
+
+    with PrefetchLoader(SlowLoader(), depth=2) as pf:
+        pf.batch(0)                                  # miss, primes 1..2
+        time.sleep(0.05)                             # let the worker finish
+        t0 = time.perf_counter()
+        pf.batch(1)                                  # hit: already computed
+        hit_wall = (time.perf_counter() - t0) * 1e3
+        st = pf.stats(1)
+    assert st["prefetch_hits"] >= 1
+    assert hit_wall < 8.0                            # served from buffer
+
+
 def test_first_fit_decreasing_loader_padding_not_worse():
     """FFD is the offline padding reducer: never more padding than the
     arrival-order sequential policy on the same draw."""
