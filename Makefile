@@ -36,7 +36,7 @@ FAULT_CHAOS_SEED ?= 0
 
 .PHONY: verify verify-fast verify-faults ci bench-scan bench-serve \
 	bench-serve-open bench-train bench-tune tune-check bench-compare \
-	bench-smoke bench-accept obs-smoke quickstart
+	bench-smoke bench-accept obs-smoke docs-check quickstart
 
 verify:
 	$(PY) -m pytest -x -q
@@ -57,17 +57,19 @@ verify-faults:
 # chaos lane, tune-cache audit, a bounded bench smoke whose JSON structure
 # — never its timings — is checked, and the observability smoke (traced
 # tiny serve+train runs, trace structure validated)
-ci: verify-fast verify-faults tune-check bench-smoke obs-smoke
+ci: verify-fast verify-faults tune-check bench-smoke obs-smoke docs-check
 
 # regenerate the scan-schedule matrix into $(NEW) (fig2 also warms $(TUNE)
 # for any of its shape keys the bounded sweep hasn't covered yet)
 bench-scan:
 	BENCH_SCAN_JSON=$(NEW) REPRO_TUNE_CACHE=$(TUNE) $(PY) -m benchmarks.run fig2
 
-# regenerate every serving row — closed-loop padded-vs-packed AND the
-# open-loop v1-vs-v2 scheduler rows — into one $(SERVE_NEW)
+# regenerate every serving row — closed-loop padded-vs-packed, the
+# open-loop v1-vs-v2 scheduler rows, AND the prefix-cache / speculative
+# rows — into one $(SERVE_NEW)
 bench-serve:
-	BENCH_SERVE_JSON=$(SERVE_NEW) $(PY) -m benchmarks.run serve serve_open
+	BENCH_SERVE_JSON=$(SERVE_NEW) \
+		$(PY) -m benchmarks.run serve serve_open serve_cached
 
 # open-loop (Poisson-arrival) rows only: v1 vs v2 scheduler at matched
 # offered load -> $(SERVE_NEW). Faster iteration on scheduler policy; use
@@ -115,7 +117,7 @@ bench-smoke:
 	BENCH_SMOKE=1 BENCH_SCAN_JSON=$(SMOKE_SCAN) \
 		BENCH_SERVE_JSON=$(SMOKE_SERVE) BENCH_TRAIN_JSON=$(SMOKE_TRAIN) \
 		REPRO_TUNE_CACHE=$(SMOKE_TUNE) \
-		$(PY) -m benchmarks.run fig2 serve serve_open train
+		$(PY) -m benchmarks.run fig2 serve serve_open serve_cached train
 	$(PY) benchmarks/compare.py --schema $(SMOKE_SCAN) $(SMOKE_SERVE) \
 		$(SMOKE_TRAIN)
 
@@ -137,6 +139,13 @@ obs-smoke:
 	$(PY) -m repro.obs.check $(OBS_TRAIN_TRACE) --allow-zero \
 		--require train.steps --require train.real_tokens \
 		--require data.prefetch_hits
+
+# docs stay honest: the README bench table must match the committed
+# BENCH_*.json exactly (regenerate with `make docs-check WRITE=--write`),
+# and every repo path referenced from README.md / docs/*.md must exist
+WRITE ?=
+docs-check:
+	$(PY) benchmarks/docs_check.py $(WRITE)
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -93,7 +93,11 @@ REQUIRED_NUM = ("us_per_call", "tok_per_s")
 # all non-negative numbers when present
 OPTIONAL_NUM_PREFIXES = ("ttft_", "arrival_", "queue_", "prefill_",
                          "chunk_", "decode_", "host_", "real_", "buffer_",
-                         "padding_")
+                         "padding_",
+                         # serve_cached rows: StateCache hit ratio and
+                         # insert/evict pressure (hit_/cache_), speculative
+                         # decode accept rate and round counts (spec_)
+                         "hit_", "cache_", "spec_")
 # observability-cost fields (obs_overhead_pct on the serve packed_obs row)
 # are deltas vs a baseline mode — legitimately negative under CPU timing
 # noise, so they only need to be numeric

@@ -1,0 +1,201 @@
+"""Keep the documentation honest — the CI `docs-check` lane.
+
+Two checks, one invocation (`make docs-check`):
+
+1. **Bench table.** README.md carries a "current numbers" table between
+   ``<!-- BENCH_TABLE_START -->`` / ``<!-- BENCH_TABLE_END -->`` markers.
+   This script regenerates that table from the *committed* benchmark
+   baselines (BENCH_scan.json / BENCH_serve.json / BENCH_train.json) and
+   fails if the README text differs — stale numbers in the README are a
+   CI failure, not a review nit. ``--write`` regenerates the block in
+   place (run it after `make bench-accept` promotes new baselines).
+
+2. **Path references.** Every repo path mentioned in README.md and
+   docs/*.md (anything shaped like ``src/…``, ``docs/…``, ``examples/…``,
+   ``benchmarks/…``, ``tests/…``, or ``Makefile``) must exist. Docs that
+   point at renamed or deleted files fail CI the moment the rename lands.
+
+The table renderer is deliberately lossy: scan rows collapse to
+baseline-vs-best per shape, serve/train rows print throughput and TTFT.
+The committed JSON stays the source of truth; the README is a view.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(ROOT, "README.md")
+START, END = "<!-- BENCH_TABLE_START -->", "<!-- BENCH_TABLE_END -->"
+
+SCAN_JSON = os.path.join(ROOT, "BENCH_scan.json")
+SERVE_JSON = os.path.join(ROOT, "BENCH_serve.json")
+TRAIN_JSON = os.path.join(ROOT, "BENCH_train.json")
+
+# what counts as a repo-path reference inside the prose/code of the docs
+PATH_RE = re.compile(
+    r"(?<![\w/.-])((?:src|docs|examples|benchmarks|tests)/"
+    r"[A-Za-z0-9_./-]+|Makefile)(?![\w-])")
+
+
+# ------------------------------------------------------------- bench table
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def render_table():
+    """The canonical README bench block (list of lines, no markers)."""
+    lines = [
+        "Numbers are single-CPU-host JAX timings from the committed",
+        "baselines (regenerate: `make bench-scan` / `make bench-serve` /",
+        "`make bench-train`, then `make bench-accept`; refresh this table",
+        "with `make docs-check WRITE=--write`).",
+        "",
+    ]
+
+    scan = _load(SCAN_JSON)
+    by_shape = {}
+    for r in scan:
+        by_shape.setdefault(r["shape"], []).append(r)
+    lines += [
+        "**Selective-scan schedules** (BENCH_scan.json — per shape, the "
+        "best Mamba-1 schedule vs its `chunked` baseline; Mamba-2/SSD "
+        "rows are a different operator so they get their own column):",
+        "",
+        "| shape | chunked us | best M1 schedule | best M1 us | speedup "
+        "| best M2 schedule | best M2 us |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for shape in sorted(by_shape, key=lambda s: (len(s), s)):
+        rows = by_shape[shape]
+        m1 = [r for r in rows if not r["schedule"].startswith("mamba2")]
+        m2 = [r for r in rows if r["schedule"].startswith("mamba2")]
+        base = next((r for r in m1 if r["schedule"] == "chunked"), None)
+        if base is None or not m1:
+            continue
+        best = min(m1, key=lambda r: r["us_per_call"])
+        speed = base["us_per_call"] / best["us_per_call"]
+        cell = "| — | — |"
+        if m2:
+            b2 = min(m2, key=lambda r: r["us_per_call"])
+            cell = f"| {b2['schedule']} | {b2['us_per_call']:.1f} |"
+        lines.append(
+            f"| {shape} | {base['us_per_call']:.1f} | {best['schedule']} "
+            f"| {best['us_per_call']:.1f} | {speed:.2f}x {cell}")
+
+    serve = _load(SERVE_JSON)
+    lines += [
+        "",
+        "**Serving** (BENCH_serve.json):",
+        "",
+        "| op | schedule | tok/s | TTFT p50 ms | notes |",
+        "|---|---|---|---|---|",
+    ]
+    for r in serve:
+        ttft = f"{r['ttft_p50_ms']:.2f}" if "ttft_p50_ms" in r else "—"
+        notes = []
+        if "hit_rate" in r:
+            notes.append(f"hit_rate {r['hit_rate']:.2f}")
+        if "spec_accept_rate" in r:
+            notes.append(f"spec_accept {r['spec_accept_rate']:.2f}")
+        if "arrival_rate_rps" in r:
+            notes.append(f"{r['arrival_rate_rps']:.1f} req/s offered")
+        lines.append(
+            f"| {r['op']} | {r['schedule']} | {r['tok_per_s']:.0f} "
+            f"| {ttft} | {', '.join(notes) or '—'} |")
+
+    train = _load(TRAIN_JSON)
+    lines += [
+        "",
+        "**Training** (BENCH_train.json — full train steps, real tok/s):",
+        "",
+        "| schedule | tok/s | padding rate |",
+        "|---|---|---|",
+    ]
+    for r in train:
+        pad = f"{r['padding_rate']:.2f}" if "padding_rate" in r else "—"
+        lines.append(
+            f"| {r['schedule']} | {r['tok_per_s']:.0f} | {pad} |")
+    return lines
+
+
+def check_table(write: bool):
+    errs = []
+    if not os.path.exists(README):
+        return [f"{README}: missing (docs-check needs the README)"]
+    with open(README) as f:
+        text = f.read()
+    if START not in text or END not in text:
+        return [f"README.md: missing {START} / {END} markers"]
+    head, rest = text.split(START, 1)
+    current, tail = rest.split(END, 1)
+    want = "\n" + "\n".join(render_table()) + "\n"
+    if current != want:
+        if write:
+            with open(README, "w") as f:
+                f.write(head + START + want + END + tail)
+            print("# docs-check: rewrote README bench table")
+        else:
+            errs.append(
+                "README.md: bench table is stale vs the committed "
+                "BENCH_*.json — run `make docs-check WRITE=--write`")
+    return errs
+
+
+# --------------------------------------------------------- path references
+def doc_files():
+    files = [README] if os.path.exists(README) else []
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, n) for n in os.listdir(docs)
+                        if n.endswith(".md"))
+    return files
+
+def check_paths():
+    errs = []
+    for path in doc_files():
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            text = f.read()
+        seen = set()
+        for m in PATH_RE.finditer(text):
+            ref = m.group(1).rstrip(".")
+            # globs and templates aren't checkable references
+            if any(c in ref for c in "*<>{}$"):
+                continue
+            if ref in seen:
+                continue
+            seen.add(ref)
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                errs.append(f"{rel}: references missing path {ref!r}")
+    return errs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the README bench table in place")
+    args = ap.parse_args()
+
+    errs = []
+    for f in (SCAN_JSON, SERVE_JSON, TRAIN_JSON):
+        if not os.path.exists(f):
+            errs.append(f"missing committed baseline {os.path.basename(f)}")
+    if not errs:
+        errs += check_table(args.write)
+    errs += check_paths()
+
+    for e in errs:
+        print(f"# docs-check: {e}")
+    if errs:
+        sys.exit(1)
+    print(f"# docs-check: OK ({len(doc_files())} doc file(s), bench table "
+          f"in sync)")
+
+
+if __name__ == "__main__":
+    main()

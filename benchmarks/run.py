@@ -828,6 +828,134 @@ def serve_open_loop(n_requests=48, max_new=16, slots=8):
          f"pipelined prefills only buy throughput with cores to overlap)")
 
 
+def serve_cached(n_requests=24, max_new=16, slots=8):
+    """Prefix/state caching on a shared-system-prompt workload: every
+    request carries the same long declared prefix plus a short unique
+    tail (fresh tails every round — each timed request is a real
+    partial hit, not a replay). ``cache_off`` chunk-prefills the whole
+    prompt cold per request; ``cache_on`` restores the prefix's O(1)
+    state from the StateCache and prefills only the tail in a
+    smallest-bucket slab — the headline is the TTFT p50 reduction at
+    matched-or-better tok/s (the cache can only REMOVE prefill work).
+    ``cache_spec`` adds speculative decode (k=4 n-gram drafts, one verify
+    forward, trajectory rollback) on top: streams stay bit-identical
+    (asserted against cache_on inside the run) and spec_accept_rate is
+    the observable — near zero on this random-token tiny model, which is
+    the honest number; the draft source only pays off on repetitive
+    text."""
+    rounds = 3
+    prefix_len, tail = 192, 8
+    if SMOKE:
+        n_requests, max_new, slots, rounds = 8, 6, 4, 2
+        prefix_len = 48
+    print(f"# serve_cached: shared {prefix_len}-token system prompt + "
+          f"{tail}-token tails, cache off vs on vs on+spec, tiny-mamba, "
+          f"{n_requests} requests, {slots} slots, max_new={max_new}")
+    from repro.models.lm import build_model
+    from repro.launch.serve import ServeEngine
+    from repro.launch.state_cache import StateCache
+
+    cfg = _tiny_mamba()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    shared = rng.integers(1, cfg.vocab, size=prefix_len).astype(np.int32)
+    max_len = prefix_len + tail + 2 * max_new + 8
+    shape = (f"tiny-mamba_prefix{prefix_len}_reqs{n_requests}_"
+             f"slots{slots}_new{max_new}")
+    kw = dict(buckets=(32, 64, 128), max_segments=4, overlap=True,
+              chunk_rows=2)
+    caches = {"cache_on": StateCache(64 << 20),
+              "cache_spec": StateCache(64 << 20)}
+    modes = [("cache_off",
+              ServeEngine(model, params, slots, max_len, **kw)),
+             ("cache_on",
+              ServeEngine(model, params, slots, max_len,
+                          state_cache=caches["cache_on"], **kw)),
+             ("cache_spec",
+              ServeEngine(model, params, slots, max_len,
+                          state_cache=caches["cache_spec"], spec_k=4,
+                          **kw))]
+
+    def make_tails(r):
+        g = np.random.default_rng(1000 + r)
+        return [g.integers(1, cfg.vocab, size=tail).astype(np.int32)
+                for _ in range(n_requests)]
+
+    outs_by_mode = {}
+    rounds_seen = {name: 0 for name, _ in modes}
+
+    def run(eng, name, declare):
+        r = rounds_seen[name]
+        rounds_seen[name] += 1
+        prompts = [np.concatenate([shared, t]) for t in make_tails(r)]
+        rids = [eng.submit(p, max_new,
+                           prefix_len=prefix_len if declare else None)
+                for p in prompts]
+        eng.run()
+        outs_by_mode.setdefault(name, {})[r] = \
+            [eng.outputs[i] for i in rids]
+        return sum(len(eng.outputs[i]) for i in rids)
+
+    for name, eng in modes:          # warm-up: compiles + first capture
+        run(eng, name, declare=name != "cache_off")
+        eng.stats = type(eng.stats)()
+        if eng.state_cache is not None:
+            # keep the stored prefix but zero the hit/miss counters so the
+            # recorded hit_rate covers the timed rounds only
+            eng.state_cache._hits.set(0)
+            eng.state_cache._misses.set(0)
+    best, gens = interleaved_min_of_rounds(
+        [(name, (lambda name=name, eng=eng,
+                 d=(name != "cache_off"): run(eng, name, d)))
+         for name, eng in modes], rounds=rounds, warmup=0)
+    out = {}
+    for name, eng in modes:
+        dt = best[name] / 1e6
+        gen = gens[name]
+        st = eng.stats
+        pct = st.ttft_percentiles()
+        rec = {"op": "serve_cached", "shape": shape, "schedule": name,
+               "us_per_call": round(dt * 1e6, 1),
+               "tok_per_s": round(gen / dt, 1),
+               "ttft_p50_ms": round(pct.get("p50", 0.0), 2),
+               "ttft_p95_ms": round(pct.get("p95", 0.0), 2),
+               "prefill_ms": round(st.prefill_ms / rounds, 2),
+               "chunk_ms": round(st.chunk_ms / rounds, 2),
+               "decode_ms": round(st.decode_ms / rounds, 2),
+               "host_ms": round(st.host_ms / rounds, 2)}
+        sc = eng.state_cache
+        if sc is not None:
+            rec["hit_rate"] = round(sc.hits / max(sc.lookups, 1), 3)
+            rec["cache_entries"] = len(sc)
+            rec["cache_mb"] = round(sc.nbytes / 2**20, 2)
+        if name == "cache_spec":
+            rec["spec_accept_rate"] = round(eng.spec_accept_rate, 4)
+            rec["spec_rounds"] = int(eng._spec_rounds.value)
+        _row(f"serve_cached/{name}", dt * 1e6,
+             f"{gen / dt:.0f} tok/s ttft p50 {pct.get('p50', 0):.2f}ms"
+             + (f" hit_rate {rec['hit_rate']:.2f}" if sc else ""))
+        out[name] = rec
+        SERVE_RECORDS.append(rec)
+    # bit-identity evidence: greedy streams must not depend on the cache
+    # or on speculation — same tails, same tokens, every timed round
+    for r in range(rounds):
+        assert outs_by_mode["cache_on"][r + 1] == \
+            outs_by_mode["cache_off"][r + 1], "cache changed tokens"
+        assert outs_by_mode["cache_spec"][r + 1] == \
+            outs_by_mode["cache_off"][r + 1], "spec changed tokens"
+    print("# serve_cached identity evidence: cache_on and cache_spec "
+          "streams are token-identical to cache_off in every timed round")
+    off, on = out["cache_off"], out["cache_on"]
+    red = off["ttft_p50_ms"] / max(on["ttft_p50_ms"], 1e-9)
+    _row("serve_cached/ttft_p50_reduction", red * 100,
+         f"{red:.2f}x lower TTFT p50 with the prefix cache "
+         f"({off['ttft_p50_ms']:.2f} -> {on['ttft_p50_ms']:.2f}ms) at "
+         f"{on['tok_per_s'] / max(off['tok_per_s'], 1e-9):.2f}x tok/s "
+         f"(>= 2x TTFT expected: the {prefix_len}-token prefix restore "
+         f"replaces its chunked prefill)")
+
+
 # ---------------------------------------------------------------------------
 # §5 discussion — packing policies
 # ---------------------------------------------------------------------------
@@ -895,6 +1023,7 @@ ALL = {"fig2": fig2_ssm_operator_profile,
        "roof": roofline_table,
        "serve": serve_throughput,
        "serve_open": serve_open_loop,
+       "serve_cached": serve_cached,
        "train": train_throughput}
 
 

@@ -222,6 +222,45 @@ def needs_chunking(length: int, buckets: Sequence[int]) -> bool:
     return length > max(buckets)
 
 
+def slab_width(need: int, buckets: Sequence[int], chunk_size: int) -> int:
+    """Width of the next chunked-prefill slab: the smallest bucket-aligned
+    candidate ≥ ``need`` (tokens the hungriest chunk row wants this round),
+    capped at ``chunk_size``. Candidates are the prefill buckets ≤
+    chunk_size plus chunk_size itself, so compile count stays bounded by
+    the bucket list — a 16-token cached-prefix SUFFIX prefills in a
+    smallest-bucket slab instead of paying a full chunk_size forward,
+    which is where the prefix cache's TTFT win comes from."""
+    cands = sorted({b for b in buckets if b <= chunk_size} | {chunk_size})
+    for c in cands:
+        if c >= need:
+            return c
+    return chunk_size
+
+
+def suffix_slab(entries, num_rows: int, width: int):
+    """Build one fixed-shape (num_rows, width) chunk-lane slab batch.
+
+    ``entries`` maps row → (tokens, offset, take): the slab carries
+    ``tokens[offset : offset + take]`` for that row with GLOBAL positions
+    (``prefill_chunk`` resumes mid-prompt — for a cached prefix the first
+    slab starts at offset = prefix length, so only the suffix is ever
+    prefilled). Unoccupied rows and the tail beyond ``take`` are
+    segment_ids-0 padding — exact state no-ops in every sequence-wise
+    operator. Returns the tokens/positions/segment_ids batch dict."""
+    toks = np.zeros((num_rows, width), np.int32)
+    pos = np.zeros((num_rows, width), np.int32)
+    seg = np.zeros((num_rows, width), np.int32)
+    for i, (tokens, off, take) in entries.items():
+        if not 0 <= take <= width:
+            raise ValueError(f"row {i}: take {take} outside slab width "
+                             f"{width}")
+        toks[i, :take] = tokens[off:off + take]
+        pos[i, :take] = np.arange(off, off + take)
+        seg[i, :take] = 1
+    return {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos),
+            "segment_ids": jnp.asarray(seg)}
+
+
 # ---------------------------------------------------------------------------
 # pack_with_split — paper §5 future work (beyond-paper feature)
 # ---------------------------------------------------------------------------

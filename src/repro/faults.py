@@ -61,6 +61,15 @@ class FaultPlan:
     poison_chunk     {chunk round: [row, …]} — NaN those chunk rows' carried
                      cache state after the round (``poison_cache_rows``),
                      modelling a corrupted chunk forward at a boundary.
+    drop_cache       index of the StateCache LOOKUP before which the whole
+                     prefix cache is cleared (0-based over
+                     ``cache.hits + cache.misses``) — the forced-evict
+                     seam: a would-be hit becomes a cold miss and must
+                     fall back to a full (chunked) prefill.
+    poison_cache_hit [hit index, …] — NaN the restored state of those
+                     cache HITS (0-based over ``cache.hits``), modelling a
+                     corrupted stored state; the guard rails must
+                     quarantine the request, never stream from it.
     poison_value     what the poison injects (NaN by default; ±Inf also
                      legal — anything non-finite).
     kill_at_step     raise ``EngineKilled`` before this decode step.
@@ -74,6 +83,8 @@ class FaultPlan:
     fail_chunk: Optional[int] = None
     poison_chunk: Dict[int, List[int]] = \
         dataclasses.field(default_factory=dict)
+    drop_cache: Optional[int] = None
+    poison_cache_hit: List[int] = dataclasses.field(default_factory=list)
     poison_value: float = float("nan")
     kill_at_step: Optional[int] = None
 
@@ -108,6 +119,12 @@ class FaultPlan:
     def chunk_poison(self, cidx: int) -> Optional[List[int]]:
         return self.poison_chunk.get(cidx)
 
+    def drops_cache(self, lidx: int) -> bool:
+        return self.drop_cache is not None and lidx == self.drop_cache
+
+    def cache_hit_poison(self, hidx: int) -> bool:
+        return hidx in self.poison_cache_hit
+
     def kills(self, step: int) -> bool:
         return self.kill_at_step is not None and step == self.kill_at_step
 
@@ -115,12 +132,13 @@ class FaultPlan:
         """Plans that poison numerics only observable through the engine's
         finiteness probes (the engine auto-enables its guard for them)."""
         return bool(self.poison_prefill or self.poison_decode
-                    or self.poison_chunk)
+                    or self.poison_chunk or self.poison_cache_hit)
 
     def empty(self) -> bool:
         return (self.fail_prefill is None and not self.delay_prefill
                 and not self.poison_prefill and not self.poison_decode
                 and self.fail_chunk is None and not self.poison_chunk
+                and self.drop_cache is None and not self.poison_cache_hit
                 and self.kill_at_step is None)
 
     # ---------------------------------------------------------- generation
@@ -128,13 +146,16 @@ class FaultPlan:
     def random(cls, seed: int, *, max_prefills: int = 4,
                max_steps: int = 30, num_slots: int = 4,
                prefill_rows: int = 2, max_segments: int = 2,
-               chunk_rows: int = 0,
+               chunk_rows: int = 0, cache_lookups: int = 0,
                allow_kill: bool = False) -> "FaultPlan":
         """Randomized-but-seeded plan for the chaos lane: each fault
         category fires with probability 1/2, placed uniformly inside the
         given workload envelope. Same seed → same plan, on any machine.
-        ``allow_kill`` is opt-in because a kill needs the caller to
-        orchestrate snapshot/restore around it."""
+        ``cache_lookups`` > 0 opts the StateCache seams (drop_cache /
+        poison_cache_hit) into the envelope — gated so pre-cache chaos
+        seeds keep drawing the exact same plans. ``allow_kill`` is opt-in
+        because a kill needs the caller to orchestrate snapshot/restore
+        around it."""
         rng = np.random.default_rng(seed)
         plan = cls()
         if rng.random() < 0.5:
@@ -155,6 +176,10 @@ class FaultPlan:
         if chunk_rows > 0 and rng.random() < 0.5:
             plan.poison_chunk = {int(rng.integers(0, max_prefills)):
                                  [int(rng.integers(0, chunk_rows))]}
+        if cache_lookups > 0 and rng.random() < 0.5:
+            plan.drop_cache = int(rng.integers(0, cache_lookups))
+        if cache_lookups > 0 and rng.random() < 0.5:
+            plan.poison_cache_hit = [int(rng.integers(0, cache_lookups))]
         if rng.random() < 0.5:
             plan.poison_value = float(rng.choice([np.nan, np.inf, -np.inf]))
         if allow_kill and rng.random() < 0.5:

@@ -99,6 +99,25 @@ session *is* a few KB of SSM/conv/KV state, not a paged KV region):
   have produced (decode is deterministic given the restored state, and
   per-request sampling keys make streams slot-independent).
 
+Finally, two O(1)-state exploits ride on the same snapshot leaf layout
+(full lifecycle walkthrough in docs/serving.md):
+
+* **Prefix caching** (``state_cache=`` / ``cache_bytes=``,
+  launch/state_cache.py): every landed prompt's post-prefill state (ONE
+  cache row + end logits) is stored in a host-side LRU keyed by a prefix
+  hash; ``submit(..., prefix_len=N)`` declares a shared system prompt so
+  the capture boundary sits mid-prompt. A later request restores the
+  longest cached prefix and prefills only its suffix (chunk-lane slabs,
+  bucket-quantized widths) — or, on a whole-prompt hit, starts decoding
+  with NO forward at all. Token streams are bit-identical to cold
+  prefills (chunked ≡ unchunked + per-request key streams).
+* **Speculative decode** (``spec_k=``): n-gram prompt-copy drafts are
+  verified k-at-a-time by one scan-of-decode-steps forward
+  (``model.decode_verify``); rejected suffixes roll back via the verify's
+  own state trajectory (``model.spec_rollback``). Greedy streams are
+  bit-identical to one-token-at-a-time decoding by construction;
+  ``spec.accept_rate`` is the observable payoff.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba-110m --tiny \
       --slots 8 --requests 24 --new-tokens 16 --temperature 0.8 --top-k 40
 """
@@ -117,6 +136,8 @@ from repro.configs.base import get_config
 from repro.core import packing
 from repro.faults import (EngineKilled, FaultPlan, poison_cache_rows,
                           poison_states)
+from repro.launch.state_cache import (StateCache, cache_row, load_cache_row,
+                                      row_finite, state_row)
 from repro.models import blocks as B
 from repro.models.lm import build_model
 from repro.obs import (MetricsRegistry, Obs, percentiles, profiler_session)
@@ -142,6 +163,8 @@ class Request:
     top_p: float = 1.0         # 1 = full mass
     submit_t: float = 0.0      # engine clock at submit()
     deadline_ms: Optional[float] = None   # total budget from submit_t
+    prefix_len: Optional[int] = None      # declared shared-prefix boundary
+    #                                       (a StateCache capture/reuse hint)
 
 
 class _HistList(list):
@@ -298,7 +321,10 @@ class ServeEngine:
                  chunk_rows: int = 1,
                  chunk_size: Optional[int] = None,
                  max_prompt_len: Optional[int] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 state_cache: Optional[StateCache] = None,
+                 cache_bytes: Optional[int] = None,
+                 spec_k: int = 0, spec_ngram: int = 3):
         self.model = model
         self.params = params
         # telemetry: metrics are always on (ServeStats is a view over
@@ -328,6 +354,20 @@ class ServeEngine:
         self.max_inflight_prefills = max(1, int(max_inflight_prefills))
         self.bucket_policy = bucket_policy
         self.max_prompt_len = max_prompt_len
+        # prefix/state caching (launch/state_cache.py): a host-side LRU of
+        # single-row post-prefix states. Pass a StateCache to share one
+        # across engines (it survives crash-recovery), or just a byte
+        # budget (``cache_bytes``) to have the engine build its own on the
+        # obs metrics registry.
+        if state_cache is None and cache_bytes is not None:
+            state_cache = StateCache(cache_bytes, registry=self.obs.metrics)
+        self.state_cache = state_cache
+        self._cache_memo: Dict[int, int] = {}   # rid → miss generation
+        # speculative decode: k-token n-gram/prompt-copy drafts verified by
+        # ONE scan-of-decode-steps forward; rejects roll the per-slot state
+        # back via the verify's own trajectory (greedy slots only)
+        self.spec_k = max(0, int(spec_k))
+        self.spec_ngram = max(1, int(spec_ngram))
         # chunked prefill: prompts longer than the largest bucket are fed
         # through a SIDE cache in fixed (chunk_rows, chunk_size) slabs —
         # the main decode cache can't host a partial prompt because the
@@ -359,7 +399,12 @@ class ServeEngine:
             from repro.tune import warm_for_config
             shapes = [(prefill_rows, b) for b in self.buckets]
             if self.chunk_enabled:
-                shapes.append((self.chunk_rows, self.chunk_size))
+                # the chunk lane's slab widths are dynamic now: any bucket
+                # ≤ chunk_size (packing.slab_width), not just the full slab
+                for w in sorted({b for b in self.buckets
+                                 if b <= self.chunk_size}
+                                | {self.chunk_size}):
+                    shapes.append((self.chunk_rows, w))
             warm_for_config(cfg, shapes)
 
         self.cache = model.init_cache(num_slots, max_len)
@@ -409,6 +454,24 @@ class ServeEngine:
         self._scatter = jax.jit(model.scatter_into_cache,
                                 donate_argnums=(0,))
         self._sample_flat = jax.jit(model.sample_tokens)
+        # cached-lane row restore: ONE jitted writer shared by the decode
+        # cache and the chunk cache (idx is traced; two cache shapes → two
+        # compiles, independent of how many prefixes get restored)
+        self._load_row = jax.jit(load_cache_row, donate_argnums=(0,))
+        if self.spec_k:
+            # no cache donation here: the verify's trajectory output keeps
+            # K+1 cache copies alive, so in-place reuse is impossible
+            self._spec_verify = jax.jit(model.decode_verify)
+            self._spec_rollback = jax.jit(model.spec_rollback)
+        m = self.obs.metrics
+        self._spec_rounds = m.counter(
+            "spec.rounds", help="speculative verify rounds issued")
+        self._spec_proposed = m.counter(
+            "spec.proposed", help="draft tokens proposed")
+        self._spec_accepted = m.counter(
+            "spec.accepted", help="draft tokens accepted by verify")
+        self._spec_rate = m.gauge(
+            "spec.accept_rate", help="accepted/proposed, cumulative")
         self._prefill = jax.jit(
             functools.partial(model.prefill_packed, max_len=max_len))
         self._wave_prefill = jax.jit(
@@ -439,6 +502,7 @@ class ServeEngine:
         self.chunk_req: List[Optional[Request]] = [None] * self.chunk_rows
         self.chunk_off = [0] * self.chunk_rows    # prompt tokens consumed
         self.chunk_slot = [-1] * self.chunk_rows  # reserved decode slot
+        self.chunk_capture = [-1] * self.chunk_rows  # StateCache boundary
 
         self.queue: collections.deque = collections.deque()
         self.slot_req: List[Optional[Request]] = [None] * num_slots
@@ -456,6 +520,14 @@ class ServeEngine:
         self._next_rid = 0
 
     @property
+    def spec_accept_rate(self) -> float:
+        """Cumulative accepted/proposed draft-token ratio (0.0 before any
+        speculative round) — also exported as the ``spec.accept_rate``
+        gauge."""
+        p = self._spec_proposed.value
+        return self._spec_accepted.value / p if p else 0.0
+
+    @property
     def _inflight(self) -> Optional[dict]:
         """Oldest pending prefill (None when the pool is empty) — the
         pre-pool engine exposed exactly one; tests and callers keep that
@@ -466,8 +538,17 @@ class ServeEngine:
     def submit(self, tokens, max_new: int, eos: Optional[int] = None,
                temperature: float = 0.0, top_k: int = 0,
                top_p: float = 1.0, deadline_ms: Optional[float] = None,
+               prefix_len: Optional[int] = None,
                rid: Optional[int] = None) -> int:
         """Enqueue one request; returns its rid.
+
+        ``prefix_len`` declares that ``tokens[:prefix_len]`` is a SHARED
+        prefix (a system prompt): with a ``state_cache`` configured, the
+        first such request's post-prefix state is captured at that exact
+        boundary and every later request carrying the same prefix restores
+        it and prefills only its suffix. Undeclared prompts still profit —
+        any full prompt already decoded is itself a cached prefix — but
+        only a declaration puts the capture boundary mid-prompt.
 
         ``deadline_ms`` bounds submit→completion: a request still queued,
         still in a prefill, or still decoding when its budget runs out is
@@ -515,6 +596,12 @@ class ServeEngine:
             raise ValueError(f"top_p must be in (0, 1], got {top_p}")
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if prefix_len is not None and not 1 <= prefix_len <= len(tokens):
+            raise ValueError(
+                f"prefix_len {prefix_len} outside [1, {len(tokens)}] — it "
+                f"marks how many LEADING prompt tokens form the shareable "
+                f"prefix, so it must cover at least one token and at most "
+                f"the whole prompt")
         if rid is not None:
             if rid < 0:
                 raise ValueError(f"rid must be >= 0, got {rid}")
@@ -545,7 +632,7 @@ class ServeEngine:
         self.queue.append(Request(rid, tokens, max_new,
                                   self.eos if eos is None else eos,
                                   temperature, int(top_k), top_p,
-                                  now, deadline_ms))
+                                  now, deadline_ms, prefix_len))
         self.outputs[rid] = []
         self.status[rid] = "queued"
         self._span_to(rid, "queued", prompt=len(tokens), max_new=max_new)
@@ -644,9 +731,15 @@ class ServeEngine:
 
     def _packable(self) -> List[Request]:
         """Queued requests the PACKED prefill path serves, FIFO. Longer
-        prompts stay queued for the chunk lane and never block these."""
+        prompts stay queued for the chunk lane and never block these.
+        Declared-prefix requests belong to the cached lane when a
+        StateCache and the chunk lane are both available — only the chunk
+        lane can cut the slab stream at the declared boundary to capture
+        (or resume from) the prefix state."""
         Lmax = self.buckets[-1]
-        return [r for r in self.queue if len(r.tokens) <= Lmax]
+        cached_lane = self.state_cache is not None and self.chunk_enabled
+        return [r for r in self.queue if len(r.tokens) <= Lmax
+                and not (cached_lane and r.prefix_len)]
 
     def _admission_due(self, free: List[int],
                        head: Optional[Request]) -> bool:
@@ -827,7 +920,7 @@ class ServeEngine:
             self.slot_pending[slot_of[qi][0]] = True
         inf = {
             "tok": flat_tok, "keys": keys1, "states": states,
-            "seg_lens": seg_lens, "src": jnp.asarray(src),
+            "logits": flat_lg, "seg_lens": seg_lens, "src": jnp.asarray(src),
             "dst": jnp.asarray(dst), "admitted": admitted,
             "slot_of": slot_of, "temp": temp, "topk": topk, "topp": topp,
             "steps_waited": 0, "pidx": pidx, "probes": 0}
@@ -924,6 +1017,12 @@ class ServeEngine:
                                 f"{req.rid} (prefill {inf['pidx']}, row "
                                 f"{r}, segment {s}) — quarantined")
                 continue
+            if self.state_cache is not None:
+                # every landed prompt doubles as a cached prefix — the
+                # packed path's contribution to the StateCache
+                self._insert_cache(req.tokens, len(req.tokens),
+                                   state_row(inf["states"], r, s),
+                                   inf["logits"][k])
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new
             self.slot_last_t[slot] = now
@@ -947,6 +1046,7 @@ class ServeEngine:
             self.slot_pending[slot] = False
         self.chunk_req[row] = None
         self.chunk_slot[row] = -1
+        self.chunk_capture[row] = -1
 
     def _chunk_claims(self):
         """Assign queued over-bucket prompts to free chunk rows (each also
@@ -954,10 +1054,14 @@ class ServeEngine:
         take it out from under a half-consumed prompt)."""
         claimed = np.zeros(self.chunk_rows, bool)
         Lmax = self.buckets[-1]
+        cached_lane = self.state_cache is not None
         for row in range(self.chunk_rows):
             if self.chunk_req[row] is not None:
                 continue
-            nxt = next((r for r in self.queue if len(r.tokens) > Lmax),
+            # declared-prefix prompts are claimed by _cache_admit (which
+            # also decides the capture boundary / restored offset)
+            nxt = next((r for r in self.queue if len(r.tokens) > Lmax
+                        and not (cached_lane and r.prefix_len)),
                        None)
             if nxt is None:
                 break
@@ -980,6 +1084,157 @@ class ServeEngine:
             fr = jnp.asarray(claimed)
             self.chunk_cache = self._reset_rows(self.chunk_cache, fr)
             self.chunk_clen = jnp.where(fr, 0, self.chunk_clen)
+
+    # --------------------------------------------------------- prefix cache
+    def _insert_cache(self, tokens, prefix_len: int, row, logits):
+        """Store one single-row state tree in the StateCache, with the
+        insert-side guard: a non-finite state is never cached — a poisoned
+        entry would turn one fault into a failure for every request that
+        shares the prefix."""
+        lg = np.asarray(logits, np.float32)
+        row = jax.device_get(row)
+        if not row_finite(row, lg):
+            return
+        e = self.state_cache.insert(tokens, prefix_len, row, lg)
+        if e is not None:
+            self._tr.instant("cache_insert", track="engine",
+                             prefix=int(prefix_len), bytes=e.nbytes)
+
+    def _claim_row(self, req: Request, row: int, slot: int, off: int,
+                   capture: int = -1, state=None):
+        """Claim a chunk row (and its reserved decode slot) for ``req``
+        starting at prompt offset ``off`` — either cold (``state=None``:
+        the row is wiped to init_cache values) or resuming from a restored
+        cache entry (``state``: a single-row tree; the carried length
+        starts at the prefix length). ``capture > off`` marks a declared
+        prefix boundary: _chunk_step cuts the slab stream there and
+        inserts the post-boundary state into the StateCache as it goes
+        by."""
+        self.queue = collections.deque(
+            r for r in self.queue if r.rid != req.rid)
+        self.status[req.rid] = "active"
+        self.slot_pending[slot] = True
+        self.chunk_req[row] = req
+        self.chunk_off[row] = off
+        self.chunk_slot[row] = slot
+        self.chunk_capture[row] = capture if capture > off else -1
+        mask = np.zeros(self.chunk_rows, bool)
+        mask[row] = True
+        mj = jnp.asarray(mask)
+        if state is None:
+            self.chunk_cache = self._reset_rows(self.chunk_cache, mj)
+            self.chunk_clen = jnp.where(mj, 0, self.chunk_clen)
+        else:
+            self.chunk_cache = self._load_row(self.chunk_cache, state, row)
+            self.chunk_clen = jnp.where(mj, off, self.chunk_clen)
+        self._span_to(req.rid, "chunk", row=row, slot=slot,
+                      prompt=len(req.tokens), cached_prefix=off)
+
+    def _activate_full_hit(self, req: Request, slot: int, state, entry):
+        """Zero-forward admission on a whole-prompt cache hit: restore the
+        stored post-prompt state straight into a free decode slot and
+        sample the first token from the STORED end-of-prompt logits with
+        the request's own (seed, rid) key stream — bit-identical to what a
+        cold prefill of the same prompt would emit, without running one."""
+        self.queue = collections.deque(
+            r for r in self.queue if r.rid != req.rid)
+        now = self._clock()
+        if self._deadline_over(req, now):
+            self._terminate(req.rid, "expired",
+                            f"deadline {req.deadline_ms:.0f}ms exceeded "
+                            f"while queued")
+            return
+        self.cache = self._load_row(self.cache, state, slot)
+        self.cache_len = self.cache_len.at[slot].set(entry.prefix_len)
+        keys0 = B.request_keys(self.sample_seed,
+                               np.asarray([req.rid], np.int32))
+        tok, keys1 = self._sample_flat(
+            jnp.asarray(entry.logits)[None], keys0,
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+            jnp.asarray([req.top_p], jnp.float32))
+        self.cur_tok = self.cur_tok.at[slot].set(tok)
+        self.slot_keys = self.slot_keys.at[slot].set(keys1[0])
+        self.slot_temp = self.slot_temp.at[slot].set(req.temperature)
+        self.slot_topk = self.slot_topk.at[slot].set(req.top_k)
+        self.slot_topp = self.slot_topp.at[slot].set(req.top_p)
+        self.status[req.rid] = "active"
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new
+        self.slot_last_t[slot] = now
+        self.stats.ttft_ms.append((now - req.submit_t) * 1e3)
+        self._span_to(req.rid, "decode", slot=slot)
+        self._tr.instant("first_token", track=f"req{req.rid}", rid=req.rid)
+        self._finish_token(slot, int(np.asarray(tok)[0]))
+
+    def _cache_admit(self):
+        """Cached-lane admission, run before packed refill each step.
+
+        For every queued request (FIFO) the StateCache is consulted for
+        its longest stored prefix:
+
+        * FULL-prompt hit → ``_activate_full_hit`` (no forward at all);
+        * partial hit → a chunk row is claimed seeded with the restored
+          state at offset P, so only the suffix is prefilled;
+        * declared-prefix miss → a chunk row is claimed cold with the
+          capture boundary set, so the first request with a new system
+          prompt populates the cache for everyone behind it;
+        * undeclared miss → memoized against the cache's generation (no
+          re-hashing until the cache changes) and left for the packed /
+          chunk lanes.
+
+        The fault seams live here too: ``drop_cache`` clears the cache
+        before the indexed lookup, ``poison_cache_hit`` corrupts the
+        restored state of the indexed hit (which the guard rails must
+        quarantine downstream)."""
+        sc = self.state_cache
+        if sc is None or not self.queue:
+            return
+        for req in list(self.queue):
+            free = self._free_slots()
+            if not free:
+                return
+            if self.chunk_enabled:
+                rows = [i for i in range(self.chunk_rows)
+                        if self.chunk_req[i] is None]
+                if not rows:
+                    return
+            else:
+                rows = []
+            declared = int(req.prefix_len or 0)
+            if not declared and \
+                    self._cache_memo.get(req.rid) == sc.generation:
+                continue               # known miss and the cache unchanged
+            if self.faults is not None and \
+                    self.faults.drops_cache(sc.lookups):
+                sc.clear()
+            entry = sc.lookup(req.tokens)
+            if entry is None:
+                self._cache_memo[req.rid] = sc.generation
+                if not declared or not self.chunk_enabled:
+                    continue           # packed / chunk lanes serve it cold
+                self._claim_row(req, rows[0], free[0], off=0,
+                                capture=declared)
+                continue
+            hidx = sc.hits - 1         # the lookup above counted this hit
+            state = sc.device_state(entry)
+            if self.faults is not None and self.faults.cache_hit_poison(hidx):
+                state = poison_cache_rows(state, [0],
+                                          self.faults.poison_value)
+            P = entry.prefix_len
+            self._tr.instant("cache_hit", track=f"req{req.rid}",
+                             rid=req.rid, prefix=P)
+            if P == len(req.tokens):
+                self._activate_full_hit(req, free[0], state, entry)
+                continue
+            if not self.chunk_enabled:
+                # a suffix prefill needs the chunk lane's carried state;
+                # without it the packed lane serves the request cold
+                self._cache_memo[req.rid] = sc.generation
+                continue
+            self._claim_row(req, rows[0], free[0], off=P,
+                            capture=declared if declared > P else -1,
+                            state=state)
 
     def _chunk_step(self):
         """One chunked-prefill round: claim rows for queued over-bucket
@@ -1021,22 +1276,28 @@ class ServeEngine:
                                 f"(injected fault)")
                 self._free_chunk_row(i)
             return
-        T = self.chunk_size
-        toks = np.zeros((self.chunk_rows, T), np.int32)
-        pos = np.zeros((self.chunk_rows, T), np.int32)
-        seg = np.zeros((self.chunk_rows, T), np.int32)
+        # per-row consumption stop: a declared capture boundary CUTS the
+        # slab stream so the carried state (and the slab's end logits) at
+        # the cut are exactly the post-prefix artifacts the cache stores
+        stops = {}
+        for i in rows:
+            cap = self.chunk_capture[i]
+            stops[i] = cap if cap > self.chunk_off[i] \
+                else len(self.chunk_req[i].tokens)
+        # slab width is bucket-quantized to the round's real need (a warm
+        # suffix round compiles/runs a small slab, not the full chunk_size
+        # one) — compile shapes stay bounded by the bucket list
+        need = max(min(self.chunk_size, stops[i] - self.chunk_off[i])
+                   for i in rows)
+        T = packing.slab_width(need, self.buckets, self.chunk_size)
+        entries = {}
         took = {}
         for i in rows:
-            req = self.chunk_req[i]
             off = self.chunk_off[i]
-            n = min(T, len(req.tokens) - off)
-            toks[i, :n] = req.tokens[off:off + n]
-            pos[i, :n] = np.arange(off, off + n)
-            seg[i, :n] = 1
+            n = min(T, stops[i] - off)
+            entries[i] = (self.chunk_req[i].tokens, off, n)
             took[i] = n
-        batch = {"tokens": jnp.asarray(toks),
-                 "positions": jnp.asarray(pos),
-                 "segment_ids": jnp.asarray(seg)}
+        batch = packing.suffix_slab(entries, self.chunk_rows, T)
         csid = self._tr.start("chunk_slab", track="engine", round=cidx,
                               rows=len(rows), tokens=sum(took.values()))
         logits, self.chunk_cache, self.chunk_clen = self._chunk_fn(
@@ -1049,6 +1310,17 @@ class ServeEngine:
             if prs:
                 self.chunk_cache = poison_cache_rows(
                     self.chunk_cache, prs, self.faults.poison_value)
+        if self.state_cache is not None:
+            for i in rows:
+                cap = self.chunk_capture[i]
+                if cap >= 0 and self.chunk_off[i] + took[i] >= cap:
+                    # the slab stream was cut at the boundary, so row i's
+                    # carried state IS the post-prefix state and logits[i]
+                    # are the end-of-prefix logits — capture both
+                    self._insert_cache(self.chunk_req[i].tokens, cap,
+                                       cache_row(self.chunk_cache, i),
+                                       logits[i])
+                    self.chunk_capture[i] = -1
         finishing = []
         for i in rows:
             self.chunk_off[i] += took[i]
@@ -1118,6 +1390,12 @@ class ServeEngine:
                                 f"request {req.rid} (chunk round {cidx}, "
                                 f"row {i}) — quarantined")
                 continue
+            if self.state_cache is not None:
+                # the finished prompt is itself a cached prefix: a later
+                # identical prompt becomes a zero-forward full hit
+                self._insert_cache(req.tokens, len(req.tokens),
+                                   cache_row(self.chunk_cache, i),
+                                   logits[i])
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new
             self.slot_last_t[slot] = now
@@ -1128,7 +1406,141 @@ class ServeEngine:
                              rid=req.rid)
             self._finish_token(slot, int(first[i]))
 
+    # --------------------------------------------------- speculative decode
+    def _spec_draft(self):
+        """Propose up to ``spec_k`` draft tokens per active slot by n-gram
+        prompt copy: find the most recent earlier occurrence of the
+        context's trailing g-gram (g from ``spec_ngram`` down to 1, search
+        capped at the last 512 context tokens) and copy the tokens that
+        followed it. Free — no model call — and strong exactly where
+        speculation pays: prompts that quote, template, or repeat.
+        Returns ((num_slots, spec_k) int32 drafts, (num_slots,) bool
+        have-a-draft)."""
+        K = self.spec_k
+        draft = np.zeros((self.num_slots, K), np.int32)
+        have = np.zeros(self.num_slots, bool)
+        for i in self._active_slots():
+            req = self.slot_req[i]
+            ctx = [int(t) for t in req.tokens] + self.outputs[req.rid]
+            n = len(ctx)
+            for g in range(min(self.spec_ngram, n - 1), 0, -1):
+                pat = ctx[n - g:]
+                hit = -1
+                for e in range(n - 2, max(g - 2, n - 2 - 512), -1):
+                    if ctx[e - g + 1:e + 1] == pat:
+                        hit = e
+                        break
+                if hit >= 0:        # hit ≤ n-2, so ≥ 1 token follows it
+                    cont = ctx[hit + 1:hit + 1 + K]
+                    draft[i, :len(cont)] = cont
+                    have[i] = True
+                    break
+        return draft, have
+
+    def _spec_round(self, active: List[int], step_idx: int) -> bool:
+        """One speculative round: draft ``spec_k`` tokens per slot, verify
+        EVERY slot with one scan-of-decode-steps forward
+        (``model.decode_verify`` — the same per-token computation as the
+        plain greedy step, so token streams are bit-identical by
+        construction), commit each slot's accepted draft prefix plus the
+        verify's own next token, and roll each slot's state back to its
+        post-commit trajectory entry (``model.spec_rollback``). Greedy
+        slots only — the caller falls back to the plain step when any
+        active slot samples, or when no slot has a draft (returns False:
+        a verify round would then be pure overhead)."""
+        draft, have = self._spec_draft()
+        if not have.any():
+            return False
+        K = self.spec_k
+        rsid = self._tr.start("spec_round", track="engine", step=step_idx,
+                              active=len(active), k=K)
+        toks, fins, traj = self._spec_verify(
+            self.params, self.cache, self.cur_tok, self.cache_len,
+            jnp.asarray(draft))
+        toks_np = np.asarray(toks)
+        fin_np = np.asarray(fins) if self.guard else None
+        cur_np = np.asarray(self.cur_tok[:, 0]).copy()
+        idx = np.zeros(self.num_slots, np.int32)
+        adv = np.zeros(self.num_slots, np.int32)
+        commits: Dict[int, List[int]] = {}
+        bad: Dict[int, bool] = {}
+        proposed = accepted = 0
+        for i in active:
+            req = self.slot_req[i]
+            a = 0
+            while a < K and draft[i, a] == toks_np[i, a]:
+                a += 1
+            if have[i]:
+                proposed += K
+                accepted += a
+            # commit t_1..t_{a+1}: the a verified draft tokens plus the
+            # verify's own next token — truncated at EOS / the slot's
+            # remaining budget / (guard on) the first non-finite step
+            emit: List[int] = []
+            bad[i] = False
+            for t in toks_np[i, :a + 1]:
+                if fin_np is not None and not fin_np[i, len(emit)]:
+                    bad[i] = True
+                    break
+                emit.append(int(t))
+                if int(t) == req.eos or len(emit) >= self.slot_remaining[i]:
+                    break
+            commits[i] = emit
+            if emit:
+                idx[i] = len(emit) - 1
+                adv[i] = len(emit)
+                cur_np[i] = emit[-1]
+        # rollback: select each row's post-commit state from the verify's
+        # cache trajectory — rejected draft suffixes never touch the cache
+        self.cache = self._spec_rollback(traj, jnp.asarray(idx))
+        self.cache_len = self.cache_len + jnp.asarray(adv)
+        self.cur_tok = jnp.asarray(cur_np)[:, None]
+        self.stats.decode_steps += 1
+        for inf in self._prefill_pool:
+            inf["steps_waited"] += 1
+        self._spec_rounds.inc()
+        self._spec_proposed.inc(proposed)
+        self._spec_accepted.inc(accepted)
+        if self._spec_proposed.value:
+            self._spec_rate.set(self._spec_accepted.value
+                                / self._spec_proposed.value)
+        now = self._clock()
+        for i in active:
+            emit = commits[i]
+            if emit:
+                # one verify forward produced len(emit) tokens — one ITL
+                # sample per slot per round (the latency the client saw)
+                self.stats.itl_ms.append((now - self.slot_last_t[i]) * 1e3)
+                self.slot_last_t[i] = now
+                for t in emit:
+                    if self.slot_req[i] is None:
+                        break
+                    self._finish_token(i, t)
+            if bad[i] and self.slot_req[i] is not None:
+                rid = self.slot_req[i].rid
+                self.slot_req[i] = None
+                self.stats.quarantined += 1
+                self._tr.instant("quarantined", track=f"req{rid}", rid=rid)
+                self._terminate(rid, "failed",
+                                f"non-finite verify logits for request "
+                                f"{rid} at spec round {step_idx} (slot {i})"
+                                f" — quarantined")
+        self._expire_active(now)
+        self._tr.finish(rsid)
+        return True
+
     # --------------------------------------------------------------- decode
+    def _expire_active(self, now: float):
+        """Per-step deadline enforcement over the live decode slots."""
+        for i in self._active_slots():
+            req = self.slot_req[i]
+            if self._deadline_over(req, now):
+                self.slot_req[i] = None
+                self._terminate(req.rid, "expired",
+                                f"deadline {req.deadline_ms:.0f}ms exceeded "
+                                f"mid-decode (kept "
+                                f"{len(self.outputs[req.rid])} tokens)")
+
     def _decode_step(self):
         """One fused decode+sample step over every slot; per-slot
         termination, inter-token latency accounting, and (guard on) the
@@ -1142,9 +1554,12 @@ class ServeEngine:
             # persisted by the last snapshot() is gone
             raise EngineKilled(f"fault plan killed the engine before "
                                f"decode step {step_idx}")
+        sampling = any(self.slot_req[i].temperature > 0.0 for i in active)
+        if self.spec_k and not sampling and \
+                self._spec_round(active, step_idx):
+            return
         dsid = self._tr.start("decode_step", track="engine", step=step_idx,
                               active=len(active))
-        sampling = any(self.slot_req[i].temperature > 0.0 for i in active)
         fin = None
         if self.guard:
             pv = None if self.faults is None else \
@@ -1197,14 +1612,7 @@ class ServeEngine:
             self.stats.itl_ms.append((now - self.slot_last_t[i]) * 1e3)
             self.slot_last_t[i] = now
             self._finish_token(i, int(toks[i]))
-        for i in self._active_slots():       # per-step deadline enforcement
-            req = self.slot_req[i]
-            if self._deadline_over(req, now):
-                self.slot_req[i] = None
-                self._terminate(req.rid, "expired",
-                                f"deadline {req.deadline_ms:.0f}ms exceeded "
-                                f"mid-decode (kept "
-                                f"{len(self.outputs[req.rid])} tokens)")
+        self._expire_active(now)             # per-step deadline enforcement
         self._tr.finish(dsid)
 
     # ----------------------------------------------------------------- loop
@@ -1219,6 +1627,7 @@ class ServeEngine:
         self._expire_queued()
         t1 = time.perf_counter()
         self._land_prefill(block=False)
+        self._cache_admit()           # cached lane first: hits skip prefill
         while self._try_refill():     # bounded by max_inflight_prefills
             pass                      # (and by the queue/slots draining)
         if self._prefill_pool and not self._active_slots() \
@@ -1280,13 +1689,16 @@ class ServeEngine:
                 "max_new": int(req.max_new), "eos": int(req.eos),
                 "temperature": float(req.temperature),
                 "top_k": int(req.top_k), "top_p": float(req.top_p),
-                "deadline_left_ms": left}
+                "deadline_left_ms": left,
+                "prefix_len": None if req.prefix_len is None
+                else int(req.prefix_len)}
 
     @staticmethod
     def _meta_req(m: Dict, now: float) -> Request:
         return Request(m["rid"], np.asarray(m["tokens"], np.int32),
                        m["max_new"], m["eos"], m["temperature"],
-                       m["top_k"], m["top_p"], now, m["deadline_left_ms"])
+                       m["top_k"], m["top_p"], now, m["deadline_left_ms"],
+                       m.get("prefix_len"))
 
     def snapshot(self, manager, step: int = 0,
                  blocking: bool = False) -> int:
@@ -1311,7 +1723,8 @@ class ServeEngine:
             "chunks": [None if r is None else
                        dict(self._req_meta(r, now),
                             off=int(self.chunk_off[i]),
-                            slot=int(self.chunk_slot[i]))
+                            slot=int(self.chunk_slot[i]),
+                            capture=int(self.chunk_capture[i]))
                        for i, r in enumerate(self.chunk_req)],
             "queue": [self._req_meta(r, now) for r in self.queue],
             "outputs": {str(rid): [int(t) for t in toks]
@@ -1374,6 +1787,7 @@ class ServeEngine:
             self.chunk_req[i] = self._meta_req(m, now)
             self.chunk_off[i] = int(m["off"])
             self.chunk_slot[i] = int(m["slot"])
+            self.chunk_capture[i] = int(m.get("capture", -1))
             self.slot_pending[int(m["slot"])] = True
         self.queue = collections.deque(
             self._meta_req(m, now) for m in meta["queue"])
@@ -1491,6 +1905,18 @@ def main():
                     help="hard bound on accepted prompt length "
                          "(default: unbounded — chunked prefill handles "
                          "any length that fits a slot)")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="enable the prefix StateCache with this byte "
+                         "budget (MB); repeated prefixes restore an O(1) "
+                         "state instead of re-prefilling")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same N-token system "
+                         "prefix, declared via submit(prefix_len=N) — the "
+                         "prefix-cache demo workload")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: draft k tokens per round via "
+                         "n-gram prompt copy, verify in one forward "
+                         "(greedy slots only; 0 = off)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request submit→completion deadline; overdue "
                          "requests are expired, not served late")
@@ -1534,19 +1960,28 @@ def main():
                          chunk_size=args.chunk_size,
                          chunk_rows=args.chunk_rows,
                          max_prompt_len=args.max_prompt_len,
-                         obs=obs)
+                         obs=obs,
+                         cache_bytes=None if args.cache_mb is None
+                         else int(args.cache_mb * 2**20),
+                         spec_k=args.spec_k)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(5, 40, size=args.requests)
+    shared = rng.integers(1, cfg.vocab, size=args.shared_prefix) \
+        if args.shared_prefix else None
     t0 = time.perf_counter()
     shed = 0
     with profiler_session(args.profile_dir) as profiling:
         for n in lens:
+            toks = rng.integers(1, cfg.vocab, size=int(n))
+            if shared is not None:
+                toks = np.concatenate([shared, toks])
             try:
-                engine.submit(rng.integers(1, cfg.vocab, size=int(n)),
-                              args.new_tokens, temperature=args.temperature,
+                engine.submit(toks, args.new_tokens,
+                              temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
-                              deadline_ms=args.deadline_ms)
+                              deadline_ms=args.deadline_ms,
+                              prefix_len=args.shared_prefix or None)
             except ShedError:
                 shed += 1
         outs = engine.run()
@@ -1567,6 +2002,12 @@ def main():
     if st.chunk_rounds:
         print(f"chunked prefill: {st.chunked_prefills} request(s) over "
               f"{st.chunk_rounds} rounds ({st.chunk_tokens} tokens)")
+    if engine.state_cache is not None:
+        print(f"prefix cache: {engine.state_cache!r}")
+    if args.spec_k:
+        print(f"speculative decode: accept rate "
+              f"{engine.spec_accept_rate:.2f} over "
+              f"{engine._spec_rounds.value} verify rounds")
     print(f"time split: prefill {st.prefill_ms:.0f}ms, chunk "
           f"{st.chunk_ms:.0f}ms, decode {st.decode_ms:.0f}ms, host "
           f"{st.host_ms:.0f}ms")

@@ -1,0 +1,265 @@
+"""Prefix/state cache: the serving-side payoff of the O(1) SSM state.
+
+An attention server's prompt cache is a paged KV region that grows with the
+prefix length; an SSM's entire context after ``P`` tokens is a fixed-size
+(conv-tail, recurrent/KV-ring) state — a few KB per layer regardless of
+``P``. That collapse makes prefix caching almost free: after a prefill
+consumes a prompt prefix, ONE decode-cache row (every layer's state, in the
+``model.init_cache`` leaf layout that ``snapshot()`` already persists) plus
+the end-of-prefix logits is the whole artifact. A later request whose
+prompt starts with the same tokens restores that row and prefills only its
+suffix — a shared system prompt costs one stored state instead of
+recompute, for every request that carries it.
+
+``StateCache`` is a host-side LRU keyed by a content hash of the prefix
+tokens, bounded by ``max_bytes``. It is deliberately engine-agnostic: the
+ServeEngine passes single-row cache trees in and out (see ``cache_row`` /
+``load_cache_row`` below and the cached-lane plumbing in launch/serve.py),
+and because the object lives on the host it survives engine crash-recovery
+— a fresh engine ``restore()``d from a snapshot keeps hitting the same
+cache.
+
+Metrics (``cache.*`` in the obs registry — catalogue in obs/README.md):
+hits / misses / inserts / evictions counters, bytes / entries gauges.
+
+Leaf layout of one stored row (mirrors init_cache with B == 1):
+  * unit-stacked leaves:  ``(n_units, 1, …)``  (under the "units" key)
+  * tail leaves:          ``(1, …)``
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.obs import MetricsRegistry
+
+
+def _stacked(path) -> bool:
+    return any(getattr(p, "key", None) == "units" for p in path)
+
+
+# ---------------------------------------------------------------------------
+# single-row views of the engine's state trees
+# ---------------------------------------------------------------------------
+
+def state_row(states, r: int, s: int):
+    """One packed segment's harvested state as a single-row cache tree.
+
+    ``states`` is the pytree from ``model.prefill_packed`` — leaves carry
+    (B, S, …) leading dims, (n_units, B, S, …) for unit-stacked layers.
+    Returns the (r, s) segment's state with the row layout documented in
+    the module docstring."""
+    def one(path, leaf):
+        if _stacked(path):                      # (n_units, B, S, …)
+            return leaf[:, r, s][:, None]       # → (n_units, 1, …)
+        return leaf[r, s][None]                 # (B, S, …) → (1, …)
+
+    return jax.tree_util.tree_map_with_path(one, states)
+
+
+def cache_row(cache, r: int):
+    """One row of a decode-layout cache (``model.init_cache`` leaves) as a
+    single-row cache tree — what the chunk lane's carried state looks like
+    at a prefix boundary."""
+    def one(path, leaf):
+        if _stacked(path):                      # (n_units, B, …)
+            return leaf[:, r:r + 1]
+        return leaf[r:r + 1]                    # (B, …)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def load_cache_row(cache, row, idx):
+    """Write a stored single-row tree into row ``idx`` of a decode-layout
+    cache. jit-friendly (``idx`` may be a traced scalar): the engine jits
+    this once and reuses it for both the decode-slot cache and the chunk
+    side cache."""
+    def one(path, c, s):
+        if _stacked(path):
+            return c.at[:, idx].set(s[:, 0].astype(c.dtype))
+        return c.at[idx].set(s[0].astype(c.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, cache, row)
+
+
+def row_finite(row, logits) -> bool:
+    """Host-side finiteness probe over a single-row tree + its logits —
+    the insert-side guard: a poisoned state must never be cached."""
+    if not np.all(np.isfinite(np.asarray(logits))):
+        return False
+    for leaf in jax.tree_util.tree_leaves(jax.device_get(row)):
+        if np.issubdtype(leaf.dtype, np.floating) and \
+                not np.all(np.isfinite(leaf)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# the cache
+# ---------------------------------------------------------------------------
+
+class CacheEntry:
+    """One stored prefix: its length, the single-row state tree (host
+    numpy), the end-of-prefix logits (V,) f32, and its byte cost."""
+
+    __slots__ = ("key", "prefix_len", "state", "logits", "nbytes")
+
+    def __init__(self, key, prefix_len, state, logits, nbytes):
+        self.key = key
+        self.prefix_len = prefix_len
+        self.state = state
+        self.logits = logits
+        self.nbytes = nbytes
+
+
+class StateCache:
+    """LRU prefix→state cache with a byte budget.
+
+    ``lookup(tokens)`` returns the entry for the LONGEST stored prefix of
+    ``tokens`` (checking distinct stored lengths longest-first), bumping it
+    to most-recently-used; ``insert`` evicts from the LRU end until the new
+    entry fits. ``generation`` increments on any content change so callers
+    can memoize misses ("this prompt missed at generation G" stays valid
+    until G changes).
+
+    Pass ``registry`` (e.g. the engine's ``obs.metrics``) to surface the
+    ``cache.*`` metrics next to the ``serve.*`` ones."""
+
+    def __init__(self, max_bytes: int = 64 << 20,
+                 registry: Optional[MetricsRegistry] = None):
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        self.max_bytes = int(max_bytes)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._hits = self.registry.counter(
+            "cache.hits", help="prefix lookups that found a stored state")
+        self._misses = self.registry.counter(
+            "cache.misses", help="prefix lookups with no stored prefix")
+        self._inserts = self.registry.counter(
+            "cache.inserts", help="prefix states stored")
+        self._evictions = self.registry.counter(
+            "cache.evictions", help="entries evicted (LRU byte budget)")
+        self._bytes_g = self.registry.gauge(
+            "cache.bytes", help="resident bytes of stored states")
+        self._entries_g = self.registry.gauge(
+            "cache.entries", help="resident entries")
+        self._entries: "collections.OrderedDict[str, CacheEntry]" = \
+            collections.OrderedDict()
+        self._lens: collections.Counter = collections.Counter()
+        self._bytes = 0
+        self.generation = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def lookups(self) -> int:
+        return self._hits.value + self._misses.value
+
+    @property
+    def inserts(self) -> int:
+        return self._inserts.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _key(tokens, n: int) -> str:
+        t = np.ascontiguousarray(np.asarray(tokens[:n], np.int32))
+        return hashlib.blake2b(t.tobytes(), digest_size=16).hexdigest()
+
+    def lookup(self, tokens) -> Optional[CacheEntry]:
+        """Longest stored prefix of ``tokens``, or None. One hash per
+        DISTINCT stored prefix length ≤ len(tokens) — not per entry."""
+        n = len(tokens)
+        for P in sorted(self._lens, reverse=True):
+            if P > n:
+                continue
+            e = self._entries.get(self._key(tokens, P))
+            if e is not None:
+                self._entries.move_to_end(e.key)
+                self._hits.inc()
+                return e
+        self._misses.inc()
+        return None
+
+    # ------------------------------------------------------------ mutation
+    def insert(self, tokens, prefix_len: int, state,
+               logits) -> Optional[CacheEntry]:
+        """Store ``tokens[:prefix_len]`` → (single-row state tree, (V,)
+        logits). Device leaves are pulled to host numpy; an entry larger
+        than the whole budget is refused (returns None); otherwise LRU
+        entries are evicted until it fits. Re-inserting a stored prefix
+        just refreshes its recency."""
+        key = self._key(tokens, prefix_len)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        state = jax.device_get(state)
+        logits = np.asarray(logits, np.float32).reshape(-1)
+        nbytes = logits.nbytes + sum(
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(state))
+        if nbytes > self.max_bytes:
+            return None
+        while self._bytes + nbytes > self.max_bytes and self._entries:
+            self._evict_lru()
+        e = CacheEntry(key, int(prefix_len), state, logits, nbytes)
+        self._entries[key] = e
+        self._lens[e.prefix_len] += 1
+        self._bytes += nbytes
+        self._inserts.inc()
+        self.generation += 1
+        self._sync_gauges()
+        return e
+
+    def _evict_lru(self):
+        _, e = self._entries.popitem(last=False)
+        self._lens[e.prefix_len] -= 1
+        if not self._lens[e.prefix_len]:
+            del self._lens[e.prefix_len]
+        self._bytes -= e.nbytes
+        self._evictions.inc()
+        self.generation += 1
+
+    def clear(self):
+        """Drop every entry (counted as evictions) — the forced-evict
+        fault seam and a manual invalidation hook."""
+        while self._entries:
+            self._evict_lru()
+        self._sync_gauges()
+
+    def _sync_gauges(self):
+        self._bytes_g.set(self._bytes)
+        self._entries_g.set(len(self._entries))
+
+    @staticmethod
+    def device_state(entry: CacheEntry):
+        """The entry's row tree as device arrays (what ``load_cache_row``
+        consumes)."""
+        return jax.tree.map(jnp.asarray, entry.state)
+
+    def __repr__(self):
+        return (f"StateCache(entries={len(self._entries)}, "
+                f"bytes={self._bytes}/{self.max_bytes}, "
+                f"hits={self.hits}, misses={self.misses}, "
+                f"evictions={self.evictions})")

@@ -599,6 +599,58 @@ class LM:
                                          top_p)
         return tok, logits, cache, keys, finite
 
+    # ------------------------------------------------- speculative decode
+    def decode_verify(self, params, cache, tokens_t, cache_len, draft):
+        """Score K draft tokens with K+1 chained greedy decode steps in ONE
+        call, keeping the per-step cache trajectory for rollback.
+
+        ``tokens_t`` (B, 1) is each slot's last committed token; ``draft``
+        (B, K) the proposed continuations. Step j feeds input j of
+        [tokens_t, draft] at position ``cache_len + j`` and takes the
+        argmax — exactly what sequential ``decode_step`` + argmax would
+        compute, so a draft token is *accepted* iff it matches the argmax
+        and the committed stream is bit-identical to non-speculative
+        greedy decode by construction.
+
+        Returns (toks (B, K+1) int32 — the argmax after each step,
+        finite (B, K+1) bool — per-step logits finiteness for the guard
+        rail, traj — cache pytree with a leading (K+1,) axis; entry j is
+        the cache after consuming j+1 inputs). ``spec_rollback`` selects
+        each row's post-accept cache from ``traj``."""
+        inputs = jnp.moveaxis(
+            jnp.concatenate([tokens_t, draft.astype(jnp.int32)], axis=1),
+            1, 0)                                       # (K+1, B)
+
+        def body(carry, inp):
+            c, off = carry
+            logits, c = self.decode_step(params, c, inp[:, None],
+                                         cache_len + off)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            fin = jnp.all(jnp.isfinite(logits), axis=-1)
+            return (c, off + 1), (tok, fin, c)
+
+        (_, _), (toks, fins, traj) = jax.lax.scan(
+            body, (cache, jnp.zeros((), jnp.int32)), inputs)
+        return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(fins, 0, 1), traj
+
+    def spec_rollback(self, traj, idx):
+        """Per-row rollback select over a verify trajectory: row ``b`` of
+        the returned decode cache is row ``b`` of ``traj`` entry
+        ``idx[b]`` (idx (B,) int32 in [0, K]) — the O(1) state is what
+        makes rejecting draft tokens a cheap gather instead of a replay.
+        Rows whose idx points at entry 0 simply keep the state after their
+        first (always-valid) verify step."""
+        def one(path, leaf):
+            stacked = any(getattr(p, "key", None) == "units" for p in path)
+            if stacked:                     # (K+1, n_units, B, …)
+                bsz = leaf.shape[2]
+                out = leaf[idx, :, jnp.arange(bsz)]     # (B, n_units, …)
+                return jnp.moveaxis(out, 0, 1)
+            bsz = leaf.shape[1]             # (K+1, B, …)
+            return leaf[idx, jnp.arange(bsz)]
+
+        return jax.tree_util.tree_map_with_path(one, traj)
+
     def prefill_probe(self, states, logits):
         """Per-segment finiteness of a packed prefill's harvest: True at
         (b, s) iff every state leaf AND the segment-end logits of that

@@ -488,3 +488,53 @@ def test_chaos_seeded_no_hangs_no_garbage(tiny_engine_model, rng):
                 assert eng.outputs[r] == ref[r]
         if plan.empty():
             assert eng.outputs == ref
+
+
+def test_chaos_cached_lane_terminates_accounted(tiny_engine_model, rng):
+    """Chaos over the CACHED lane: a shared declared prefix routes every
+    request through the StateCache (capture, partial-hit restore,
+    full-hit restore), and the plan's envelope includes the cache seams —
+    drop_cache (forced evict → cold fallback) and poison_cache_hit
+    (corrupted stored state → the guard rails must quarantine). Same
+    invariants as the plain chaos lane: bounded steps, terminal statuses,
+    every failure accounted for, empty plan → exact reference outputs."""
+    from repro.launch.state_cache import StateCache
+
+    cfg, model, params = tiny_engine_model
+    base_seed = int(os.environ.get("FAULT_CHAOS_SEED", "0"))
+    shared = rng.integers(1, cfg.vocab, size=14).tolist()
+    tails = _prompts(cfg, rng, lens=(4, 7, 5, 6, 4))
+    prompts = [shared + t for t in tails]
+    budgets = [4, 8, 5, 6, 4]
+    _, ref = _run(model, params, prompts, max_new=budgets)
+    for seed in range(base_seed, base_seed + 4):
+        plan = FaultPlan.random(seed, max_prefills=3, max_steps=20,
+                                num_slots=KW["num_slots"],
+                                prefill_rows=KW["prefill_rows"],
+                                max_segments=KW["max_segments"],
+                                chunk_rows=1, cache_lookups=6)
+        sc = StateCache(32 << 20)
+        eng = ServeEngine(model, params, faults=plan, state_cache=sc,
+                          **KW)
+        for p, m in zip(prompts, budgets):
+            eng.submit(p, m, prefix_len=14)
+        steps = 0
+        while eng.step():
+            steps += 1
+            assert steps < 500, f"seed {seed}: engine failed to drain"
+        statuses = {r: eng.status[r] for r in eng.outputs}
+        assert all(s in ("done", "failed") for s in statuses.values()), \
+            f"seed {seed}: non-terminal status in {statuses}"
+        n_failed = sum(s == "failed" for s in statuses.values())
+        assert n_failed == eng.stats.quarantined + sum(
+            "prefill dispatch" in eng.errors.get(r, "") or
+            "chunked-prefill round" in eng.errors.get(r, "")
+            for r, s in statuses.items() if s == "failed"), \
+            f"seed {seed}: unaccounted failure"
+        for r, s in statuses.items():
+            if s == "failed":
+                assert eng.errors[r]
+            elif plan.empty():
+                assert eng.outputs[r] == ref[r]
+        if plan.empty():
+            assert eng.outputs == ref

@@ -1,0 +1,334 @@
+"""Prefix/state cache + speculative decode (the O(1)-state exploits).
+
+The StateCache unit tests need no model: longest-prefix lookup over
+distinct stored lengths, LRU eviction at the byte budget, generation-based
+miss memoization, oversized-entry refusal.
+
+The engine tests pin the PR's acceptance bar: a warm cache-hit stream
+(declared shared prefix restored, only the suffix prefilled — or a
+whole-prompt hit with NO forward at all) is bit-identical to a cold run;
+speculative decode (n-gram draft + one verify forward + trajectory
+rollback) is bit-identical to one-token-at-a-time greedy; both hold for
+EVERY cached block kind (attn full + windowed, mamba, mamba2, rec,
+mlstm/slstm). The fault seams ride along: a poisoned cached state must be
+quarantined by the guard rails, never streamed from; a forced cache drop
+must fall back to a cold prefill with identical output.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import get_config
+from repro.faults import FaultPlan
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.launch.serve import ServeEngine
+from repro.launch.state_cache import StateCache, state_row, cache_row
+from repro.models.lm import build_model
+from tests.test_serve import _reference_decode, tiny_engine_model  # noqa: F401
+
+
+# --------------------------------------------------------------- unit level
+
+def _fake_state(fill=0.0, units=2, width=8):
+    return {"units": np.full((units, 1, width), fill, np.float32),
+            "tail": np.full((1, 4), fill, np.float32)}
+
+
+def _fake_logits(v=16):
+    return np.zeros(v, np.float32)
+
+
+def test_lookup_longest_prefix_wins():
+    sc = StateCache(1 << 20)
+    toks = np.arange(1, 40, dtype=np.int32)
+    sc.insert(toks, 8, _fake_state(1.0), _fake_logits())
+    sc.insert(toks, 24, _fake_state(2.0), _fake_logits())
+    e = sc.lookup(toks)
+    assert e.prefix_len == 24 and e.state["tail"][0, 0] == 2.0
+    # a shorter query can only match the shorter stored prefix
+    e = sc.lookup(toks[:10])
+    assert e.prefix_len == 8
+    # a diverging prompt misses entirely
+    other = toks.copy()
+    other[3] = 999
+    assert sc.lookup(other) is None
+    assert sc.hits == 2 and sc.misses == 1 and sc.lookups == 3
+
+
+def test_lru_eviction_at_byte_budget():
+    one = _fake_state()
+    nbytes = sum(a.nbytes for a in one.values()) + _fake_logits().nbytes
+    sc = StateCache(3 * nbytes)
+    prompts = [np.arange(i, i + 10, dtype=np.int32) * 7 for i in range(4)]
+    for p in prompts[:3]:
+        assert sc.insert(p, 10, _fake_state(), _fake_logits()) is not None
+    assert len(sc) == 3 and sc.nbytes == 3 * nbytes
+    sc.lookup(prompts[0])            # refresh 0 → 1 is now LRU
+    sc.insert(prompts[3], 10, _fake_state(), _fake_logits())
+    assert len(sc) == 3 and sc.evictions == 1
+    assert sc.lookup(prompts[1]) is None      # the LRU entry was evicted
+    assert sc.lookup(prompts[0]) is not None  # the refreshed one survived
+    # an entry bigger than the whole budget is refused, not thrashed
+    tiny = StateCache(nbytes - 1)
+    assert tiny.insert(prompts[0], 10, _fake_state(),
+                       _fake_logits()) is None
+    assert len(tiny) == 0 and tiny.evictions == 0
+
+
+def test_generation_tracks_content_changes():
+    sc = StateCache(1 << 20)
+    g0 = sc.generation
+    p = np.arange(1, 20, dtype=np.int32)
+    sc.insert(p, 19, _fake_state(), _fake_logits())
+    assert sc.generation != g0          # insert invalidates memoized misses
+    g1 = sc.generation
+    sc.lookup(p)                        # a pure lookup does not
+    assert sc.generation == g1
+    sc.clear()
+    assert sc.generation != g1 and len(sc) == 0
+    assert sc.evictions == 1            # clear() counts as eviction
+
+
+def test_row_views_round_trip():
+    """state_row / cache_row produce the documented single-row layout."""
+    states = {"units": np.arange(2 * 3 * 2 * 4, dtype=np.float32)
+              .reshape(2, 3, 2, 4), "tail": np.arange(3 * 2 * 5,
+              dtype=np.float32).reshape(3, 2, 5)}     # (B=3, S=2, …)
+    row = state_row(states, 1, 0)
+    assert row["units"].shape == (2, 1, 4)
+    assert row["tail"].shape == (1, 5)
+    np.testing.assert_array_equal(np.asarray(row["tail"][0]),
+                                  states["tail"][1, 0])
+    cache = {"units": np.arange(2 * 3 * 4, dtype=np.float32)
+             .reshape(2, 3, 4), "tail": np.arange(3 * 5, dtype=np.float32)
+             .reshape(3, 5)}                          # (B=3, …)
+    cr = cache_row(cache, 2)
+    assert cr["units"].shape == (2, 1, 4)
+    assert cr["tail"].shape == (1, 5)
+    np.testing.assert_array_equal(np.asarray(cr["tail"][0]),
+                                  cache["tail"][2])
+
+
+# ------------------------------------------------------------- engine level
+
+KW = dict(num_slots=4, max_len=96, prefill_rows=2, buckets=(16, 32),
+          max_segments=2)
+
+
+def _shared_prompts(rng, vocab, n=5, prefix=20, tail=5):
+    shared = rng.integers(1, vocab, size=prefix)
+    return [np.concatenate([shared,
+                            rng.integers(1, vocab, size=tail)]).astype(
+                np.int32) for _ in range(n)]
+
+
+def test_warm_hit_bit_identical_and_cheaper(tiny_engine_model, rng):
+    """Declared-prefix workload: the first request captures the prefix
+    state, everyone behind restores it and prefills only the suffix; a
+    full rerun is all whole-prompt hits with ZERO forwards. Streams match
+    the cache-off engine bit for bit."""
+    cfg, model, params = tiny_engine_model
+    prompts = _shared_prompts(rng, cfg.vocab)
+    cold = ServeEngine(model, params, **KW)
+    for p in prompts:
+        cold.submit(p, 6)
+    ref = cold.run()
+
+    sc = StateCache(32 << 20)
+    warm = ServeEngine(model, params, state_cache=sc, **KW)
+    for p in prompts:
+        warm.submit(p, 6, prefix_len=20)
+    assert warm.run() == ref
+    assert sc.hits >= len(prompts) - 1       # everyone behind the first
+    # suffix rounds consume ≤ tail tokens each once the prefix is cached
+    assert warm.stats.chunk_tokens < sum(len(p) for p in prompts)
+
+    rerun = ServeEngine(model, params, state_cache=sc, **KW)
+    for p in prompts:
+        rerun.submit(p, 6, prefix_len=20)
+    assert rerun.run() == ref
+    assert rerun.stats.prefills == 0 and rerun.stats.chunk_rounds == 0
+
+
+def test_undeclared_full_prompt_hits(tiny_engine_model, rng):
+    """No prefix_len declared: a landed prompt is itself a cached prefix,
+    so resubmitting the same prompts is served entirely from the cache."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=9).astype(np.int32)
+               for _ in range(4)]
+    sc = StateCache(32 << 20)
+    e1 = ServeEngine(model, params, state_cache=sc, **KW)
+    for p in prompts:
+        e1.submit(p, 6)
+    ref = e1.run()
+    assert sc.inserts == len(prompts)
+    e2 = ServeEngine(model, params, state_cache=sc, **KW)
+    for p in prompts:
+        e2.submit(p, 6)
+    assert e2.run() == ref
+    assert e2.stats.prefills == 0 and e2.stats.chunk_rounds == 0
+
+
+def test_hit_after_restore(tiny_engine_model, rng, tmp_path):
+    """The StateCache lives on the host, OUTSIDE the engine's device
+    state: after a snapshot → fresh-engine restore() the same cache keeps
+    hitting — crash recovery does not cold-start the prefix cache."""
+    cfg, model, params = tiny_engine_model
+    prompts = _shared_prompts(rng, cfg.vocab, n=3)
+    cold = ServeEngine(model, params, **KW)
+    for p in prompts:
+        cold.submit(p, 5)
+    ref = cold.run()
+
+    sc = StateCache(32 << 20)
+    e1 = ServeEngine(model, params, state_cache=sc, **KW)
+    for p in prompts:
+        e1.submit(p, 5, prefix_len=20)
+    assert e1.run() == ref
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), async_save=False)
+    e1.snapshot(mgr, blocking=True)
+
+    e2 = ServeEngine(model, params, state_cache=sc, **KW)
+    e2.restore(mgr)
+    hits0 = sc.hits
+    for i, p in enumerate(prompts):
+        e2.submit(p, 5, prefix_len=20, rid=100 + i)
+    outs = e2.run()
+    assert [outs[100 + i] for i in range(3)] == [ref[i] for i in range(3)]
+    assert sc.hits > hits0
+    assert e2.stats.prefills == 0 and e2.stats.chunk_rounds == 0
+
+
+def test_poisoned_cached_state_quarantined(tiny_engine_model, rng):
+    """A corrupted stored state must be quarantined by the guard rails —
+    failed with a diagnostic, never streamed from — while every healthy
+    request's stream stays bit-identical to the cold run."""
+    cfg, model, params = tiny_engine_model
+    prompts = _shared_prompts(rng, cfg.vocab, n=4)
+    cold = ServeEngine(model, params, **KW)
+    for p in prompts:
+        cold.submit(p, 5)
+    ref = cold.run()
+
+    sc = StateCache(32 << 20)
+    plan = FaultPlan(poison_cache_hit=[0])
+    eng = ServeEngine(model, params, state_cache=sc, faults=plan, **KW)
+    assert eng.guard                   # poison auto-enables the guard
+    for p in prompts:
+        eng.submit(p, 5, prefix_len=20)
+    outs = eng.run()
+    assert eng.stats.quarantined == 1
+    failed = [r for r in outs if eng.status[r] == "failed"]
+    assert len(failed) == 1
+    assert "quarantined" in eng.errors[failed[0]]
+    for r in outs:
+        if eng.status[r] == "done":
+            assert outs[r] == ref[r]
+
+
+def test_drop_cache_falls_back_cold(tiny_engine_model, rng):
+    """The forced-evict seam: clearing the cache under a would-be hit
+    turns it into a cold chunked prefill with an identical stream."""
+    cfg, model, params = tiny_engine_model
+    prompts = _shared_prompts(rng, cfg.vocab, n=4)
+    cold = ServeEngine(model, params, **KW)
+    for p in prompts:
+        cold.submit(p, 5)
+    ref = cold.run()
+
+    sc = StateCache(32 << 20)
+    eng = ServeEngine(model, params, state_cache=sc,
+                      faults=FaultPlan(drop_cache=1), **KW)
+    for p in prompts:
+        eng.submit(p, 5, prefix_len=20)
+    assert eng.run() == ref
+    assert sc.evictions >= 1
+
+
+def test_spec_decode_bit_identical_with_metrics(tiny_engine_model, rng):
+    """Speculative decode emits exactly the greedy stream (the verify IS
+    the greedy step, scanned), and the spec.* metrics are observable."""
+    cfg, model, params = tiny_engine_model
+    prompts = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(3)]
+    plain = ServeEngine(model, params, **KW)
+    for p in prompts:
+        plain.submit(p, 24)
+    ref = plain.run()
+
+    spec = ServeEngine(model, params, spec_k=4, **KW)
+    for p in prompts:
+        spec.submit(p, 24)
+    assert spec.run() == ref
+    assert spec._spec_rounds.value > 0
+    assert spec._spec_proposed.value > 0
+    assert 0.0 <= spec.spec_accept_rate <= 1.0
+    reg = spec.obs.metrics
+    assert reg.counter("spec.rounds").value == spec._spec_rounds.value
+    # a verify round advances every active slot ≥ 1 token, so total steps
+    # can never exceed the plain engine's (and fewer means accepts landed)
+    assert spec.stats.decode_steps <= plain.stats.decode_steps
+
+
+def test_spec_respects_eos_and_budget(tiny_engine_model, rng):
+    """A draft token beyond EOS or the slot budget must not be committed
+    even when the verify accepted it."""
+    cfg, model, params = tiny_engine_model
+    prompt = rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+    ref = _reference_decode(model, params, prompt, 16, KW["max_len"])
+    eos = ref[4]                       # force an early EOS mid-stream
+    want = ref[:ref.index(eos) + 1]
+    for k in (2, 5):
+        eng = ServeEngine(model, params, spec_k=k, **KW)
+        rid = eng.submit(prompt, 16, eos=int(eos))
+        assert eng.run()[rid] == want, f"spec_k={k}"
+
+
+CACHE_CASES = [("stablelm-1.6b", None, 8),
+               ("stablelm-1.6b", {"attn_window": 5}, 4),
+               ("mamba-110m", None, 8), ("mamba2-370m", None, 8),
+               ("recurrentgemma-2b", None, 8), ("xlstm-125m", None, 8)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,mod,chunk", CACHE_CASES)
+def test_cache_hit_bit_identical_per_block_kind(arch, mod, chunk, rng):
+    """TENTPOLE acceptance: for EVERY cached block kind, a warm cache-hit
+    stream (prefix restored + suffix prefilled, then whole-prompt hits)
+    and a speculative stream are bit-identical to the cold greedy
+    reference."""
+    cfg = get_config(arch).reduced()
+    if mod:
+        cfg = dataclasses.replace(cfg, **mod)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shared = rng.integers(1, cfg.vocab, size=11).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(1, cfg.vocab, size=4)])
+               .astype(np.int32) for _ in range(2)]
+    refs = [_reference_decode(model, params, p, 4, 64) for p in prompts]
+
+    sc = StateCache(64 << 20)
+    warm = ServeEngine(model, params, num_slots=2, max_len=64,
+                       prefill_rows=1, buckets=(8,), max_segments=1,
+                       chunk_size=chunk, state_cache=sc)
+    rids = [warm.submit(p, 4, prefix_len=11) for p in prompts]
+    outs = warm.run()
+    assert [outs[r] for r in rids] == refs, arch
+    assert sc.hits >= 1                        # the second request hit
+
+    rerun = ServeEngine(model, params, num_slots=2, max_len=64,
+                        prefill_rows=1, buckets=(8,), max_segments=1,
+                        chunk_size=chunk, state_cache=sc)
+    rids = [rerun.submit(p, 4, prefix_len=11) for p in prompts]
+    outs = rerun.run()
+    assert [outs[r] for r in rids] == refs, arch
+    assert rerun.stats.prefills == 0 and rerun.stats.chunk_rounds == 0
+
+    spec = ServeEngine(model, params, num_slots=2, max_len=64,
+                       prefill_rows=1, buckets=(8,), max_segments=1,
+                       chunk_size=chunk, spec_k=3)
+    rids = [spec.submit(p, 4) for p in prompts]
+    outs = spec.run()
+    assert [outs[r] for r in rids] == refs, arch
